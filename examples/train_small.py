@@ -1,0 +1,61 @@
+"""End-to-end training driver: a ~100M-param qwen3-family model trained for
+a few hundred steps on the synthetic copy-structure corpus, with the full
+fault-tolerance stack (async checkpoints, resume, straggler watchdog).
+
+    PYTHONPATH=src python examples/train_small.py          # ~100M, 200 steps
+    PYTHONPATH=src python examples/train_small.py --tiny   # smoke scale
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.steps import make_train_step
+from repro.models import transformer as T
+from repro.models.params import count_params, init_params
+from repro.training.data import DataConfig
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_loop import LoopConfig, train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_small")
+    args = ap.parse_args()
+
+    if args.tiny:
+        cfg = get_config("qwen3-0.6b-smoke", param_dtype=jnp.float32)
+        steps, batch, seq = args.steps or 60, 8, 64
+    else:
+        # ~100M-param member of the qwen3 family (same code path as 0.6B)
+        cfg = get_config("qwen3-0.6b", param_dtype=jnp.float32,
+                         num_layers=8, d_model=512, num_heads=8,
+                         num_kv_heads=4, head_dim=64, d_ff=1536,
+                         vocab_size=32000)
+        steps, batch, seq = args.steps or 200, 16, 256
+
+    n = count_params(T.model_def(cfg))
+    print(f"training {cfg.name}: {n/1e6:.1f}M params, {steps} steps, "
+          f"batch {batch} x seq {seq}")
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    opt_cfg = AdamWConfig(lr=6e-4, total_steps=steps,
+                          warmup_steps=max(5, steps // 20))
+    step = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    data = DataConfig(vocab_size=cfg.vocab_size, global_batch=batch,
+                      seq_len=seq, copy_prob=0.5)
+    loop = LoopConfig(total_steps=steps, ckpt_every=max(50, steps // 4),
+                      ckpt_dir=args.ckpt_dir, log_every=10)
+    _, _, st = train_loop(step, params, init_opt_state(params), data, loop)
+    print(f"done at step {st.step} (stragglers flagged: "
+          f"{st.straggler_events}, nan events: {st.nan_count})")
+
+
+if __name__ == "__main__":
+    main()

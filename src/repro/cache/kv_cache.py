@@ -1,0 +1,80 @@
+"""Paged GQA KV cache (vLLM/SGLang-style) — substrate for the generalized
+ESS pool on non-MLA architectures and for the serving engine's slot
+management.
+
+The *logical* cache of a sequence is a list of fixed-size pages scattered in
+a global page pool; a per-sequence page table maps logical block -> physical
+page.  The transformer's contiguous-cache decode path stays the default (it
+shards and lowers cleanly at scale); the paged variant backs continuous
+batching where sequences enter/leave slots dynamically.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PagedKV(NamedTuple):
+    pages_k: jax.Array      # [NPAGES, PAGE, KV, HD]
+    pages_v: jax.Array      # [NPAGES, PAGE, KV, HD]
+    page_table: jax.Array   # [B, MAX_BLOCKS] physical page id (-1 empty)
+    lens: jax.Array         # [B]
+    free_head: jax.Array    # [] next free page (bump allocator)
+
+
+def init_paged(npages: int, page: int, kv_heads: int, head_dim: int,
+               batch: int, max_blocks: int, dtype=jnp.bfloat16) -> PagedKV:
+    return PagedKV(
+        jnp.zeros((npages, page, kv_heads, head_dim), dtype),
+        jnp.zeros((npages, page, kv_heads, head_dim), dtype),
+        jnp.full((batch, max_blocks), -1, jnp.int32),
+        jnp.zeros((batch,), jnp.int32),
+        jnp.zeros((), jnp.int32),
+    )
+
+
+def append_token(kv: PagedKV, k_new: jax.Array, v_new: jax.Array) -> PagedKV:
+    """Append one token per sequence ([B, KV, HD]); allocates pages lazily
+    with a bump allocator (freeing is done by the host-side scheduler which
+    rebuilds page tables on eviction)."""
+    B = k_new.shape[0]
+    page = kv.pages_k.shape[1]
+    blk = kv.lens // page
+    off = kv.lens % page
+    need = (off == 0).astype(jnp.int32)                     # new page needed
+    alloc_rank = jnp.cumsum(need) - need                    # per-seq offset
+    new_page_id = kv.free_head + alloc_rank
+    bi = jnp.arange(B)
+    table = kv.page_table.at[bi, blk].set(
+        jnp.where(need == 1, new_page_id, kv.page_table[bi, blk]))
+    phys = table[bi, blk]
+    pages_k = kv.pages_k.at[phys, off].set(k_new.astype(kv.pages_k.dtype))
+    pages_v = kv.pages_v.at[phys, off].set(v_new.astype(kv.pages_v.dtype))
+    return PagedKV(pages_k, pages_v, table, kv.lens + 1,
+                   kv.free_head + need.sum())
+
+
+def gather_kv(kv: PagedKV, max_seq: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Materialize per-sequence contiguous K/V [B, max_seq, KV, HD] + valid
+    mask (decode attention input). max_seq must be a multiple of page."""
+    B, MB = kv.page_table.shape
+    page = kv.pages_k.shape[1]
+    nb = max_seq // page
+    pt = jnp.where(kv.page_table[:, :nb] >= 0, kv.page_table[:, :nb], 0)
+    k = kv.pages_k[pt]                                       # [B, nb, P, KV, HD]
+    v = kv.pages_v[pt]
+    k = k.reshape(B, nb * page, *k.shape[3:])
+    v = v.reshape(B, nb * page, *v.shape[3:])
+    valid = jnp.arange(nb * page)[None, :] < kv.lens[:, None]
+    return k, v, valid
+
+
+def release_sequence(kv: PagedKV, seq: int) -> PagedKV:
+    """Host-side eviction: clear a slot's table + len (pages recycled by the
+    scheduler's compaction pass)."""
+    return kv._replace(
+        page_table=kv.page_table.at[seq].set(-1),
+        lens=kv.lens.at[seq].set(0))

@@ -1,0 +1,108 @@
+"""ESS latent-cache state: host tier + device pools + indexer cache.
+
+Layout (per model):
+
+* ``host_latent [L, B, S, D]`` — the **Total Memory Pool** (paper Fig. 3),
+  pinned host memory.  One buffer; layers index it inside the host
+  computation (updates alias in place).
+* ``ikeys``  — tuple of per-layer [B, S, Di] Indexer-Cache buffers, device
+  HBM, never offloaded (16.8 % of cache bytes, fully read each step).
+  Per-layer leaves (not a stacked array) so each decode layer touches only
+  its own buffer — no full-stack copies in the unrolled step.
+* ``pools``  — tuple of per-layer :class:`repro.core.lru_pool.PoolState`,
+  the device-side **Sparse Memory Pool**.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import lru_pool as LP
+from repro.core import offload
+from repro.distributed import sharding as shd
+
+
+class ESSCaches(NamedTuple):
+    lens: jax.Array                    # [B]
+    host_latent: jax.Array             # [L, B, S, D] (pinned_host w/ mesh)
+    ikeys: tuple                       # L x [B, S, Di]
+    pools: tuple                       # L x PoolState
+
+
+def pool_entries(cfg: ArchConfig, max_seq: int) -> int:
+    return LP.pool_entries_for(cfg.ess.sparse_memory_ratio, max_seq,
+                               cfg.dsa.index_topk, cfg.ess.pool_min_entries)
+
+
+def init_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                    dtype=jnp.bfloat16) -> ESSCaches:
+    Lh = cfg.num_layers
+    D = cfg.mla.latent_dim
+    Di = cfg.dsa.index_dim
+    P = pool_entries(cfg, max_seq)
+    host = jnp.zeros((Lh, batch, max_seq, D), dtype)
+    host = offload.to_host(host, None, "batch", None, None) \
+        if cfg.ess.offload_kv else host
+    return ESSCaches(
+        lens=jnp.zeros((batch,), jnp.int32),
+        host_latent=host,
+        ikeys=tuple(jnp.zeros((batch, max_seq, Di), dtype)
+                    for _ in range(Lh)),
+        pools=tuple(LP.init_pool(batch, P, max_seq, D, dtype)
+                    for _ in range(Lh)),
+    )
+
+
+def abstract_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                        dtype=jnp.bfloat16) -> ESSCaches:
+    """ShapeDtypeStruct tree with host/device shardings (dry-run)."""
+    Lh = cfg.num_layers
+    D = cfg.mla.latent_dim
+    Di = cfg.dsa.index_dim
+    P = pool_entries(cfg, max_seq)
+
+    ctx = shd.current()
+    # cache shardings are pinned to explicit mesh axes (batch over the data
+    # axes) independent of the activation rule profile — weights-stationary
+    # profiles unmap the "batch" logical axis but the cache tier must stay
+    # batch-parallel (same convention as launch/steps.annotate).
+    if ctx is not None and ctx.mesh is not None:
+        names = set(ctx.mesh.axis_names)
+        data_axes = tuple(a for a in ("pod", "data") if a in names)
+        batch_entry = data_axes if len(data_axes) > 1 else \
+            (data_axes[0] if data_axes else None)
+    else:
+        batch_entry = None
+
+    def dev(shape, dt, *axes):
+        if ctx is None or ctx.mesh is None:
+            return jax.ShapeDtypeStruct(shape, dt)
+        from jax.sharding import PartitionSpec as P
+        spec_axes = tuple(batch_entry if a == "batch" else None
+                          for a in axes)
+        spec = shd.prune_spec(P(*spec_axes), shape, ctx.mesh)
+        return jax.ShapeDtypeStruct(
+            shape, dt, sharding=jax.sharding.NamedSharding(ctx.mesh, spec))
+
+    host = offload.abstract_host((Lh, batch, max_seq, D), dtype,
+                                 None, "batch", None, None) \
+        if cfg.ess.offload_kv else dev((Lh, batch, max_seq, D), dtype,
+                                       None, "batch", None, None)
+    pool = LP.PoolState(
+        data=dev((batch, P, D), dtype, "batch", None, None),
+        ids=dev((batch, P), jnp.int32, "batch", None),
+        last_use=dev((batch, P), jnp.int32, "batch", None),
+        slot_of=dev((batch, max_seq), jnp.int32, "batch", None),
+        step=dev((), jnp.int32),
+    )
+    return ESSCaches(
+        lens=dev((batch,), jnp.int32, "batch"),
+        host_latent=host,
+        ikeys=tuple(dev((batch, max_seq, Di), dtype, "batch", None, None)
+                    for _ in range(Lh)),
+        pools=tuple(pool for _ in range(Lh)),
+    )

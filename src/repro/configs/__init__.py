@@ -1,0 +1,20 @@
+"""Architecture registry — importing this package registers all configs."""
+
+from repro.configs.base import (ArchConfig, DSAConfig, ESSOptions, MoEConfig,
+                                SHAPES, ShapeCell, SSMConfig, get_config,
+                                list_archs)
+
+# side-effect registration
+from repro.configs import (dbrx_132b, deepseek_v3_671b, gemma2_27b,   # noqa
+                           gemma3_27b, mamba2_780m, qwen1_5_110b,     # noqa
+                           qwen2_vl_7b, qwen3_0_6b, whisper_large_v3, # noqa
+                           zamba2_7b)                                 # noqa
+
+ASSIGNED = [
+    "zamba2-7b", "whisper-large-v3", "gemma2-27b", "gemma3-27b",
+    "qwen3-0.6b", "qwen1.5-110b", "dbrx-132b", "deepseek-v3-671b",
+    "qwen2-vl-7b", "mamba2-780m",
+]
+
+__all__ = ["ArchConfig", "DSAConfig", "ESSOptions", "MoEConfig", "SHAPES",
+           "ShapeCell", "SSMConfig", "get_config", "list_archs", "ASSIGNED"]

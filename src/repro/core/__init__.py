@@ -1,0 +1,13 @@
+"""ESS core: the paper's offload-centric latent-cache management.
+
+* ``lru_pool``   — GPU-side Sparse Memory Pool (LRU eviction/admission)
+* ``warmup``     — LRU-Warmup from the last prefill windows
+* ``offload``    — host-tier placement + FlashTrans-analogue transfers
+* ``overlap``    — DA / DBA compute-communication overlap step builders
+* ``policy``     — layer-wise overlap strategy selection
+* ``similarity`` — Intra-Layer Similarity (Eq. 1)
+"""
+
+from repro.core import lru_pool, offload, overlap, policy, similarity, warmup
+
+__all__ = ["lru_pool", "offload", "overlap", "policy", "similarity", "warmup"]

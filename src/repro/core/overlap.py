@@ -1,0 +1,230 @@
+"""ESS decode attention with DA / DBA overlap (paper §3.3).
+
+On TPU, overlap is decided by XLA's latency-hiding scheduler, so the control
+knob is **program structure**: what is *independent* of the H2D fetch can
+hide it.  The three strategies lower to three different dependence graphs:
+
+* ``none``  (SGLang default): one attention over the union of hits+misses —
+  everything depends on the fetch; fully serial.
+* ``da``    (Dual-Attention): fetch is issued first; **Attn0** consumes only
+  pool-resident rows (independent of the fetch) and **Attn1** consumes the
+  fetched rows; the two partials merge exactly (online-softmax
+  renormalization, bit-identical up to fp reassociation).
+* ``dba``   (DualBatch-Attention): additionally splits the *indexer* along
+  the batch dim; half-2's indexer compute (paged_mqa_logits + top-k — the
+  components whose intensity survives batch splitting, §3.3) is independent
+  of half-1's fetch and hides it even at long context where Attn0 is tiny.
+
+All shapes fixed; Q>1 (MTP drafts) supported by flattening per-query top-k
+requests into the pool lookup.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import lru_pool as LP
+from repro.core import offload
+from repro.models import mla as M
+
+NEG_INF = -2.0e38
+
+
+class ESSLayerState(NamedTuple):
+    pool: LP.PoolState         # device-resident sparse memory pool
+    host_latent: jax.Array     # [B,S,D] or full [L,B,S,D] (pinned_host)
+    layer: int = 0             # layer index when host_latent is [L,B,S,D]
+    batch_offset: int = 0      # DBA half-batch offset into the host cache
+
+
+class ESSStats(NamedTuple):
+    hits: jax.Array
+    misses: jax.Array
+    overflow: jax.Array
+
+
+def _attend_rows(q_comb: jax.Array, rows: jax.Array, valid: jax.Array,
+                 cfg: ArchConfig, use_kernel: bool = False) -> M.Partial:
+    """q [B,Q,H,D] vs per-query rows [B,Q,K,D] (or shared [B,K,D])."""
+    if use_kernel:
+        from repro.kernels.sparse_mla import ops as sk
+        return sk.partial_attend(q_comb, rows, valid, M.mla_scale(cfg),
+                                 cfg.mla.kv_lora_rank)
+    rank = cfg.mla.kv_lora_rank
+    if rows.ndim == 3:
+        rows = rows[:, None]
+        valid = valid[:, None]
+    s = jnp.einsum("bqhd,bqkd->bqhk", q_comb, rows,
+                   preferred_element_type=jnp.float32) * M.mla_scale(cfg)
+    s = jnp.where(valid[:, :, None, :], s, NEG_INF)
+    mx = s.max(axis=-1)
+    p = jnp.exp(s - mx[..., None])
+    p = jnp.where(valid[:, :, None, :], p, 0.0)
+    o = jnp.einsum("bqhk,bqkv->bqhv", p.astype(rows.dtype),
+                   rows[..., :rank], preferred_element_type=jnp.float32)
+    l = p.sum(axis=-1)
+    return M.Partial(o, mx, l)
+
+
+def ess_sparse_attention(mla_p: dict, idx_p: dict, cfg: ArchConfig,
+                         x_norm: jax.Array, positions: jax.Array,
+                         state: ESSLayerState, idx_keys: jax.Array,
+                         lens: jax.Array, *, overlap: str = "da",
+                         use_kernel: bool = False
+                         ) -> tuple[jax.Array, ESSLayerState, ESSStats]:
+    """One layer of ESS decode attention.
+
+    x_norm [B,Q,d] (post-ln1 hidden of the new tokens), positions [B,Q],
+    idx_keys [B,S,Di] device-resident Indexer-Cache *already containing the
+    new tokens' keys*, lens [B] = cache length *after* appending new tokens.
+    ``state.host_latent`` must already contain the new latent rows (the
+    engine performs the D2H writeback — Figure 3's small D2H — before
+    calling attention so drafts can attend to themselves).
+    """
+    if overlap == "dba":
+        return _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys,
+                    lens, use_kernel)
+    return _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys,
+                       lens, overlap, use_kernel)
+
+
+def _topk_and_lookup(idx_p, cfg, x_norm, state, idx_keys, lens):
+    B, Q, _ = x_norm.shape
+    S = idx_keys.shape[1]
+    K = min(cfg.dsa.index_topk, S)
+    M_env = max(1, int(cfg.ess.max_miss_ratio * K)) * Q
+
+    iq = M.indexer_query(idx_p, x_norm)
+    sc = M.indexer_scores(iq, idx_keys)                          # [B,Q,S]
+    valid_s = jnp.arange(S)[None, :] < lens[:, None]
+    ids = M.topk_ids(sc, K, valid_s[:, None])                    # [B,Q,K]
+    req_valid = jnp.take_along_axis(
+        jnp.broadcast_to(valid_s[:, None], (B, Q, S)), ids, axis=2)
+    flat_ids = ids.reshape(B, Q * K)
+    flat_valid = req_valid.reshape(B, Q * K)
+    pool, lk, stats = LP.lookup(state.pool, flat_ids, flat_valid, M_env)
+    return pool, lk, stats, ids, req_valid, K, M_env
+
+
+def _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
+                overlap, use_kernel):
+    B, Q, _ = x_norm.shape
+    pool, lk, stats, ids, req_valid, K, M_env = _topk_and_lookup(
+        idx_p, cfg, x_norm, state, idx_keys, lens)
+
+    # ---- issue the H2D fetch as early as possible (DA overlap) ----
+    fetched = offload.host_gather_rows(state.host_latent, lk.miss_ids,
+                                       layer=state.layer,
+                                       batch_offset=state.batch_offset)
+
+    q_comb = M.absorbed_query(mla_p, cfg, x_norm, positions)     # [B,Q,H,D]
+
+    hit = lk.hit.reshape(B, Q, K)
+    slot = lk.slot.reshape(B, Q, K)
+    if overlap == "none":
+        # single attention over the union: every row depends on the fetch
+        rows_hit, _ = LP.gather_resident(pool, lk.slot, lk.hit)
+        # misses: place fetched rows back at their request positions
+        fr = jnp.where(lk.miss_rank[..., None] < M_env,
+                       jnp.take_along_axis(
+                           fetched, jnp.clip(lk.miss_rank, 0, M_env - 1)
+                           [..., None], axis=1), 0)
+        rows = jnp.where(lk.hit[..., None], rows_hit, fr)
+        valid = (lk.hit | (lk.miss_rank < M_env)) & \
+            (ids.reshape(B, Q * K) >= 0)
+        part = _attend_rows(q_comb, rows.reshape(B, Q, K, -1),
+                            valid.reshape(B, Q, K), cfg, use_kernel)
+    else:
+        # Attn0: pool-resident rows only (independent of the fetch)
+        rows0, _ = LP.gather_resident(pool, lk.slot, lk.hit)
+        p0 = _attend_rows(q_comb, rows0.reshape(B, Q, K, -1),
+                          hit & req_valid.reshape(B, Q, K).astype(bool),
+                          cfg, use_kernel)
+        # Attn1: fetched rows (waits on the H2D copy)
+        mvalid = (lk.miss_ids >= 0)
+        p1 = _attend_rows(q_comb, fetched[:, None].repeat(Q, 1)
+                          if Q > 1 else fetched[:, None],
+                          jnp.broadcast_to(mvalid[:, None], (B, Q, M_env)),
+                          cfg, use_kernel)
+        part = M.merge_partials(p0, p1)
+
+    out_lat = M.finalize_partial(part, x_norm.dtype)
+    out = M.output_proj(mla_p, cfg, out_lat)
+
+    pool = LP.admit(pool, lk.miss_ids, fetched)
+    pool = LP.tick(pool)
+    new_state = state._replace(pool=pool)
+    return out, new_state, ESSStats(stats.hits, stats.misses, stats.overflow)
+
+
+def _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
+         use_kernel):
+    """DualBatch-Attention: batch split in two, indexer of half-2 overlaps
+    the fetch of half-1."""
+    B = x_norm.shape[0]
+    h = B // 2
+    if h == 0:
+        return _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state,
+                           idx_keys, lens, "da", use_kernel)
+
+    def half(sl, off):
+        pool = LP.PoolState(*(a[sl] if a.ndim > 0 else a
+                              for a in state.pool))
+        pool = pool._replace(step=state.pool.step)
+        # host cache stays whole; the half indexes it via batch_offset
+        return ESSLayerState(pool, state.host_latent, state.layer,
+                             state.batch_offset + off)
+
+    s0, s1 = half(slice(0, h), 0), half(slice(h, None), h)
+    # half-1 indexer + fetch issue
+    p0_pool, lk0, st0, ids0, rv0, K, M_env = _topk_and_lookup(
+        idx_p, cfg, x_norm[:h], s0, idx_keys[:h], lens[:h])
+    fetched0 = offload.host_gather_rows(s0.host_latent, lk0.miss_ids,
+                                        layer=s0.layer,
+                                        batch_offset=s0.batch_offset)
+    # half-2 indexer (independent of fetched0 -> overlaps the copy)
+    p1_pool, lk1, st1, ids1, rv1, _, _ = _topk_and_lookup(
+        idx_p, cfg, x_norm[h:], s1, idx_keys[h:], lens[h:])
+    fetched1 = offload.host_gather_rows(s1.host_latent, lk1.miss_ids,
+                                        layer=s1.layer,
+                                        batch_offset=s1.batch_offset)
+
+    out0, ns0 = _finish_half(mla_p, cfg, x_norm[:h], positions[:h], p0_pool,
+                             lk0, ids0, rv0, fetched0, s0, K, M_env,
+                             use_kernel)
+    out1, ns1 = _finish_half(mla_p, cfg, x_norm[h:], positions[h:], p1_pool,
+                             lk1, ids1, rv1, fetched1, s1, K, M_env,
+                             use_kernel)
+
+    pool = LP.PoolState(*(jnp.concatenate([a, b], 0) if a.ndim > 0 else a
+                          for a, b in zip(ns0.pool, ns1.pool)))
+    pool = pool._replace(step=state.pool.step)
+    pool = LP.tick(pool)
+    out = jnp.concatenate([out0, out1], 0)
+    hits = jnp.concatenate([st0.hits, st1.hits], 0)
+    misses = jnp.concatenate([st0.misses, st1.misses], 0)
+    ovf = jnp.concatenate([st0.overflow, st1.overflow], 0)
+    return out, state._replace(pool=pool), ESSStats(hits, misses, ovf)
+
+
+def _finish_half(mla_p, cfg, x_norm, positions, pool, lk, ids, req_valid,
+                 fetched, st, K, M_env, use_kernel):
+    B, Q, _ = x_norm.shape
+    q_comb = M.absorbed_query(mla_p, cfg, x_norm, positions)
+    hit = lk.hit.reshape(B, Q, K)
+    rows0, _ = LP.gather_resident(pool, lk.slot, lk.hit)
+    p0 = _attend_rows(q_comb, rows0.reshape(B, Q, K, -1),
+                      hit & req_valid.astype(bool), cfg, use_kernel)
+    mvalid = lk.miss_ids >= 0
+    p1 = _attend_rows(q_comb, fetched[:, None].repeat(Q, 1) if Q > 1
+                      else fetched[:, None],
+                      jnp.broadcast_to(mvalid[:, None], (B, Q, M_env)),
+                      cfg, use_kernel)
+    part = M.merge_partials(p0, p1)
+    out = M.output_proj(mla_p, cfg, M.finalize_partial(part, x_norm.dtype))
+    pool = LP.admit(pool, lk.miss_ids, fetched)
+    return out, st._replace(pool=pool)

@@ -1,0 +1,59 @@
+"""Layer-wise overlap strategy selection (paper §3.3, Figure 7/8).
+
+The paper's decision rule: per-layer expected Cache-Miss count (stable
+across context lengths per Figure 8, so obtainable by offline profiling)
+and the context length determine whether DA fully hides the transfer or
+DBA's split-indexer compute is needed.
+
+The crossover is computed from the same cost model the simulator uses:
+
+    DA  exposed  = max(0, t_fetch(miss) - t_attn0 - t_preattn)
+    DBA exposed  = max(0, t_fetch(miss) - t_attn0 - t_preattn
+                        - 0.5 * t_indexer) + t_split_overhead
+
+choose DBA when its exposed+overhead is lower; below ``da_floor`` misses DA
+is always chosen (paper: DA favourable at low miss counts — no splitting
+overhead)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapCosts:
+    """Per-layer decode timings (seconds) from offline profiling / simulator."""
+    t_attn0: float          # sparse attention over pool hits
+    t_preattn: float        # q projections etc. (independent of fetch)
+    t_indexer: float        # full indexer compute (scales with context)
+    t_split_overhead: float # DBA batch-split loss
+    fetch_bw: float         # effective H2D bytes/s (FlashTrans-grade)
+    block_bytes: int        # latent entry size
+
+
+def exposed_da(c: OverlapCosts, miss: float) -> float:
+    t_fetch = miss * c.block_bytes / c.fetch_bw
+    return max(0.0, t_fetch - c.t_attn0 - c.t_preattn)
+
+
+def exposed_dba(c: OverlapCosts, miss: float) -> float:
+    t_fetch = miss * c.block_bytes / c.fetch_bw
+    hidden = c.t_attn0 + c.t_preattn + 0.5 * c.t_indexer
+    return max(0.0, t_fetch - hidden) + c.t_split_overhead
+
+
+def dba_threshold(c: OverlapCosts, max_miss: int = 4096) -> int:
+    """Smallest miss count at which DBA beats DA (paper's empirical switch)."""
+    for m in range(0, max_miss + 1, 8):
+        if exposed_dba(c, m) < exposed_da(c, m):
+            return m
+    return max_miss + 1
+
+
+def choose_layerwise(miss_profile: np.ndarray, costs: OverlapCosts
+                     ) -> list[str]:
+    """miss_profile [L]: offline expected misses per layer -> strategy/layer."""
+    thr = dba_threshold(costs)
+    return ["dba" if m >= thr else "da" for m in np.asarray(miss_profile)]

@@ -1,0 +1,128 @@
+"""Generalized ESS for GQA architectures (DESIGN.md §5).
+
+The paper's indexer is DSA-specific; for plain-GQA archs (qwen/gemma/dbrx)
+the offload architecture ports unchanged if something else picks the hot
+cache entries.  We use Quest-style block scoring [arXiv:2406.10774]: per
+KV block keep elementwise (min, max) of the keys; a query's upper-bound
+attention score for the block is
+
+    ub(q, block) = Σ_d max(q_d·min_d, q_d·max_d)
+
+Select the Top-B blocks per head group, manage them with the *same* LRU
+Sparse Memory Pool (block granularity = the paper's PagedAttention pages),
+fetch misses from the host tier, attend with the exact softmax over the
+selected set.  Selection is approximate (Quest), attention over the
+selection is exact — same contract as DSA-ESS.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+class BlockMeta(NamedTuple):
+    kmin: jax.Array    # [B, NB, KV, D]
+    kmax: jax.Array    # [B, NB, KV, D]
+
+
+def build_block_meta(k_cache: jax.Array, block: int) -> BlockMeta:
+    """k_cache [B, S, KV, D] (S % block == 0) -> per-block min/max."""
+    B, S, KV, D = k_cache.shape
+    nb = S // block
+    kb = k_cache.reshape(B, nb, block, KV, D).astype(jnp.float32)
+    return BlockMeta(kb.min(axis=2), kb.max(axis=2))
+
+
+def update_block_meta(meta: BlockMeta, k_new: jax.Array, pos: jax.Array,
+                      block: int) -> BlockMeta:
+    """Incremental decode-time update for one new token per sequence.
+
+    k_new [B, KV, D]; pos [B] absolute position of the new entry."""
+    bi = jnp.arange(k_new.shape[0])
+    blk = pos // block
+    kn = k_new.astype(jnp.float32)
+    kmin = meta.kmin.at[bi, blk].min(kn)
+    kmax = meta.kmax.at[bi, blk].max(kn)
+    return BlockMeta(kmin, kmax)
+
+
+def quest_scores(q: jax.Array, meta: BlockMeta,
+                 valid_blocks: jax.Array) -> jax.Array:
+    """q [B, H, D] (per q-head; KV broadcast by grouping outside) ->
+    upper-bound block scores [B, NB] (max over heads, Quest §3.2)."""
+    groups = q.shape[1] // meta.kmin.shape[2]
+    kmin = jnp.repeat(meta.kmin, groups, axis=2)        # [B,NB,H,D]
+    kmax = jnp.repeat(meta.kmax, groups, axis=2)
+    qf = q.astype(jnp.float32)[:, None]                 # [B,1,H,D]
+    ub = jnp.maximum(qf * kmin, qf * kmax).sum(-1)      # [B,NB,H]
+    sc = ub.max(axis=-1)                                # max over heads
+    return jnp.where(valid_blocks, sc, NEG_INF)
+
+
+def quest_topk_blocks(q: jax.Array, meta: BlockMeta, lens: jax.Array,
+                      block: int, topb: int) -> tuple[jax.Array, jax.Array]:
+    """-> (block ids [B, topb], valid [B, topb]).  Always includes the
+    newest block (local window, Quest keeps recents resident)."""
+    B, NB = meta.kmin.shape[:2]
+    n_valid = (lens + block - 1) // block
+    valid = jnp.arange(NB)[None, :] < n_valid[:, None]
+    sc = quest_scores(q, meta, valid)
+    cur = jnp.clip((lens - 1) // block, 0, NB - 1)
+    sc = sc.at[jnp.arange(B), cur].set(jnp.inf)         # pin newest block
+    k = min(topb, NB)
+    _, ids = jax.lax.top_k(sc, k)
+    bvalid = jnp.take_along_axis(valid, ids, axis=1)
+    return ids, bvalid
+
+
+def gqa_sparse_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         block_ids: jax.Array, bvalid: jax.Array,
+                         lens: jax.Array, block: int, scale: float
+                         ) -> jax.Array:
+    """Exact attention over the selected blocks.
+
+    q [B,H,D]; k/v [B,S,KV,D]; block_ids [B,NBSEL].  Returns [B,H,D]."""
+    B, S, KV, D = k_cache.shape
+    H = q.shape[1]
+    groups = H // KV
+    nbsel = block_ids.shape[1]
+    # gather selected blocks -> [B, NBSEL*block, KV, D]
+    gidx = (block_ids[..., None] * block
+            + jnp.arange(block)[None, None, :]).reshape(B, nbsel * block)
+    gk = jnp.take_along_axis(k_cache, gidx[..., None, None], axis=1)
+    gv = jnp.take_along_axis(v_cache, gidx[..., None, None], axis=1)
+    pos_ok = (gidx < lens[:, None]) & jnp.repeat(bvalid, block, axis=1)
+    kk = jnp.repeat(gk, groups, axis=2)
+    vv = jnp.repeat(gv, groups, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q, kk,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(pos_ok[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w.astype(vv.dtype), vv,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def attention_recall(q, k_cache, lens, block_ids, bvalid, block, scale
+                     ) -> jax.Array:
+    """Diagnostic: fraction of true softmax mass captured by the selected
+    blocks (per sequence, max-head) — the quality metric for Quest-ESS."""
+    B, S, KV, D = k_cache.shape
+    groups = q.shape[1] // KV
+    kk = jnp.repeat(k_cache, groups, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q, kk,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(S)[None, :] < lens[:, None]
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)                       # [B,H,S]
+    sel = jnp.zeros((B, S), bool)
+    gidx = (block_ids[..., None] * block
+            + jnp.arange(block)[None, None, :]).reshape(B, -1)
+    sel = sel.at[jnp.arange(B)[:, None],
+                 jnp.clip(gidx, 0, S - 1)].set(True)
+    mass = jnp.where(sel[:, None], p, 0.0).sum(-1)       # [B,H]
+    return mass.min(axis=-1)                             # worst head

@@ -1,0 +1,35 @@
+"""Intra-Layer Similarity (paper Eq. 1):
+
+    r_t^l = |K_{t-1}^l ∩ K_t^l| / |K_t^l|
+
+the temporal-locality metric that justifies the whole offload design
+(paper §2.2, Figure 2)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def intra_layer_similarity(prev_ids: jax.Array, cur_ids: jax.Array,
+                           prev_valid: jax.Array | None = None,
+                           cur_valid: jax.Array | None = None) -> jax.Array:
+    """prev_ids/cur_ids [..., K] int32 -> similarity [...] in [0,1].
+
+    Membership via broadcast compare (K x K): exact set semantics as long
+    as ids within a row are unique (top-k output is)."""
+    eq = cur_ids[..., :, None] == prev_ids[..., None, :]
+    if prev_valid is not None:
+        eq &= prev_valid[..., None, :]
+    member = eq.any(axis=-1)
+    if cur_valid is not None:
+        member &= cur_valid
+        denom = jnp.maximum(cur_valid.sum(axis=-1), 1)
+    else:
+        denom = cur_ids.shape[-1]
+    return member.sum(axis=-1) / denom
+
+
+def similarity_trace(ids_by_step: jax.Array) -> jax.Array:
+    """ids_by_step [T, ..., K] -> r_t [T-1, ...] consecutive-step similarity."""
+    return jax.vmap(intra_layer_similarity)(ids_by_step[:-1], ids_by_step[1:])

@@ -1,0 +1,77 @@
+"""Gradient compression for the DP all-reduce (int8 + error feedback).
+
+At multi-pod scale the data-parallel gradient all-reduce crosses the slow
+pod interconnect; 8-bit quantization cuts that traffic 4x (vs fp32
+moments) / 2x (vs bf16).  Error feedback keeps the quantization noise from
+biasing convergence: the residual of each round is added back before the
+next quantization (Seide et al.; 1-bit Adam lineage).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any     # same structure as grads, fp32
+
+
+def init_ef(params: Any) -> EFState:
+    return EFState(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Any, ef: EFState) -> tuple[Any, Any, EFState]:
+    """-> (q_tree int8, scale_tree, new error-feedback state).
+
+    The caller all-reduces the int8 payloads (mean of dequantized values —
+    in pjit-land the all-reduce is implicit: reduce the *dequantized*
+    values so XLA emits the collective on the small int8 tensors when it
+    can, or apply in shard_map for explicit control).
+    """
+    def one(g, r):
+        v = g.astype(jnp.float32) + r
+        q, s = quantize_int8(v)
+        new_r = v - dequantize_int8(q, s)
+        return (q, s, new_r)
+
+    trip = jax.tree.map(one, grads, ef.residual,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    q = jax.tree.map(lambda t: t[0], trip,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], trip,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    r = jax.tree.map(lambda t: t[2], trip,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return q, s, EFState(r)
+
+
+def decompress_grads(q: Any, s: Any) -> Any:
+    return jax.tree.map(dequantize_int8, q, s)
+
+
+def compression_error(grads: Any, ef: EFState) -> jax.Array:
+    """Diagnostic: relative L2 error of one quantize/dequantize round."""
+    q, s, _ = compress_grads(grads, ef)
+    deq = decompress_grads(q, s)
+    num = jax.tree.map(lambda a, b: jnp.sum((a.astype(jnp.float32) - b) ** 2),
+                       grads, deq)
+    den = jax.tree.map(lambda a: jnp.sum(a.astype(jnp.float32) ** 2), grads)
+    tot_n = sum(jax.tree.leaves(num))
+    tot_d = sum(jax.tree.leaves(den)) + 1e-12
+    return jnp.sqrt(tot_n / tot_d)

@@ -1,0 +1,28 @@
+"""Shared kernel utilities: interpret-mode selection, padding helpers."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.cache
+def default_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode on non-TPU backends
+    (this container is CPU-only; TPU v5e is the deployment target)."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pad_dim(x: jax.Array, axis: int, to: int, value=0) -> jax.Array:
+    pad = to - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg, constant_values=value)

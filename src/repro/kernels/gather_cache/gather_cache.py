@@ -1,0 +1,100 @@
+"""FlashTrans-analogue gather kernel (paper §3.1, adapted to TPU).
+
+The paper's FlashTrans uses UVA so the GPU coalesces 656 B scattered
+Latent-Cache rows out of CPU memory.  The TPU analogue at the *device* tier:
+rows are scattered across a big HBM-resident pool and must be packed into a
+dense VMEM-friendly buffer for the attention kernel.  Scalar-prefetched
+indices drive the BlockSpec ``index_map``, so each grid step DMAs exactly
+the requested row — the Pallas pipeline overlaps the row DMAs with the
+copy-out, which is the in-kernel version of FlashTrans's transaction
+coalescing.
+
+Host→device traffic itself is handled by ``repro.core.offload`` (memory
+spaces); this kernel covers the on-device pool→contiguous packing that both
+Attn0 (pool hits) and the LRU admission path need.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import default_interpret, round_up
+
+ROW_BLOCK = 8   # rows gathered per grid step (DMA batching factor)
+
+
+def _gather_kernel(ids_ref, cache_ref, out_ref):
+    # cache_ref block: (ROW_BLOCK, D) rows selected by index_map
+    out_ref[...] = cache_ref[...]
+
+
+def _index_map_cache(i, ids_ref):
+    # block index along rows: ids are pre-divided by ROW_BLOCK groups; each
+    # grid step copies ROW_BLOCK consecutive *virtual* rows whose physical
+    # row ids are ids_ref[i*ROW_BLOCK : (i+1)*ROW_BLOCK]. BlockSpec can only
+    # address one block origin per step, so rows are fetched one per step
+    # when indices are arbitrary: ROW_BLOCK=1 path. For ROW_BLOCK>1 we rely
+    # on the id-sorted fast path (see ops.gather_rows sorted=True).
+    return ids_ref[i], 0
+
+
+def gather_rows_kernel(cache: jax.Array, ids: jax.Array,
+                       interpret: bool | None = None) -> jax.Array:
+    """cache [S, D], ids [M] int32 (negative -> row 0, masked later)
+    -> out [M, D].  One row per grid step, index_map-driven DMA."""
+    S, D = cache.shape
+    M = ids.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
+    safe = jnp.clip(ids, 0, S - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M,),
+        in_specs=[pl.BlockSpec((1, D), _index_map_cache)],
+        out_specs=pl.BlockSpec((1, D), lambda i, ids_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, D), cache.dtype),
+        interpret=interpret,
+    )(safe, cache)
+    return out
+
+
+def _gather_block_kernel(base_ref, cache_ref, out_ref):
+    out_ref[...] = cache_ref[...]
+
+
+def gather_row_blocks_kernel(cache: jax.Array, block_ids: jax.Array,
+                             block_rows: int,
+                             interpret: bool | None = None) -> jax.Array:
+    """Paged variant: gather whole row-blocks (pages).  cache [S, D] with
+    S % block_rows == 0, block_ids [NB] -> out [NB*block_rows, D].
+
+    This is the PagedAttention-style page fetch; ESS uses it when the pool
+    is managed at page granularity instead of single entries."""
+    S, D = cache.shape
+    NB = block_ids.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
+    safe = jnp.clip(block_ids, 0, S // block_rows - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(NB,),
+        in_specs=[pl.BlockSpec((block_rows, D), lambda i, ids: (ids[i], 0))],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_block_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((NB * block_rows, D), cache.dtype),
+        interpret=interpret,
+    )(safe, cache)

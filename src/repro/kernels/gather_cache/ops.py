@@ -1,0 +1,32 @@
+"""Jit'd public wrappers for the gather kernels (batched over sequences)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_cache.gather_cache import (gather_row_blocks_kernel,
+                                                     gather_rows_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(cache: jax.Array, ids: jax.Array,
+                interpret: bool | None = None) -> jax.Array:
+    """cache [B,S,D] (or [S,D]), ids [B,M] (or [M]) -> rows, zero-masked
+    where ids < 0."""
+    if cache.ndim == 2:
+        out = gather_rows_kernel(cache, ids, interpret)
+        return jnp.where((ids >= 0)[:, None], out, 0)
+    out = jax.vmap(lambda c, i: gather_rows_kernel(c, i, interpret))(cache, ids)
+    return jnp.where((ids >= 0)[..., None], out, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def gather_pages(cache: jax.Array, block_ids: jax.Array, block_rows: int,
+                 interpret: bool | None = None) -> jax.Array:
+    if cache.ndim == 2:
+        return gather_row_blocks_kernel(cache, block_ids, block_rows, interpret)
+    return jax.vmap(lambda c, i: gather_row_blocks_kernel(
+        c, i, block_rows, interpret))(cache, block_ids)

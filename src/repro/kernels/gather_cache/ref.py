@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the gather kernels."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows_ref(cache: jax.Array, ids: jax.Array) -> jax.Array:
+    safe = jnp.clip(ids, 0, cache.shape[0] - 1)
+    return jnp.take(cache, safe, axis=0)
+
+
+def gather_row_blocks_ref(cache: jax.Array, block_ids: jax.Array,
+                          block_rows: int) -> jax.Array:
+    S, D = cache.shape
+    pages = cache.reshape(S // block_rows, block_rows, D)
+    safe = jnp.clip(block_ids, 0, S // block_rows - 1)
+    return jnp.take(pages, safe, axis=0).reshape(-1, D)

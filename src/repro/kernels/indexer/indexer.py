@@ -1,0 +1,72 @@
+"""Lightning-indexer scoring kernel (DSA, DeepSeek-V3.2-Exp).
+
+score[s] = Σ_h w[h] · ReLU(q[h] · k[s])   over index heads h.
+
+This is the "paged_mqa_logits" component the paper moves into the DBA
+overlap region (§3.3) because its arithmetic intensity survives batch
+splitting: per key block the work is two MXU matmuls
+
+    dots  (SB, Hi) = keys (SB, Di) @ q^T (Di, Hi)     Di=128, Hi=64
+    score (SB, 1)  = ReLU(dots) @ w (Hi, 1)
+
+Grid over S key-blocks; embarrassingly parallel (no cross-step state).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import default_interpret, round_up
+
+NEG_INF = -2.0e38
+DEFAULT_SB = 256
+
+
+def _indexer_kernel(q_ref, w_ref, k_ref, v_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)                  # [Hi, Di]
+    w = w_ref[...].astype(jnp.float32)                  # [Hi, 1]
+    keys = k_ref[...].astype(jnp.float32)               # [SB, Di]
+    valid = v_ref[...].astype(jnp.float32)              # [SB, 1]
+    dots = jax.lax.dot_general(keys, q, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    sc = jax.lax.dot_general(jax.nn.relu(dots), w, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [SB,1]
+    o_ref[...] = jnp.where(valid > 0.5, sc, NEG_INF)
+
+
+def indexer_scores_kernel(q: jax.Array, w: jax.Array, keys: jax.Array,
+                          valid: jax.Array, sb: int = DEFAULT_SB,
+                          interpret: bool | None = None) -> jax.Array:
+    """q [Hi,Di], w [Hi], keys [S,Di], valid [S] -> scores [S] fp32
+    (invalid slots = -inf, ready for top-k)."""
+    if interpret is None:
+        interpret = default_interpret()
+    Hi, Di = q.shape
+    S = keys.shape[0]
+    sb = min(sb, max(8, round_up(S, 8)))
+    Sp = round_up(S, sb)
+    Hp = round_up(max(Hi, 8), 8)
+
+    qp = jnp.pad(q, ((0, Hp - Hi), (0, 0)))
+    wp = jnp.pad(w, (0, Hp - Hi))[:, None]
+    kp = jnp.pad(keys, ((0, Sp - S), (0, 0)))
+    vp = jnp.pad(valid.astype(jnp.float32), (0, Sp - S))[:, None]
+
+    out = pl.pallas_call(
+        _indexer_kernel,
+        grid=(Sp // sb,),
+        in_specs=[
+            pl.BlockSpec((Hp, Di), lambda i: (0, 0)),
+            pl.BlockSpec((Hp, 1), lambda i: (0, 0)),
+            pl.BlockSpec((sb, Di), lambda i: (i, 0)),
+            pl.BlockSpec((sb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((sb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sp, 1), jnp.float32),
+        interpret=interpret,
+    )(qp, wp, kp, vp)
+    return out[:S, 0]

@@ -1,0 +1,31 @@
+"""Jit'd public wrappers for the indexer kernel (batched, + top-k select)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.indexer.indexer import indexer_scores_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def indexer_scores(q: jax.Array, w: jax.Array, keys: jax.Array,
+                   valid: jax.Array, interpret: bool | None = None
+                   ) -> jax.Array:
+    """q [B,Q,Hi,Di], w [B,Q,Hi], keys [B,S,Di], valid [B,S]
+    -> scores [B,Q,S] fp32 (-inf at invalid)."""
+    def per_q(qq, ww, kk, vv):
+        return indexer_scores_kernel(qq, ww, kk, vv, interpret=interpret)
+    per_b = jax.vmap(per_q, in_axes=(0, 0, None, None))      # over Q
+    return jax.vmap(per_b)(q, w, keys, valid)                # over B
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_select(q: jax.Array, w: jax.Array, keys: jax.Array,
+                valid: jax.Array, k: int, interpret: bool | None = None):
+    """Scores + Top-K ids in one call — the DSA selection stage."""
+    sc = indexer_scores(q, w, keys, valid, interpret=interpret)
+    vals, ids = jax.lax.top_k(sc, k)
+    return vals, ids

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the lightning-indexer kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def indexer_scores_ref(q: jax.Array, w: jax.Array, keys: jax.Array,
+                       valid: jax.Array) -> jax.Array:
+    dots = keys.astype(jnp.float32) @ q.astype(jnp.float32).T    # [S, Hi]
+    sc = jax.nn.relu(dots) @ w.astype(jnp.float32)               # [S]
+    return jnp.where(valid, sc, NEG_INF)

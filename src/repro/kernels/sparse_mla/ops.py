@@ -1,0 +1,52 @@
+"""Jit'd public wrappers: batched sparse-MLA partials + fused gather-attend."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse_mla.sparse_mla import sparse_mla_partial_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "rank", "interpret"))
+def partial_attend(q_comb: jax.Array, rows: jax.Array, valid: jax.Array,
+                   scale: float, rank: int, interpret: bool | None = None):
+    """Batched flash partials.
+
+    q_comb [B,Q,H,D]; rows [B,K,D] (shared over Q) or [B,Q,K,D];
+    valid [B,K] / [B,Q,K].  Returns Partial-compatible (o, m, l) with
+    o [B,Q,H,rank], m/l [B,Q,H] — consumed by repro.models.mla.merge_partials.
+    """
+    from repro.models.mla import Partial
+    if rows.ndim == 3:
+        rows = jnp.broadcast_to(rows[:, None], q_comb.shape[:2] + rows.shape[1:])
+        valid = jnp.broadcast_to(valid[:, None], q_comb.shape[:2] + valid.shape[1:])
+    fn = functools.partial(sparse_mla_partial_kernel, scale=scale, rank=rank,
+                           interpret=interpret)
+    o, m, l = jax.vmap(jax.vmap(fn))(q_comb, rows, valid)
+    return Partial(o, m, l)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "rank", "interpret"))
+def sparse_mla_gather_attend(q_comb: jax.Array, latent_cache: jax.Array,
+                             ids: jax.Array, valid_s: jax.Array,
+                             scale: float, rank: int,
+                             interpret: bool | None = None) -> jax.Array:
+    """Gather Top-K rows then attend (normalized output).
+
+    q_comb [B,Q,H,D], latent_cache [B,S,D], ids [B,Q,K], valid_s [B,S].
+    The gather runs through kernels/gather_cache (row-DMA pipeline) and the
+    attention through the flash partial kernel — the two-kernel TPU
+    realization of FlashTrans + FlashMLA."""
+    from repro.kernels.gather_cache import ops as gops
+    B, Q, K = ids.shape
+    flat = ids.reshape(B, Q * K)
+    rows = gops.gather_rows(latent_cache, flat, interpret=interpret)
+    rows = rows.reshape(B, Q, K, -1)
+    gvalid = jnp.take_along_axis(
+        jnp.broadcast_to(valid_s[:, None], (B, Q, valid_s.shape[1])), ids,
+        axis=2)
+    p = partial_attend(q_comb, rows, gvalid, scale, rank, interpret)
+    return (p.o / jnp.maximum(p.l, 1e-30)[..., None]).astype(q_comb.dtype)

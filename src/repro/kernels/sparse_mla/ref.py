@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the sparse-MLA partial kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def sparse_mla_partial_ref(q: jax.Array, rows: jax.Array, valid: jax.Array,
+                           scale: float, rank: int):
+    """q [H,D], rows [K,D], valid [K] -> (o [H,rank], m [H], l [H]) fp32."""
+    s = (q.astype(jnp.float32) @ rows.astype(jnp.float32).T) * scale
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    m = s.max(axis=1)
+    p = jnp.exp(s - m[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    l = p.sum(axis=1)
+    o = p @ rows[:, :rank].astype(jnp.float32)
+    return o, m, l
+
+
+def finalize_ref(o, m, l, dtype=jnp.float32):
+    return (o / jnp.maximum(l, 1e-30)[..., None]).astype(dtype)

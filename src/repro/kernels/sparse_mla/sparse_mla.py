@@ -1,0 +1,121 @@
+"""Sparse-MLA decode kernel — the FlashMLA analogue for ESS (paper Table 1's
+"Attention-Engine", adapted to TPU/MXU).
+
+Decode-time MLA in absorbed form is MQA: per-head 576-dim queries attend to
+the shared latent rows.  ESS calls this twice per layer (Attn0 over pool
+hits, Attn1 over fetched misses) and merges the partials exactly, so the
+kernel returns *unnormalized* flash statistics (o, m, l) rather than the
+normalized output.
+
+Tiling: grid over K row-blocks; per step one (KB, D) row block is DMA'd
+HBM→VMEM while the previous block is on the MXU (Pallas pipelining).  The
+online-softmax accumulator lives in VMEM scratch:
+
+    scores (Hp, KB) = q (Hp, D) @ rows^T (D, KB)   — MXU, D=576=4.5×128
+    acc    (Hp, R)  += p (Hp, KB) @ rows[:, :R]    — MXU, R=512
+
+Hp (query-head block) is padded to the 128-lane register width; KB defaults
+to 128 so both matmuls are 128-aligned.  VMEM working set ≈
+q 288 KB + rows 288 KB + acc 256 KB ≪ 16 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import default_interpret, round_up
+
+NEG_INF = -2.0e38
+DEFAULT_KB = 128
+
+
+def _sparse_mla_kernel(q_ref, rows_ref, valid_ref, o_ref, m_ref, l_ref,
+                       acc, m_sc, l_sc, *, rank: float, scale: float,
+                       nblocks: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    q = q_ref[...].astype(jnp.float32)                    # [Hp, D]
+    rows = rows_ref[...].astype(jnp.float32)              # [KB, D]
+    valid = valid_ref[...].astype(jnp.float32)            # [1, KB]
+
+    s = jax.lax.dot_general(q, rows, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid > 0.5, s, NEG_INF)                # [Hp, KB]
+
+    m_prev = m_sc[...]                                    # [Hp, 1]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid > 0.5, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)                        # [Hp, 1]
+    l_sc[...] = l_sc[...] * corr + p.sum(axis=1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot_general(
+        p, rows[:, :int(rank)], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(i == nblocks - 1)
+    def _done():
+        o_ref[...] = acc[...]
+        m_ref[...] = m_sc[...]
+        l_ref[...] = l_sc[...]
+
+
+def sparse_mla_partial_kernel(q: jax.Array, rows: jax.Array,
+                              valid: jax.Array, scale: float, rank: int,
+                              kb: int = DEFAULT_KB,
+                              interpret: bool | None = None):
+    """q [H, D], rows [K, D], valid [K] bool -> (o [H,rank], m [H], l [H]).
+
+    Unnormalized flash partials (fp32)."""
+    if interpret is None:
+        interpret = default_interpret()
+    H, D = q.shape
+    K = rows.shape[0]
+    Hp = round_up(max(H, 8), 8)
+    kb = min(kb, K)
+    Kp = round_up(K, kb)
+    nb = Kp // kb
+
+    qp = jnp.pad(q, ((0, Hp - H), (0, 0)))
+    rowsp = jnp.pad(rows, ((0, Kp - K), (0, 0)))
+    vp = jnp.pad(valid.astype(jnp.float32), (0, Kp - K))[None, :]  # [1, Kp]
+
+    kern = functools.partial(_sparse_mla_kernel, rank=rank, scale=scale,
+                             nblocks=nb)
+    o, m, l = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((Hp, D), lambda i: (0, 0)),
+            pl.BlockSpec((kb, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, kb), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Hp, rank), lambda i: (0, 0)),
+            pl.BlockSpec((Hp, 1), lambda i: (0, 0)),
+            pl.BlockSpec((Hp, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Hp, rank), jnp.float32),
+            jax.ShapeDtypeStruct((Hp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Hp, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Hp, rank), jnp.float32),
+            pltpu.VMEM((Hp, 1), jnp.float32),
+            pltpu.VMEM((Hp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, rowsp, vp)
+    return o[:H], m[:H, 0], l[:H, 0]

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS *before* the first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    return jax.make_mesh(
+        (n // mp, mp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

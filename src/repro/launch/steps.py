@@ -1,0 +1,303 @@
+"""Step factories + abstract input specs for every (arch × shape) cell.
+
+``input_specs(cfg, cell)`` returns weak-type-correct ShapeDtypeStruct
+stand-ins (with NamedShardings under the active sharding context) for the
+step function chosen by the cell kind:
+
+* train   -> ``make_train_step``  (loss + grad + AdamW update)
+* prefill -> ``make_prefill_step``
+* decode  -> ``make_decode_step`` (one new token vs a seq_len cache) — the
+  ESS-enabled DSA arch routes through the offload-centric engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.cache import latent_cache as LC
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed import sharding as shd
+from repro.models import transformer as T
+from repro.models.params import abstract_params, param_pspecs
+from repro.serving import engine as E
+from repro.training.optimizer import (AdamWConfig, OptState, adamw_update,
+                                      init_opt_state)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _dev(shape, dtype, *axes):
+    ctx = shd.current()
+    if ctx is None or ctx.mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=ctx.sharding_for(shape, axes))
+
+
+def seq_axis_name(cell: ShapeCell) -> str | None:
+    """long_500k (batch=1) shards the *sequence* over the data axis."""
+    return "seq" if cell.global_batch == 1 else None
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict[str, Any]:
+    """Abstract inputs for the cell's step function."""
+    B, S = cell.global_batch, cell.seq_len
+    batch_ax = "batch" if B > 1 else None
+    toks_i32 = functools.partial(_dev, dtype=jnp.int32)
+
+    if cell.kind == "train":
+        specs: dict[str, Any] = {}
+        if cfg.embedding_inputs and cfg.family != "audio":
+            specs["inputs"] = _dev((B, S, cfg.d_model), jnp.bfloat16,
+                                   batch_ax, None, None)
+        else:
+            specs["inputs"] = _dev((B, S), jnp.int32, batch_ax, None)
+        specs["labels"] = _dev((B, S), jnp.int32, batch_ax, None)
+        specs["positions"] = _dev((B, S), jnp.int32, batch_ax, None)
+        if cfg.family == "audio":
+            specs["enc_inputs"] = _dev((B, cfg.encdec.encoder_seq, cfg.d_model),
+                                       jnp.bfloat16, batch_ax, None, None)
+        if cfg.mrope_sections is not None:
+            specs["mrope_positions"] = _dev((B, S, 3), jnp.int32,
+                                            batch_ax, None, None)
+        return specs
+
+    if cell.kind == "prefill":
+        specs = {}
+        if cfg.embedding_inputs and cfg.family != "audio":
+            specs["inputs"] = _dev((B, S, cfg.d_model), jnp.bfloat16,
+                                   batch_ax, "seq", None)
+        else:
+            specs["inputs"] = _dev((B, S), jnp.int32, batch_ax, "seq")
+        specs["positions"] = _dev((B, S), jnp.int32, batch_ax, "seq")
+        if cfg.family == "audio":
+            specs["enc_inputs"] = _dev((B, cfg.encdec.encoder_seq, cfg.d_model),
+                                       jnp.bfloat16, batch_ax, None, None)
+        if cfg.mrope_sections is not None:
+            specs["mrope_positions"] = _dev((B, S, 3), jnp.int32,
+                                            batch_ax, None, None)
+        return specs
+
+    # decode: one new token against a seq_len cache
+    sq = seq_axis_name(cell)
+    specs = {"caches": abstract_caches(cfg, B, S, seq_ax=sq)}
+    if cfg.embedding_inputs and cfg.family != "audio":
+        specs["inputs"] = _dev((B, 1, cfg.d_model), jnp.bfloat16,
+                               batch_ax, None, None)
+    else:
+        specs["inputs"] = _dev((B, 1), jnp.int32, batch_ax, None)
+    specs["positions"] = _dev((B, 1), jnp.int32, batch_ax, None)
+    return specs
+
+
+def abstract_caches(cfg: ArchConfig, B: int, S: int,
+                    seq_ax: str | None = None) -> Any:
+    """ShapeDtypeStruct cache tree with shardings (decode dry-run inputs).
+
+    Sharding policy (production decode):
+    * batch over the data axes (pod, data) when B > 1;
+    * KV heads over ``model`` when divisible, else the cache *sequence* dim
+      shards over ``model`` (flash-decoding style seq split — the partial
+      softmax merge lowers to a psum over the model axis);
+    * B == 1 (long_500k): sequence takes the data axes too;
+    * MLA latent/ikeys are head-shared (MQA) -> always seq-sharded over
+      ``model``; with ESS the full latent lives in host memory instead and
+      only the Sparse Memory Pool stays in HBM (the paper's design).
+    """
+    if cfg.ess.enabled and cfg.attn_kind == "mla":
+        return LC.abstract_ess_caches(cfg, B, S)
+    concrete = jax.eval_shape(lambda: T.cache_spec(cfg, B, S))
+    ctx = shd.current()
+    if ctx is None or ctx.mesh is None:
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), concrete)
+
+    names = set(ctx.mesh.axis_names)
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    model = "model" if "model" in names else None
+    batch_entry = data_axes if B > 1 else None
+    seq_data = data_axes if B == 1 else ()
+
+    def seq_entry(extra_model: bool):
+        ax = tuple(seq_data) + ((model,) if extra_model and model else ())
+        if not ax:
+            return None
+        return ax if len(ax) > 1 else ax[0]
+
+    def annotate(x):
+        nd = x.ndim
+        if nd == 1:                                     # lens
+            ax = (batch_entry,)
+        elif nd == 5:
+            if x.shape[2] == S:                         # kv cache
+                kv_ok = model and x.shape[3] % sizes[model] == 0
+                ax = (None, batch_entry, seq_entry(not kv_ok),
+                      model if kv_ok else None, None)
+            elif cfg.encdec is not None and \
+                    x.shape[2] == cfg.encdec.encoder_seq:
+                kv_ok = model and x.shape[3] % sizes[model] == 0
+                ax = (None, batch_entry, None,
+                      model if kv_ok else None, None)
+            else:                                       # ssm state [L,B,H,P,N]
+                h_ok = model and x.shape[2] % sizes[model] == 0
+                ax = (None, batch_entry, model if h_ok else None, None, None)
+        elif nd == 4:
+            if x.shape[2] == S:                         # latent/ikeys [L,B,S,D]
+                ax = (None, batch_entry, seq_entry(True), None)
+            else:                                       # conv state [L,B,W,C]
+                c_ok = model and x.shape[3] % sizes[model] == 0
+                ax = (None, batch_entry, None, model if c_ok else None)
+        elif nd == 3:
+            ax = (None, batch_entry, None)
+        else:
+            ax = (None,) * nd
+        spec = shd.prune_spec(P(*ax), x.shape, ctx.mesh)
+        return jax.ShapeDtypeStruct(
+            x.shape, x.dtype,
+            sharding=jax.sharding.NamedSharding(ctx.mesh, spec))
+
+    return jax.tree.map(annotate, concrete)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Next-token CE, fp32, mean over tokens."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# Step factories
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig | None = None,
+                    accum_steps: int = 1) -> Callable:
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def loss_fn(params, batch):
+        out = T.forward(params, cfg, batch["inputs"], batch["positions"],
+                        mode="train",
+                        mrope_positions=batch.get("mrope_positions"),
+                        enc_inputs=batch.get("enc_inputs"))
+        loss = lm_loss(out.logits, batch["labels"])
+        loss = loss + 0.01 * out.aux.get("moe_lb", 0.0)
+        return loss, out.aux
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            # gradient accumulation: scan over microbatches, accumulate in
+            # the grad dtype (bf16 grads keep memory flat at scale)
+            def split(x):
+                return x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+        params2, opt_state2, om = adamw_update(opt_cfg, params, grads,
+                                               opt_state)
+        metrics = {"loss": loss, **om}
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    def prefill_step(params, batch):
+        out = T.forward(params, cfg, batch["inputs"], batch["positions"],
+                        mode="prefill",
+                        mrope_positions=batch.get("mrope_positions"),
+                        enc_inputs=batch.get("enc_inputs"))
+        return out.logits, out.caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, use_kernel: bool = False) -> Callable:
+    if cfg.ess.enabled and cfg.attn_kind == "mla":
+        def decode_step(params, batch):
+            out = E.ess_decode(params, cfg, batch["inputs"],
+                               batch["positions"], batch["caches"],
+                               use_kernel=use_kernel)
+            return out.logits, out.caches
+        return decode_step
+
+    def decode_step(params, batch):
+        out = T.forward(params, cfg, batch["inputs"], batch["positions"],
+                        mode="decode", caches=batch["caches"])
+        return out.logits, out.caches
+    return decode_step
+
+
+def dp_degree() -> int:
+    """Product of mesh-axis sizes the "batch" logical axis maps to."""
+    ctx = shd.current()
+    if ctx is None or ctx.mesh is None:
+        return 1
+    r = ctx.rules.get("batch")
+    if r is None:
+        return 1
+    axes = r if isinstance(r, tuple) else (r,)
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+MICRO_SEQS = 4   # target sequences per device per microbatch
+
+
+def auto_accum(cell: ShapeCell) -> int:
+    b_loc = max(1, cell.global_batch // dp_degree())
+    return int(min(8, max(1, b_loc // MICRO_SEQS)))
+
+
+def make_step(cfg: ArchConfig, cell: ShapeCell) -> Callable:
+    if cell.kind == "train":
+        return make_train_step(cfg, accum_steps=auto_accum(cell))
+    if cell.kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_decode_step(cfg)
+
+
+def abstract_state(cfg: ArchConfig, cell: ShapeCell):
+    """Abstract (params[, opt_state]) with shardings for the dry-run."""
+    ctx = shd.current()
+    defs = T.model_def(cfg)
+    mesh = ctx.mesh if ctx else None
+    rules = ctx.rules if ctx else {}
+    params = abstract_params(defs, mesh, rules)
+    if cell.kind != "train":
+        return params, None
+    m = jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+        s.shape, jnp.float32, sharding=getattr(s, "sharding", None)), params)
+    v = jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+        s.shape, jnp.float32, sharding=getattr(s, "sharding", None)), params)
+    opt = OptState(m=m, v=v, step=jax.ShapeDtypeStruct((), jnp.int32))
+    return params, opt

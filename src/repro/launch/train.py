@@ -1,0 +1,58 @@
+"""Training launcher.
+
+Laptop-scale by default (runs on this CPU container); at fleet scale the
+same entry point runs under a multi-host mesh — everything below the CLI
+is mesh-agnostic.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b-smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/repro_ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.steps import make_train_step
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.training.data import DataConfig
+from repro.training.optimizer import AdamWConfig, init_opt_state
+from repro.training.train_loop import LoopConfig, train_loop
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, param_dtype=jnp.float32)
+    params = init_params(jax.random.key(args.seed), T.model_def(cfg))
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(1, args.steps // 10))
+    opt_state = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, opt_cfg, accum_steps=args.accum),
+                   donate_argnums=(0, 1))
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size,
+                          global_batch=args.batch, seq_len=args.seq,
+                          seed=args.seed)
+    loop = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir)
+    train_loop(step, params, opt_state, data_cfg, loop)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

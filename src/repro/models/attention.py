@@ -1,0 +1,271 @@
+"""Attention substrate: GQA/MQA/MHA with causal, sliding-window and
+local/global patterns, soft-capping, qk-norm, RoPE/M-RoPE, biases.
+
+Three execution paths, chosen by shape regime:
+
+* ``mha_dense``    — materialized scores; differentiable; used by train_4k.
+* ``mha_chunked``  — online-softmax ``lax.scan`` over KV blocks (flash-style,
+  O(block²) memory); used by prefill_32k (inference).
+* ``decode path``  — q_len ∈ {1..4} against a cache; scores are [B,H,q,S]
+  which is small; plain einsum + masked softmax.
+
+All softmax statistics are fp32 regardless of compute dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def attn_def(cfg: ArchConfig, *, cross: bool = False) -> dict:
+    dt = cfg.param_dtype
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": ParamDef((d, H, hd), dt, "normal", axes=("embed", "heads", None)),
+        "wk": ParamDef((d, KV, hd), dt, "normal", axes=("embed", "kv", None)),
+        "wv": ParamDef((d, KV, hd), dt, "normal", axes=("embed", "kv", None)),
+        "wo": ParamDef((H, hd, d), dt, "normal", axes=("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamDef((H, hd), dt, "zeros", axes=("heads", None))
+        p["bk"] = ParamDef((KV, hd), dt, "zeros", axes=("kv", None))
+        p["bv"] = ParamDef((KV, hd), dt, "zeros", axes=("kv", None))
+    if cfg.qk_norm:
+        p["q_norm"] = ParamDef((hd,), dt, "zeros", axes=(None,))
+        p["k_norm"] = ParamDef((hd,), dt, "zeros", axes=(None,))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def project_qkv(p: dict, cfg: ArchConfig, x: jax.Array,
+                positions: jax.Array | None,
+                *, rope_theta: float | None = None,
+                mrope_positions: jax.Array | None = None):
+    """x [B,S,d] -> q [B,S,H,hd], k,v [B,S,KV,hd] (roped, normed)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = L.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    if cfg.mrope_sections is not None and mrope_positions is not None:
+        cos, sin = L.mrope_cos_sin(mrope_positions, cfg.head_dim,
+                                   cfg.mrope_sections, theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    else:
+        assert positions is not None
+        cos, sin = L.rope_cos_sin(positions, cfg.head_dim, theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q = L.apply_rope(q, cos, sin, cfg.rope_interleaved)
+    k = L.apply_rope(k, cos, sin, cfg.rope_interleaved)
+    return q, k, v
+
+
+def repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """[B,S,KV,hd] -> [B,S,KV*groups,hd] for dense GQA math."""
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, groups, hd)
+                            ).reshape(b, s, kv * groups, hd)
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def causal_mask_bias(q_pos: jax.Array, k_pos: jax.Array,
+                     window=None) -> jax.Array:
+    """Additive fp32 bias [*, Sq, Sk]; window = sliding-window size
+    (int, or traced scalar for mixed local/global scan bodies)."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    apply_window = window is not None and \
+        (isinstance(window, jax.Array) or window > 0)
+    if apply_window:
+        ok &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def _scale(cfg: ArchConfig) -> float:
+    if getattr(cfg, "query_scale", None):
+        return cfg.query_scale
+    return cfg.head_dim ** -0.5
+
+
+def mha_dense(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array,
+              scale: float, attn_cap: Optional[float]) -> jax.Array:
+    """q [B,Sq,H,hd], k/v [B,Sk,H,hd], bias [B|1,1|H,Sq,Sk] -> [B,Sq,H,hd]."""
+    s = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32) * scale
+    s = L.softcap(s, attn_cap) + bias
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bshk->bqhk", w.astype(v.dtype), v)
+
+
+def mha_chunked(q: jax.Array, k: jax.Array, v: jax.Array,
+                q_pos: jax.Array, k_pos: jax.Array, scale: float,
+                attn_cap: Optional[float], window: Optional[int],
+                kv_block: int = 1024) -> jax.Array:
+    """Flash-style online-softmax over KV blocks (inference path).
+
+    q [B,Sq,H,hd]; k,v [B,Sk,H,hd] (already GQA-repeated); positions absolute.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    nb = -(-Sk // kv_block)
+    pad = nb * kv_block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    kb = k.reshape(B, nb, kv_block, H, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, kv_block, H, hd).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(B, nb, kv_block).transpose(1, 0, 2)
+    qf = q.astype(jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kc, vc, pc = blk
+        s = jnp.einsum("bqhk,bshk->bhqs", qf, kc.astype(jnp.float32)) * scale
+        s = L.softcap(s, attn_cap)
+        s = s + causal_mask_bias(q_pos[:, None, :], pc[:, None, :], window)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqs,bshk->bhqk", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+class AttnOutput(NamedTuple):
+    out: jax.Array
+    k: jax.Array | None = None     # new k/v for cache append (decode/prefill)
+    v: jax.Array | None = None
+
+
+def attention(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+              *, kind: str = "global", mode: str = "train",
+              cache_k: jax.Array | None = None,
+              cache_v: jax.Array | None = None,
+              cache_positions: jax.Array | None = None,
+              rope_theta: float | None = None,
+              mrope_positions: jax.Array | None = None,
+              window_override: jax.Array | float | None = None) -> AttnOutput:
+    """Unified attention entry.
+
+    mode: "train" (dense, differentiable), "prefill" (chunked flash),
+          "decode" (q against cache_k/v; caller appends to the cache).
+    kind: "global" or "local" (sliding window cfg.sliding_window).
+    window_override: traced per-layer window (mixed local/global scans);
+          a huge value (>= 2**30) means effectively global.
+    """
+    if window_override is not None:
+        window = window_override
+    else:
+        window = cfg.sliding_window if kind == "local" else None
+    scale = _scale(cfg)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    q, k, v = project_qkv(p, cfg, x, positions, rope_theta=rope_theta,
+                          mrope_positions=mrope_positions)
+    from repro.distributed.sharding import logical_axis_size
+    heads_ok = cfg.num_heads % max(1, logical_axis_size("heads")) == 0
+    if heads_ok:
+        q = shard(q, "batch", None, "heads", None)
+        k = shard(k, "batch", None, "kv", None)
+        v = shard(v, "batch", None, "kv", None)
+    else:
+        # heads don't divide the model axis (e.g. whisper's 20 heads on a
+        # 16-wide mesh): shard the query sequence instead so the score
+        # matrix stays partitioned (k/v all-gather, Megatron-SP style)
+        q = shard(q, "batch", "seq_sp", None, None)
+
+    if mode == "decode":
+        assert cache_k is not None and cache_v is not None
+        kk = repeat_kv(cache_k, groups)
+        vv = repeat_kv(cache_v, groups)
+        s = jnp.einsum("bqhk,bshk->bhqs", q.astype(jnp.float32),
+                       kk.astype(jnp.float32)) * scale
+        s = L.softcap(s, cfg.attn_softcap)
+        s = s + causal_mask_bias(positions[:, None, :],
+                                 cache_positions[:, None, :], window)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshk->bqhk", w, vv.astype(jnp.float32))
+        o = o.astype(x.dtype)
+    elif mode == "prefill":
+        kk = repeat_kv(k, groups)
+        vv = repeat_kv(v, groups)
+        o = mha_chunked(q, kk, vv, positions, positions, scale,
+                        cfg.attn_softcap, window)
+    else:  # train
+        kk = repeat_kv(k, groups)
+        vv = repeat_kv(v, groups)
+        # positions are identical across the batch in training -> build the
+        # mask once [1,1,S,S] and let it broadcast (batch-sized fp32 masks
+        # dominated the remat working set otherwise)
+        bias = causal_mask_bias(positions[:1, None, :],
+                                positions[:1, None, :], window)
+        o = mha_dense(q, kk, vv, bias, scale, cfg.attn_softcap)
+
+    o = shard(o, "batch", None, "heads", None)
+    out = jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
+    return AttnOutput(out, k, v)
+
+
+def cross_attention(p: dict, cfg: ArchConfig, x: jax.Array,
+                    enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    groups = cfg.num_heads // cfg.num_kv_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    kk = repeat_kv(enc_k, groups)
+    vv = repeat_kv(enc_v, groups)
+    s = jnp.einsum("bqhk,bshk->bhqs", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * _scale(cfg)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bshk->bqhk", w, vv.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bqhk,hkd->bqd", o, p["wo"])
+
+
+def cross_kv(p: dict, cfg: ArchConfig, enc_out: jax.Array):
+    """Precompute encoder K/V once per request (whisper serving)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    return k, v

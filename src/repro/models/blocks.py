@@ -1,0 +1,242 @@
+"""Per-layer blocks: (attention | MLA | SSM) + (MLP | MoE), pre/post norms.
+
+Each block kind provides ``*_def`` (ParamDef tree) and an apply function
+taking ``mode`` ∈ {train, prefill, decode} plus the relevant cache slice.
+Caches are threaded functionally: apply returns (y, new_cache_slice).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mla as M
+from repro.models import moe as MoE
+from repro.models import ssm as S
+from repro.models.params import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# GQA transformer block (dense or MoE ffn)
+# ---------------------------------------------------------------------------
+
+def gqa_block_def(cfg: ArchConfig, *, moe: bool = False,
+                  cross: bool = False) -> dict:
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    p = {
+        "ln1": L.rmsnorm_def(d, dt),
+        "attn": A.attn_def(cfg),
+        "ln2": L.rmsnorm_def(d, dt),
+    }
+    p["ffn"] = MoE.moe_def(cfg) if moe else L.mlp_def(d, cfg.d_ff, dt)
+    if cfg.post_block_norm:
+        p["ln1_post"] = L.rmsnorm_def(d, dt)
+        p["ln2_post"] = L.rmsnorm_def(d, dt)
+    if cross:
+        p["ln_cross"] = L.rmsnorm_def(d, dt)
+        p["cross"] = A.attn_def(cfg, cross=True)
+    return p
+
+
+class GQACache(NamedTuple):
+    k: jax.Array          # [B, S, KV, hd]
+    v: jax.Array
+    # positions/len live at stack level (shared across layers)
+
+
+def _write_cache(cache: GQACache, k_new: jax.Array, v_new: jax.Array,
+                 lens: jax.Array) -> GQACache:
+    """Scatter Q new tokens at per-sequence offsets ``lens`` (decode append)."""
+    B, Q = k_new.shape[0], k_new.shape[1]
+    idx = lens[:, None] + jnp.arange(Q)[None, :]                  # [B,Q]
+    bi = jnp.arange(B)[:, None]
+    k = cache.k.at[bi, idx].set(k_new.astype(cache.k.dtype), mode="drop")
+    v = cache.v.at[bi, idx].set(v_new.astype(cache.v.dtype), mode="drop")
+    return GQACache(k, v)
+
+
+def gqa_block(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+              *, mode: str, kind: str = "global",
+              cache: GQACache | None = None, lens: jax.Array | None = None,
+              cache_positions: jax.Array | None = None,
+              rope_theta: jax.Array | float | None = None,
+              mrope_positions: jax.Array | None = None,
+              enc_kv: tuple[jax.Array, jax.Array] | None = None,
+              window_override: jax.Array | float | None = None,
+              moe: bool = False, train: bool = False):
+    """Returns (y, new_cache, moe_aux|None)."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if mode == "decode":
+        # write the new tokens into the cache FIRST so they attend to
+        # themselves (and to each other, causally, for MTP q_len > 1)
+        q, k, v = A.project_qkv(p["attn"], cfg, h, positions,
+                                rope_theta=rope_theta,
+                                mrope_positions=mrope_positions)
+        cache = _write_cache(cache, k, v, lens)
+        groups = cfg.num_heads // cfg.num_kv_heads
+        kk = A.repeat_kv(cache.k, groups)
+        vv = A.repeat_kv(cache.v, groups)
+        window = window_override if window_override is not None else \
+            (cfg.sliding_window if kind == "local" else None)
+        # keep cache operands in their storage dtype (fp32 casts would
+        # materialize a full cache copy that the partitioner then reshards);
+        # accumulate in fp32 via preferred_element_type
+        s = jnp.einsum("bqhk,bshk->bhqs", q, kk,
+                       preferred_element_type=jnp.float32) * \
+            (cfg.query_scale or cfg.head_dim ** -0.5)
+        # consume the cache's sharding: seq-split when kv heads don't
+        # divide the model axis (annotate() in launch/steps.py), else
+        # head-split — avoids involuntary cache replication
+        from repro.distributed.sharding import logical_axis_size
+        kv_ok = cfg.num_kv_heads % max(1, logical_axis_size("kv")) == 0 \
+            and cfg.num_kv_heads >= logical_axis_size("kv")
+        if kv_ok:
+            s = shard(s, "batch", "heads", None, None)
+        else:
+            s = shard(s, "batch", None, None, "seq_sp")
+        s = L.softcap(s, cfg.attn_softcap)
+        s = s + A.causal_mask_bias(positions[:, None, :],
+                                   cache_positions[:, None, :], window)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshk->bqhk", w.astype(vv.dtype), vv,
+                       preferred_element_type=jnp.float32)
+        attn_out = jnp.einsum("bqhk,hkd->bqd", o.astype(x.dtype),
+                              p["attn"]["wo"])
+    else:
+        ao = A.attention(p["attn"], cfg, h, positions, kind=kind, mode=mode,
+                         rope_theta=rope_theta, mrope_positions=mrope_positions,
+                         window_override=window_override)
+        if mode == "prefill":
+            cache = GQACache(ao.k, ao.v)
+        attn_out = ao.out
+    if cfg.post_block_norm:
+        attn_out = L.rmsnorm(p["ln1_post"], attn_out, cfg.norm_eps)
+    x = x + attn_out
+
+    if enc_kv is not None:
+        hc = L.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+        x = x + A.cross_attention(p["cross"], cfg, hc, enc_kv[0], enc_kv[1])
+
+    h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    aux = None
+    if moe:
+        f, aux = MoE.moe_apply(p["ffn"], cfg, h2, train=train)
+    else:
+        f = L.mlp(p["ffn"], h2, cfg.act)
+    if cfg.post_block_norm:
+        f = L.rmsnorm(p["ln2_post"], f, cfg.norm_eps)
+    return x + f, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# MLA block (DeepSeek): MLA attention + (dense | MoE) ffn + optional DSA
+# ---------------------------------------------------------------------------
+
+def mla_block_def(cfg: ArchConfig, *, moe: bool, dense_ff: int | None = None
+                  ) -> dict:
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    p = {
+        "ln1": L.rmsnorm_def(d, dt),
+        "mla": M.mla_def(cfg),
+        "ln2": L.rmsnorm_def(d, dt),
+    }
+    if cfg.dsa is not None:
+        p["indexer"] = M.indexer_def(cfg)
+    if moe:
+        p["ffn"] = MoE.moe_def(cfg)
+    else:
+        p["ffn"] = L.mlp_def(d, dense_ff or cfg.d_ff, dt)
+    return p
+
+
+class MLACache(NamedTuple):
+    latent: jax.Array     # [B, S, latent_dim]
+    ikeys: jax.Array      # [B, S, index_dim] (zeros when no DSA)
+
+
+def mla_write_cache(cfg: ArchConfig, p: dict, cache: MLACache, x_norm: jax.Array,
+                    positions: jax.Array, lens: jax.Array) -> MLACache:
+    """Append new latent entries (and indexer keys) at per-seq offsets."""
+    new_lat = M.latent_entries(p["mla"], cfg, x_norm, positions)
+    B, Q = new_lat.shape[:2]
+    idx = lens[:, None] + jnp.arange(Q)[None, :]
+    bi = jnp.arange(B)[:, None]
+    lat = cache.latent.at[bi, idx].set(new_lat.astype(cache.latent.dtype),
+                                       mode="drop")
+    ik = cache.ikeys
+    if "indexer" in p:
+        new_k = M.indexer_keys(p["indexer"], x_norm)
+        ik = ik.at[bi, idx].set(new_k.astype(ik.dtype), mode="drop")
+    return MLACache(lat, ik)
+
+
+def mla_block(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+              *, mode: str, cache: MLACache | None = None,
+              lens: jax.Array | None = None, moe: bool = False,
+              train: bool = False):
+    """Returns (y, new_cache, moe_aux|None)."""
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    pi = p.get("indexer")
+    if mode == "decode":
+        # append first so new tokens can attend to themselves
+        cache = mla_write_cache(cfg, p, cache, h, positions, lens)
+        new_len = lens + h.shape[1]
+        if pi is not None:
+            out, _ = M.sparse_mla_decode(p["mla"], pi, cfg, h, positions,
+                                         cache.latent, cache.ikeys, new_len)
+        else:
+            out = mla_dense_decode(p, cfg, h, positions, cache, new_len)
+        attn_out = out
+    elif mode == "prefill":
+        out, lat, ikeys = M.mla_prefill_attend(p["mla"], pi, cfg, h, positions)
+        if ikeys is None:
+            ikeys = jnp.zeros(lat.shape[:2] + (1,), lat.dtype)
+        cache = MLACache(lat, ikeys)
+        attn_out = out
+    else:
+        attn_out = M.mla_train_attend(p["mla"], pi, cfg, h, positions)
+    x = x + attn_out
+
+    h2 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    aux = None
+    if moe:
+        f, aux = MoE.moe_apply(p["ffn"], cfg, h2, train=train)
+    else:
+        f = L.mlp(p["ffn"], h2, cfg.act)
+    return x + f, cache, aux
+
+
+def mla_dense_decode(p: dict, cfg: ArchConfig, h: jax.Array,
+                     positions: jax.Array, cache: MLACache, new_len: jax.Array
+                     ) -> jax.Array:
+    """Full (non-sparse) MLA decode over the latent cache (V3 baseline)."""
+    q = M.absorbed_query(p["mla"], cfg, h, positions)
+    S = cache.latent.shape[1]
+    valid = jnp.arange(S)[None, :] < new_len[:, None]
+    part = M.partial_sparse_attend(q, cache.latent, valid, cfg)
+    o_lat = M.finalize_partial(part, h.dtype)
+    return M.output_proj(p["mla"], cfg, o_lat)
+
+
+# ---------------------------------------------------------------------------
+# SSM (Mamba2) block
+# ---------------------------------------------------------------------------
+
+def ssm_block_def(cfg: ArchConfig) -> dict:
+    return {"ln": L.rmsnorm_def(cfg.d_model, cfg.param_dtype),
+            "ssm": S.ssm_def(cfg)}
+
+
+def ssm_block(p: dict, cfg: ArchConfig, x: jax.Array, *, mode: str,
+              state: S.SSMState | None = None):
+    h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    y, st = S.ssm_forward(p["ssm"], cfg, h, state, mode=mode)
+    return x + y, st

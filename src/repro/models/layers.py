@@ -1,0 +1,191 @@
+"""Common neural layers (pure JAX): norms, rotary embeddings, MLPs, heads."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef
+from repro.distributed.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_def(dim: int, dtype=jnp.float32) -> ParamDef:
+    return ParamDef((dim,), dtype, "zeros", axes=("embed",))  # gemma-style (1+w)
+
+
+def rmsnorm(w: jax.Array, x: jax.Array, eps: float = 1e-6,
+            zero_centered: bool = True) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if zero_centered else w.astype(jnp.float32)
+    return (xf * scale).astype(dt)
+
+
+def layernorm_def(dim: int, dtype=jnp.float32) -> dict:
+    return {"w": ParamDef((dim,), dtype, "ones", axes=("embed",)),
+            "b": ParamDef((dim,), dtype, "zeros", axes=("embed",))}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None or cap <= 0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE + NTK/YaRN-lite scaling)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0,
+               scaling: float | None = None) -> jax.Array:
+    """Inverse frequencies [head_dim//2] (fp32)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if scaling and scaling != 1.0:  # simple linear position-interpolation
+        freqs = freqs / scaling
+    return freqs
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float = 10000.0,
+                 scaling: float | None = None) -> tuple[jax.Array, jax.Array]:
+    """positions [...,] int -> cos,sin [..., head_dim//2] fp32."""
+    freqs = rope_freqs(head_dim, theta, scaling)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               interleaved: bool = False) -> jax.Array:
+    """x [..., H, D]; cos/sin broadcastable to [..., 1, D/2]."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if interleaved:
+        x1 = xf[..., 0::2]
+        x2 = xf[..., 1::2]
+        o1 = x1 * cos - x2 * sin
+        o2 = x2 * cos + x1 * sin
+        out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    else:
+        half = x.shape[-1] // 2
+        x1, x2 = xf[..., :half], xf[..., half:]
+        o1 = x1 * cos - x2 * sin
+        o2 = x2 * cos + x1 * sin
+        out = jnp.concatenate([o1, o2], axis=-1)
+    return out.astype(dt)
+
+
+def mrope_cos_sin(positions: jax.Array, head_dim: int, sections: tuple[int, ...],
+                  theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """Multimodal RoPE (Qwen2-VL).
+
+    positions: [..., 3] (temporal, height, width) position triples.
+    sections: per-component number of *frequency pairs*, summing to head_dim//2
+              (e.g. (16, 24, 24) for head_dim=128).
+    Text tokens carry identical (t,h,w) so M-RoPE == RoPE on them.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(head_dim, theta)  # [half]
+    # component id per frequency slot
+    comp = jnp.concatenate([jnp.full((s,), i, jnp.int32)
+                            for i, s in enumerate(sections)])
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(comp, positions.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1)  # [..., half]
+    ang = pos * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ---------------------------------------------------------------------------
+# Dense / GLU MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_def(d_model: int, d_ff: int, dtype, gated: bool = True,
+            act: str = "silu") -> dict:
+    d = {"wo": ParamDef((d_ff, d_model), dtype, "normal", axes=("ff", "embed"))}
+    if gated:
+        d["wi_gate"] = ParamDef((d_model, d_ff), dtype, "normal", axes=("embed", "ff"))
+        d["wi_up"] = ParamDef((d_model, d_ff), dtype, "normal", axes=("embed", "ff"))
+    else:
+        d["wi"] = ParamDef((d_model, d_ff), dtype, "normal", axes=("embed", "ff"))
+    return d
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "gelu_tanh":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    if "wi_gate" in p:
+        g = _act(act, x @ p["wi_gate"])
+        u = x @ p["wi_up"]
+        h = g * u
+    else:
+        h = _act(act, x @ p["wi"])
+    h = shard(h, "batch", None, "ff") if h.ndim == 3 else h
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding + LM head
+# ---------------------------------------------------------------------------
+
+def embed_def(vocab: int, d_model: int, dtype) -> ParamDef:
+    return ParamDef((vocab, d_model), dtype, "embed", axes=("vocab", "embed"))
+
+
+def embed(w: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(w, tokens, axis=0)
+
+
+def unembed(w: jax.Array, x: jax.Array, *, tied: bool = True,
+            cap: float | None = None) -> jax.Array:
+    """x [..., d] -> logits [..., vocab] (fp32 accumulation; operands stay
+    in storage dtype so no fp32 weight copy is materialized/resharded)."""
+    logits = jnp.einsum("...d,vd->...v", x, w,
+                        preferred_element_type=jnp.float32)
+    return softcap(logits, cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    params: Any = jnp.bfloat16
+    compute: Any = jnp.bfloat16
+    accum: Any = jnp.float32
+
+    @staticmethod
+    def from_name(name: str) -> "DTypePolicy":
+        if name == "bf16":
+            return DTypePolicy()
+        if name == "fp32":
+            return DTypePolicy(jnp.float32, jnp.float32, jnp.float32)
+        if name == "train_mixed":  # fp32 master params, bf16 compute
+            return DTypePolicy(jnp.float32, jnp.bfloat16, jnp.float32)
+        raise ValueError(name)

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts with fixed-capacity einsum dispatch (EP-shardable).
+
+The dispatch/combine are expressed as one-hot einsums (Mesh-TF / GShard
+style) so the SPMD partitioner shards experts over the ``model`` mesh axis
+and emits the EP collectives automatically.  Supports:
+
+* softmax top-k routing (DBRX: 16 experts, top-4),
+* DeepSeek-V3 sigmoid routing with aux-loss-free bias + routed scaling,
+* shared (always-on) experts, leading dense layers,
+* capacity-factor token dropping with residual passthrough,
+* switch-style load-balance aux loss (training).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+
+def moe_def(cfg: ArchConfig) -> dict:
+    mo = cfg.moe
+    dt = cfg.param_dtype
+    d, E, f = cfg.d_model, mo.num_experts, mo.d_expert
+    p = {
+        "router": ParamDef((d, E), jnp.float32, "normal", axes=("embed", "experts")),
+        "w_gate": ParamDef((E, d, f), dt, "normal", axes=("experts", "embed", "ff")),
+        "w_up": ParamDef((E, d, f), dt, "normal", axes=("experts", "embed", "ff")),
+        "w_down": ParamDef((E, f, d), dt, "normal", axes=("experts", "ff", "embed")),
+    }
+    if mo.router_bias:
+        p["router_bias"] = ParamDef((E,), jnp.float32, "zeros", axes=("experts",))
+    if mo.num_shared:
+        p["shared"] = L.mlp_def(d, f * mo.num_shared, dt)
+    return p
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array
+    router_entropy: jax.Array
+    dropped_fraction: jax.Array
+
+
+def router_probs(p: dict, cfg: ArchConfig, x2: jax.Array):
+    """x2 [T,d] -> (selection scores [T,E], combine weights base [T,E])."""
+    mo = cfg.moe
+    logits = x2.astype(jnp.float32) @ p["router"]
+    if mo.router_bias:
+        gates = jax.nn.sigmoid(logits)
+        sel = gates + p["router_bias"][None, :]     # bias only for selection
+        return sel, gates
+    probs = jax.nn.softmax(logits, axis=-1)
+    return probs, probs
+
+
+def moe_apply(p: dict, cfg: ArchConfig, x: jax.Array, *, train: bool = False
+              ) -> tuple[jax.Array, MoEAux]:
+    """x [B,S,d] -> (y [B,S,d], aux)."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = mo.num_experts, mo.top_k
+    x2 = x.reshape(T, d)
+
+    sel, gates = router_probs(p, cfg, x2)                    # [T,E]
+    top_vals, top_ids = jax.lax.top_k(sel, K)                # [T,K]
+    # combine weights come from the *unbiased* gate values
+    w = jnp.take_along_axis(gates, top_ids, axis=-1)         # [T,K]
+    if mo.norm_topk:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-20)
+    w = w * mo.routed_scale
+
+    capacity = max(1, int(math.ceil(T * K / E * mo.capacity_factor)))
+    capacity = min(capacity, T)
+
+    # one-hot expert assignment [T,K,E] and position-in-expert via cumsum
+    onehot = jax.nn.one_hot(top_ids, E, dtype=jnp.float32)   # [T,K,E]
+    flat = onehot.reshape(T * K, E)
+    pos = (jnp.cumsum(flat, axis=0) - flat).reshape(T, K, E) # slot index
+    pos = jnp.einsum("tke,tke->tk", pos, onehot)             # [T,K]
+    keep = pos < capacity
+    w = jnp.where(keep, w, 0.0)
+
+    # dispatch tensor [T,E,C]
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity, dtype=jnp.float32)
+    disp = jnp.einsum("tke,tkc->tec", onehot * keep[..., None], pos_oh)
+    comb = jnp.einsum("tke,tkc,tk->tec", onehot, pos_oh, w)
+
+    xin = jnp.einsum("tec,td->ecd", disp, x2.astype(jnp.float32))
+    xin = shard(xin, "experts", None, None).astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, p["w_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xin, p["w_up"])
+    h = shard(h, "experts", None, "ff")
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    y = jnp.einsum("tec,ecd->td", comb, out_e.astype(jnp.float32))
+    y = y.astype(x.dtype).reshape(B, S, d)
+
+    if mo.num_shared:
+        y = y + L.mlp(p["shared"], x, cfg.act)
+
+    # aux stats
+    me = onehot.mean(axis=(0, 1)) * E                        # mean routed frac * E
+    ce = (sel / jnp.maximum(sel.sum(-1, keepdims=True), 1e-20)).mean(0) * E
+    lb = jnp.mean(me * ce)
+    ent = -jnp.mean(jnp.sum(jnp.where(gates > 0, gates * jnp.log(gates + 1e-20),
+                                      0.0), axis=-1))
+    dropped = 1.0 - jnp.sum(keep) / (T * K)
+    return y, MoEAux(lb, ent, dropped)

@@ -1,0 +1,257 @@
+"""Mamba2 (SSD — state-space duality) blocks, pure JAX.
+
+Chunked SSD for train/prefill (quadratic within chunk, linear across
+chunks), recurrent step for decode.  Separate z/x/B/C/dt projections keep
+TP sharding of the inner dim clean (heads and d_inner both split over the
+``model`` axis).
+
+References: Mamba-2 [arXiv:2405.21060] minimal SSD; Zamba2 hybrid
+[arXiv:2411.15242] consumes these blocks via models/blocks.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+
+def ssm_def(cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    dt = cfg.param_dtype
+    d = cfg.d_model
+    din = s.d_inner(d)
+    H = s.nheads(d)
+    g = s.ngroups
+    return {
+        "w_z": ParamDef((d, din), dt, "normal", axes=("embed", "ff")),
+        "w_x": ParamDef((d, din), dt, "normal", axes=("embed", "ff")),
+        "w_B": ParamDef((d, g * s.state_dim), dt, "normal", axes=("embed", None)),
+        "w_C": ParamDef((d, g * s.state_dim), dt, "normal", axes=("embed", None)),
+        "w_dt": ParamDef((d, H), dt, "normal", axes=("embed", "heads")),
+        "dt_bias": ParamDef((H,), jnp.float32, "zeros", axes=("heads",)),
+        "A_log": ParamDef((H,), jnp.float32, "zeros", axes=("heads",)),
+        "D": ParamDef((H,), jnp.float32, "ones", axes=("heads",)),
+        "conv_x": ParamDef((s.conv_width, din), dt, "normal", axes=(None, "ff")),
+        "conv_B": ParamDef((s.conv_width, g * s.state_dim), dt, "normal"),
+        "conv_C": ParamDef((s.conv_width, g * s.state_dim), dt, "normal"),
+        "norm": ParamDef((din,), dt, "zeros", axes=("ff",)),
+        "w_out": ParamDef((din, d), dt, "normal", axes=("ff", "embed")),
+    }
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state (per layer)."""
+    h: jax.Array          # [B, H, P, N] SSM state
+    conv_x: jax.Array     # [B, W-1, din]
+    conv_B: jax.Array     # [B, W-1, g*N]
+    conv_C: jax.Array     # [B, W-1, g*N]
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    s = cfg.ssm
+    din = s.d_inner(cfg.d_model)
+    H = s.nheads(cfg.d_model)
+    W = s.conv_width
+    return SSMState(
+        jnp.zeros((batch, H, s.head_dim, s.state_dim), dtype),
+        jnp.zeros((batch, W - 1, din), dtype),
+        jnp.zeros((batch, W - 1, s.ngroups * s.state_dim), dtype),
+        jnp.zeros((batch, W - 1, s.ngroups * s.state_dim), dtype),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x [B,S,C], w [W,C] -> [B,S,C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    # sum of shifted slices — cheap for W=4, fuses into a few adds
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    S = x.shape[1]
+    for i in range(W):
+        out = out + xp[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a [..., L] -> lower-triangular pairwise sums [..., L, L]."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :] + a[..., None, :] * 0.0
+    # segsum[i,j] = sum_{k=j+1..i} a_k = cs_i - cs_j   (i >= j)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a_dt: jax.Array, B: jax.Array, C: jax.Array,
+                chunk: int, h0: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """SSD scan.  x [b,s,h,p], a_dt [b,s,h] (= dt*A, negative),
+    B,C [b,s,g,n] (g broadcast over heads).  Returns (y [b,s,h,p],
+    final state [b,h,p,n])."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    ac = a_dt.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)     # [b,h,nc,l]
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)                             # [b,nc,l,h,n]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    Lmat = jnp.exp(_segsum(ac))                                  # [b,h,nc,l,l]
+    # intra-chunk (diagonal blocks)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        Ch.astype(jnp.float32), Bh.astype(jnp.float32),
+                        Lmat, xc.astype(jnp.float32))
+    # chunk summary states
+    a_cum = jnp.cumsum(ac, axis=-1)                              # [b,h,nc,l]
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)              # [b,h,nc,l]
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn",
+                        Bh.astype(jnp.float32), decay_states,
+                        xc.astype(jnp.float32))                  # [b,nc,h,p,n]
+    # inter-chunk recurrence (sequential over nc)
+    chunk_decay = jnp.exp(a_cum[..., -1])                        # [b,h,nc]
+
+    def step(hprev, inp):
+        st, dec = inp                                            # [b,h,p,n],[b,h]
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev                                       # emit state *before* chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    st_seq = states.transpose(1, 0, 2, 3, 4)                     # [nc,b,h,p,n]
+    dec_seq = chunk_decay.transpose(2, 0, 1)                     # [nc,b,h]
+    h_final, h_prevs = jax.lax.scan(step, h0, (st_seq, dec_seq))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                   # [b,nc,h,p,n]
+    # inter-chunk contribution
+    state_decay = jnp.exp(a_cum)                                 # [b,h,nc,l]
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp",
+                       Ch.astype(jnp.float32), h_prevs, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, h_final
+
+
+def ssd_sequential(x, a_dt, B, C, h0=None):
+    """O(S) sequential reference (oracle for tests). Same shapes as above."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2)
+    Ch = jnp.repeat(C, rep, axis=2)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hprev, inp):
+        xt, at, Bt, Ct = inp
+        hnew = hprev * jnp.exp(at)[..., None, None] + \
+            jnp.einsum("bhp,bhn->bhpn", xt.astype(jnp.float32),
+                       Bt.astype(jnp.float32))
+        yt = jnp.einsum("bhpn,bhn->bhp", hnew, Ct.astype(jnp.float32))
+        return hnew, yt
+
+    xs = (x.transpose(1, 0, 2, 3), a_dt.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    hf, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), hf
+
+
+def ssm_forward(p: dict, cfg: ArchConfig, u: jax.Array,
+                state: SSMState | None = None, *, mode: str = "train"
+                ) -> tuple[jax.Array, SSMState | None]:
+    """Full Mamba2 block.  u [B,S,d] -> (y [B,S,d], new decode state).
+
+    mode="train"/"prefill": chunked SSD over the sequence (state returned
+    for decode continuation when ``state`` is not None or mode="prefill").
+    mode="decode": recurrent update using ``state`` (S = q_len tokens,
+    processed sequentially — S is 1..4 in practice).
+    """
+    s = cfg.ssm
+    B_, S, d = u.shape
+    din = s.d_inner(d)
+    H = s.nheads(d)
+    P = s.head_dim
+    g, N = s.ngroups, s.state_dim
+
+    z = u @ p["w_z"]
+    xr = u @ p["w_x"]
+    Br = u @ p["w_B"]
+    Cr = u @ p["w_C"]
+    dt_raw = u.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])                  # [B,S,H]
+    A = -jnp.exp(p["A_log"])                                     # [H]
+
+    if mode == "decode":
+        assert state is not None
+        # roll conv states token by token
+        def one(st: SSMState, t):
+            xt, Bt, Ct, dtt = t
+            cx = jnp.concatenate([st.conv_x, xt[:, None]], axis=1)
+            cB = jnp.concatenate([st.conv_B, Bt[:, None]], axis=1)
+            cC = jnp.concatenate([st.conv_C, Ct[:, None]], axis=1)
+            xt = jax.nn.silu(jnp.einsum(
+                "bwc,wc->bc", cx.astype(jnp.float32),
+                p["conv_x"].astype(jnp.float32)))
+            Btc = jax.nn.silu(jnp.einsum(
+                "bwc,wc->bc", cB.astype(jnp.float32),
+                p["conv_B"].astype(jnp.float32)))
+            Ctc = jax.nn.silu(jnp.einsum(
+                "bwc,wc->bc", cC.astype(jnp.float32),
+                p["conv_C"].astype(jnp.float32)))
+            xh = xt.reshape(B_, H, P)
+            Bh = jnp.repeat(Btc.reshape(B_, g, N), H // g, axis=1)
+            Ch = jnp.repeat(Ctc.reshape(B_, g, N), H // g, axis=1)
+            a = jnp.exp(dtt * A)                                 # [B,H]
+            hnew = st.h * a[..., None, None] + jnp.einsum(
+                "bhp,bhn,bh->bhpn", xh, Bh, dtt)
+            yt = jnp.einsum("bhpn,bhn->bhp", hnew, Ch)
+            yt = yt + p["D"][None, :, None] * xh
+            st2 = SSMState(hnew, cx[:, 1:], cB[:, 1:], cC[:, 1:])
+            return st2, yt.reshape(B_, din)
+
+        ts = (xr.transpose(1, 0, 2), Br.transpose(1, 0, 2),
+              Cr.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+        state, ys = jax.lax.scan(one, state, ts)
+        y = ys.transpose(1, 0, 2)
+    else:
+        xc = jax.nn.silu(_causal_conv(xr, p["conv_x"]))
+        Bc = jax.nn.silu(_causal_conv(Br, p["conv_B"]))
+        Cc = jax.nn.silu(_causal_conv(Cr, p["conv_C"]))
+        xh = xc.reshape(B_, S, H, P)
+        xh = shard(xh, "batch", None, "heads", None)
+        Bh = Bc.reshape(B_, S, g, N)
+        Ch = Cc.reshape(B_, S, g, N)
+        a_dt = dt * A                                            # [B,S,H]
+        chunk = min(s.chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a_dt = jnp.pad(a_dt, ((0, 0), (0, pad), (0, 0)))
+            Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        h0 = state.h if state is not None else None
+        y4, hf = ssd_chunked(xh * dt[..., None] if pad == 0 else
+                             xh * jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))[..., None],
+                             a_dt, Bh, Ch, chunk, h0)
+        y4 = y4[:, :S]
+        y4 = y4 + p["D"][None, None, :, None] * xh[:, :S].astype(jnp.float32)
+        y = y4.reshape(B_, S, din).astype(u.dtype)
+        if mode == "prefill" or state is not None:
+            W = s.conv_width
+            tail = lambda r: jnp.pad(r, ((0, 0), (max(0, W - 1 - S), 0), (0, 0))
+                                     )[:, -(W - 1):]
+            state = SSMState(hf, tail(xr), tail(Br), tail(Cr))
+        else:
+            state = None
+
+    # gated RMSNorm + out projection
+    y = L.rmsnorm(p["norm"], y.astype(u.dtype) * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["w_out"], state

@@ -1,0 +1,195 @@
+"""Serving engine: prefill + decode step functions.
+
+Two decode paths:
+
+* **generic** — any arch via ``repro.models.transformer.forward`` (contiguous
+  caches, monolithic attention).
+* **ESS** — DSA+MLA archs with ``cfg.ess.enabled``: unrolled layer loop so
+  every layer's host fetch / Attn0 / Attn1 dependence structure stays
+  visible to the XLA scheduler (DA/DBA overlap, paper §3.3).  Per layer:
+
+    1. ln1 → new latent entry + indexer key appended (device ikeys;
+       host_latent via D2H writeback — Figure 3's small D2H),
+    2. ``ess_sparse_attention`` (fetch → Attn0 ∥ copy → Attn1 → exact merge,
+       LRU admit),
+    3. residual + (dense | MoE) ffn.
+
+Prefill runs the chunked DSA path, scatters the latents to the host tier
+(the PD-disaggregation "Load" arrow in Figure 3) and applies LRU-Warmup.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import latent_cache as LC
+from repro.configs.base import ArchConfig
+from repro.core import lru_pool as LP
+from repro.core import offload, warmup
+from repro.core.overlap import ESSLayerState, ess_sparse_attention
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+from repro.models import mla as M
+from repro.models import moe as MoE
+from repro.models import transformer as T
+
+
+class DecodeOut(NamedTuple):
+    logits: jax.Array
+    caches: Any
+    stats: dict
+
+
+# ---------------------------------------------------------------------------
+# Generic path
+# ---------------------------------------------------------------------------
+
+def generic_prefill(params, cfg: ArchConfig, tokens, positions, **kw):
+    return T.forward(params, cfg, tokens, positions, mode="prefill", **kw)
+
+
+def generic_decode(params, cfg: ArchConfig, tokens, positions, caches, **kw):
+    out = T.forward(params, cfg, tokens, positions, mode="decode",
+                    caches=caches, **kw)
+    return DecodeOut(out.logits, out.caches, {})
+
+
+# ---------------------------------------------------------------------------
+# ESS path (DSA + MLA + offload)
+# ---------------------------------------------------------------------------
+
+def _layer_params(params, cfg: ArchConfig, layer: int):
+    nd = cfg.moe.first_dense_layers if cfg.moe else 0
+    if layer < nd:
+        return jax.tree.map(lambda a: a[layer], params["dense_layers"]), False
+    return jax.tree.map(lambda a: a[layer - nd], params["layers"]), \
+        cfg.moe is not None
+
+
+def _overlap_for_layer(cfg: ArchConfig, layer: int,
+                       layerwise: tuple[str, ...] | None) -> str:
+    if cfg.ess.overlap == "layerwise":
+        if layerwise is not None:
+            return layerwise[layer]
+        return "da"
+    return cfg.ess.overlap
+
+
+def ess_decode(params, cfg: ArchConfig, tokens, positions,
+               caches: LC.ESSCaches, *, use_kernel: bool = False,
+               layerwise_policy: tuple[str, ...] | None = None) -> DecodeOut:
+    """tokens [B,Q] -> logits [B,Q,V].  Q>1 = MTP draft verification."""
+    B, Q = tokens.shape
+    x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    x = shard(x, "batch", None, "embed_act")
+    lens = caches.lens
+    new_lens = lens + Q
+    bi = jnp.arange(B)[:, None]
+    widx = lens[:, None] + jnp.arange(Q)[None, :]                # [B,Q]
+
+    host_latent = caches.host_latent
+    ikeys_all = caches.ikeys
+    pools = caches.pools
+    hits = misses = ovf = jnp.zeros((B,), jnp.int32)
+
+    for layer in range(cfg.num_layers):
+        lp, is_moe = _layer_params(params, cfg, layer)
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+
+        # --- append: indexer key (device) + latent entry (host, D2H) -----
+        new_ik = M.indexer_keys(lp["indexer"], h)                # [B,Q,Di]
+        ik_l = ikeys_all[layer].at[bi, widx].set(
+            new_ik.astype(ikeys_all[layer].dtype), mode="drop")
+        ikeys_all = ikeys_all[:layer] + (ik_l,) + ikeys_all[layer + 1:]
+        new_lat = M.latent_entries(lp["mla"], cfg, h, positions) # [B,Q,D]
+        host_latent = offload.host_scatter_rows(host_latent, widx, new_lat,
+                                                layer=layer)
+
+        # --- ESS sparse attention (fetch ∥ Attn0, Attn1, merge, admit) ---
+        st = ESSLayerState(pools[layer], host_latent, layer)
+        ov = _overlap_for_layer(cfg, layer, layerwise_policy)
+        attn, st2, stats = ess_sparse_attention(
+            lp["mla"], lp["indexer"], cfg, h, positions, st, ik_l, new_lens,
+            overlap=ov, use_kernel=use_kernel)
+        pools = pools[:layer] + (st2.pool,) + pools[layer + 1:]
+        x = x + attn
+
+        # --- ffn ----------------------------------------------------------
+        h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if is_moe:
+            f, _ = MoE.moe_apply(lp["ffn"], cfg, h2)
+        else:
+            f = L.mlp(lp["ffn"], h2, cfg.act)
+        x = x + f
+        hits = hits + stats.hits
+        misses = misses + stats.misses
+        ovf = ovf + stats.overflow
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params.get("unembed", params.get("embed")), x,
+                       cap=cfg.logit_softcap)
+    new_caches = caches._replace(lens=new_lens, host_latent=host_latent,
+                                 ikeys=ikeys_all, pools=pools)
+    return DecodeOut(logits, new_caches,
+                     {"hits": hits, "misses": misses, "overflow": ovf,
+                      "hidden": x})
+
+
+def ess_prefill(params, cfg: ArchConfig, tokens, positions, max_seq: int,
+                *, do_warmup: bool = True, use_kernel: bool = False
+                ) -> tuple[jax.Array, LC.ESSCaches]:
+    """Prefill + LRU-Warmup (paper §3.2).
+
+    The first ``S - W`` tokens run through the chunked DSA prefill; the
+    resulting latents are loaded into the host-tier Total Memory Pool
+    (Figure 3's cross-node "Load").  The last ``W = warmup_windows`` tokens
+    are then replayed as scanned single-token ESS decode steps: each step
+    computes the true indexer Top-2K of its window and LRU-admits the
+    misses — *exactly* "sequentially insert the Top-2K IDs of the last W
+    prefill windows into the LRU cache"."""
+    B, S = tokens.shape
+    W = min(cfg.ess.warmup_windows, S - 1) if do_warmup else 0
+    Sp = S - W
+    out = T.forward(params, cfg, tokens[:, :Sp], positions[:, :Sp],
+                    mode="prefill")
+    mla_c: Any = out.caches["mla"]                     # latent [L,B,Sp,D]
+    caches = LC.init_ess_caches(cfg, B, max_seq, cfg.param_dtype)
+    lens = jnp.full((B,), Sp, jnp.int32)
+
+    lat_pad = jnp.pad(mla_c.latent,
+                      ((0, 0), (0, 0), (0, max_seq - Sp), (0, 0)))
+    ik_pad = jnp.pad(mla_c.ikeys, ((0, 0), (0, 0), (0, max_seq - Sp), (0, 0)))
+    host = offload.to_host(lat_pad.astype(caches.host_latent.dtype),
+                           None, "batch", None, None) \
+        if cfg.ess.offload_kv else lat_pad.astype(caches.host_latent.dtype)
+    ik_dtype = caches.ikeys[0].dtype
+    caches = caches._replace(
+        lens=lens, host_latent=host,
+        ikeys=tuple(ik_pad[l].astype(ik_dtype)
+                    for l in range(cfg.num_layers)))
+    logits = out.logits
+
+    if W > 0:
+        # warmup replays run on the prefill side (bandwidth-rich): use the
+        # exact miss envelope (M = K) so outputs match the monolithic model
+        # bit-for-bit; the steady-state decode envelope stays provisioned
+        # at cfg.ess.max_miss_ratio.
+        import dataclasses
+        cfg_x = dataclasses.replace(
+            cfg, ess=dataclasses.replace(cfg.ess, max_miss_ratio=1.0))
+
+        def step(c, tw):
+            tok, pos = tw                                  # [B], [B]
+            o = ess_decode(params, cfg_x, tok[:, None], pos[:, None], c,
+                           use_kernel=use_kernel)
+            return o.caches, o.logits[:, 0]
+
+        toks_w = tokens[:, Sp:].T                          # [W, B]
+        pos_w = positions[:, Sp:].T
+        caches, lg = jax.lax.scan(step, caches, (toks_w, pos_w))
+        logits = jnp.concatenate([logits, lg.transpose(1, 0, 2)], axis=1)
+    return logits, caches

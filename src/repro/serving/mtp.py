@@ -1,0 +1,112 @@
+"""Multi-Token Prediction speculative decode (paper Table 1: MTP=2/4;
+DeepSeek-V3 MTP modules).
+
+Draft: each depth-k MTP module predicts token t+k+1 from the backbone's
+final hidden and the previous draft's embedding:
+
+    h_k = Block_k( W_proj [ RMSNorm(h_{k-1}) ; RMSNorm(Emb(tok_k)) ] )
+
+(The deployed MTP block includes its own attention over the prefix; here the
+draft head runs position-local — the *verification* pass is always the full
+model, so acceptance is exact w.r.t. the backbone.  Accept-ratio dynamics at
+the paper's settings are modelled byte-accurately in the simulator.)
+
+Verify: one decode step with Q = depth+1 tokens scores all drafts; accepted
+prefix keeps greedy-consistency with the full model; rejected positions are
+rolled back by clamping ``lens`` and invalidating pool entries beyond.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import lru_pool as LP
+from repro.models import layers as L
+from repro.serving.sampling import greedy
+
+
+def mtp_draft(params: dict, cfg: ArchConfig, hidden_last: jax.Array,
+              first_tok: jax.Array) -> jax.Array:
+    """hidden_last [B,d] (post-final-norm at the last accepted position),
+    first_tok [B] (the token just sampled) -> drafts [B, mtp_depth]."""
+    emb_w = params["embed"]
+    head_w = params.get("unembed", params.get("embed"))
+    h = hidden_last
+    tok = first_tok
+    drafts = []
+    for k in range(cfg.mtp_depth):
+        mp = jax.tree.map(lambda a: a[k], params["mtp"])
+        e = L.embed(emb_w, tok).astype(h.dtype)
+        z = jnp.concatenate([L.rmsnorm(mp["ln_h"], h, cfg.norm_eps),
+                             L.rmsnorm(mp["ln_e"], e, cfg.norm_eps)], axis=-1)
+        h = z @ mp["proj"]
+        # position-local block pass: ffn path of the MTP block
+        blk = mp["block"]
+        h2 = L.rmsnorm(blk["ln2"], h, cfg.norm_eps)
+        if "router" in blk["ffn"]:
+            from repro.models import moe as MoE
+            f, _ = MoE.moe_apply(blk["ffn"], cfg, h2[:, None])
+            f = f[:, 0]
+        else:
+            f = L.mlp(blk["ffn"], h2, cfg.act)
+        h = h + f
+        logits = L.unembed(head_w, h, cap=cfg.logit_softcap)
+        tok = greedy(logits)
+        drafts.append(tok)
+    return jnp.stack(drafts, axis=1)
+
+
+class SpecOut(NamedTuple):
+    tokens: jax.Array     # [B, depth+1] verified output tokens
+    n_accepted: jax.Array # [B] tokens actually emitted (1..depth+1)
+    caches: object
+    hidden: jax.Array     # [B, d] hidden at the last accepted position
+
+
+def speculative_step(decode_fn: Callable, params: dict, cfg: ArchConfig,
+                     caches, prev_tok: jax.Array, prev_hidden: jax.Array
+                     ) -> SpecOut:
+    """One MTP speculative round.
+
+    decode_fn(params, cfg, tokens [B,Q], positions [B,Q], caches)
+      -> DecodeOut with stats["hidden"] [B,Q,d].
+    """
+    B = prev_tok.shape[0]
+    depth = cfg.mtp_depth
+    drafts = mtp_draft(params, cfg, prev_hidden, prev_tok)       # [B,depth]
+    q_tokens = jnp.concatenate([prev_tok[:, None], drafts], axis=1)
+    positions = caches.lens[:, None] + jnp.arange(depth + 1)[None, :]
+
+    out = decode_fn(params, cfg, q_tokens, positions, caches)
+    model_next = greedy(out.logits)                              # [B,Q]
+
+    # acceptance: draft[i] accepted iff it equals the model's prediction at
+    # slot i (greedy spec-decode); emitted tokens = model_next[:, :n+1]
+    match = (drafts == model_next[:, :depth])
+    n_acc = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)  # [B]
+    emitted = depth + 1  # fixed-width output; valid prefix = n_acc + 1
+
+    # rollback: the decode pass appended depth+1 entries; keep the accepted
+    # prefix + the bonus token (spec-decode emits n_acc+1 tokens per round)
+    new_caches = out.caches
+    lens_after = new_caches.lens if hasattr(new_caches, "lens") else \
+        new_caches["lens"]
+    corrected = lens_after - (depth + 1) + (n_acc + 1)
+    if hasattr(new_caches, "_replace"):
+        new_caches = new_caches._replace(lens=corrected)
+        if hasattr(new_caches, "pools"):
+            inv = tuple(LP.invalidate_beyond(p_, corrected)
+                        for p_ in new_caches.pools)
+            new_caches = new_caches._replace(pools=inv)
+    else:
+        new_caches = dict(new_caches)
+        new_caches["lens"] = corrected
+
+    hid = out.stats["hidden"]                                    # [B,Q,d]
+    last_idx = jnp.clip(n_acc, 0, depth)
+    hidden = jnp.take_along_axis(hid, last_idx[:, None, None], axis=1)[:, 0]
+    return SpecOut(model_next, n_acc + 1, new_caches, hidden)

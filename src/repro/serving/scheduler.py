@@ -1,0 +1,129 @@
+"""Continuous-batching scheduler (host side).
+
+Manages a fixed pool of decode slots: admission from a request queue,
+completion/eviction, preemption (e.g. elastic down-scale or straggler
+re-balance) with requeue, and the batch-size/memory accounting that the
+paper's analysis revolves around (GPU-memory-feasible batch vs ESS batch).
+
+Deterministic: all decisions derive from (step, queue order), so a restart
+from a checkpointed step replays identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    arrived_step: int = 0
+    generated: int = 0
+    slot: Optional[int] = None
+    finished: bool = False
+    preempted_count: int = 0
+
+
+@dataclasses.dataclass
+class SlotState:
+    rid: int = -1
+    active: bool = False
+    len: int = 0
+
+
+class Scheduler:
+    """Slot-based continuous batching with preemption."""
+
+    def __init__(self, num_slots: int, max_seq: int):
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.slots = [SlotState() for _ in range(num_slots)]
+        self.queue: deque[Request] = deque()
+        self.running: dict[int, Request] = {}
+        self.finished: list[Request] = []
+        self.step = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.arrived_step = self.step
+        self.queue.append(req)
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Fill free slots from the queue; returns [(slot, request)] needing
+        prefill."""
+        admitted = []
+        for i, s in enumerate(self.slots):
+            if s.active or not self.queue:
+                continue
+            req = self.queue.popleft()
+            if req.prompt_len + req.max_new_tokens > self.max_seq:
+                req.finished = True          # reject oversize
+                self.finished.append(req)
+                continue
+            s.rid, s.active, s.len = req.rid, True, req.prompt_len
+            req.slot = i
+            self.running[req.rid] = req
+            admitted.append((i, req))
+        return admitted
+
+    # -- stepping -----------------------------------------------------------
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.active]
+
+    def record_tokens(self, slot_tokens: dict[int, int]) -> list[Request]:
+        """slot -> n tokens emitted this step; returns newly finished."""
+        done = []
+        for i, n in slot_tokens.items():
+            s = self.slots[i]
+            if not s.active:
+                continue
+            req = self.running[s.rid]
+            req.generated += n
+            s.len += n
+            if req.generated >= req.max_new_tokens or s.len >= self.max_seq:
+                req.finished = True
+                done.append(req)
+                self._release(i)
+        self.step += 1
+        return done
+
+    def preempt(self, slot: int) -> None:
+        """Evict a running sequence (node loss / rebalance); it re-queues and
+        will re-prefill on next admission (PD-disaggregation semantics)."""
+        s = self.slots[slot]
+        if not s.active:
+            return
+        req = self.running.pop(s.rid)
+        req.preempted_count += 1
+        req.slot = None
+        self.queue.appendleft(req)
+        s.rid, s.active, s.len = -1, False, 0
+
+    def _release(self, slot: int) -> None:
+        s = self.slots[slot]
+        req = self.running.pop(s.rid, None)
+        if req is not None:
+            self.finished.append(req)
+        s.rid, s.active, s.len = -1, False, 0
+
+    # -- accounting ----------------------------------------------------------
+
+    def occupancy(self) -> float:
+        return sum(s.active for s in self.slots) / max(1, self.num_slots)
+
+
+def feasible_batch_size(hbm_bytes: int, weight_bytes_per_dev: int,
+                        cache_bytes_per_seq: int, activation_slack: float
+                        = 0.9) -> int:
+    """Paper §2.1: GPU memory caps the decode batch.  Returns max B with
+    full cache on device (the 'batch 52' ceiling)."""
+    free = hbm_bytes * activation_slack - weight_bytes_per_dev
+    return max(0, int(free // max(1, cache_bytes_per_seq)))

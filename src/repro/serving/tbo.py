@@ -1,0 +1,57 @@
+"""Two-Batch Overlap (paper Table 1: "Two-Batch Overlap: open").
+
+Splits the decode batch into two independent half-batches executed in one
+jit program with per-layer interleaved program order, so half-A's EP
+all-to-all / host fetches overlap half-B's compute under the XLA scheduler
+(the TPU equivalent of SGLang's TBO dual-stream schedule).
+
+For the ESS engine, DBA overlap (repro.core.overlap) already splits the
+*indexer* within a half; TBO composes with it at the step level.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def two_batch_step(step_fn: Callable, params, cfg, tokens, positions, caches_a,
+                   caches_b):
+    """tokens/positions [B,Q] split evenly; caches pre-split by the engine.
+    Returns (logits [B,Q,V], caches_a', caches_b')."""
+    B = tokens.shape[0]
+    h = B // 2
+    out_a = step_fn(params, cfg, tokens[:h], positions[:h], caches_a)
+    out_b = step_fn(params, cfg, tokens[h:], positions[h:], caches_b)
+    logits = jnp.concatenate([out_a.logits, out_b.logits], axis=0)
+    return logits, out_a.caches, out_b.caches
+
+
+def split_caches(caches, half: int):
+    """Split a cache pytree along the batch dim.
+
+    Handles both cache layouts:
+    * ESSCaches — lens [B], host_latent [L,B,S,D] (batch axis 1), ikeys
+      tuple of [B,S,Di], pools tuple of PoolState ([B,...] leaves, scalar
+      step);
+    * dict caches — lens [B], stacked [L,B,...] leaves (batch axis 1).
+    """
+    def cut(lo, hi):
+        if hasattr(caches, "pools"):            # ESSCaches
+            return caches._replace(
+                lens=caches.lens[lo:hi],
+                host_latent=caches.host_latent[:, lo:hi],
+                ikeys=tuple(a[lo:hi] for a in caches.ikeys),
+                pools=tuple(jax.tree.map(
+                    lambda a: a[lo:hi] if a.ndim > 0 else a, p)
+                    for p in caches.pools))
+        def one(a):
+            if a.ndim == 0:
+                return a
+            if a.ndim == 1:
+                return a[lo:hi]
+            return a[:, lo:hi]
+        return jax.tree.map(one, caches)
+    return cut(0, half), cut(half, None)

@@ -1,0 +1,56 @@
+"""Deterministic synthetic LM data pipeline.
+
+Restart-safe by construction: batch ``i`` is a pure function of
+``(seed, i)`` — a preempted job that restores step N resumes with exactly
+the batch it would have seen, no iterator state to checkpoint.  Per-host
+sharding takes ``host_id/num_hosts`` slices so every host touches only its
+addressable part of the global batch (multi-pod data loading).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    # synthetic structure: zipf unigrams + copy spans (so loss can fall)
+    zipf_a: float = 1.2
+    copy_prob: float = 0.3
+
+
+def _zipf_probs(vocab: int, a: float) -> np.ndarray:
+    p = 1.0 / np.arange(1, vocab + 1) ** a
+    return p / p.sum()
+
+
+def make_batch(cfg: DataConfig, step: int, host_id: int = 0,
+               num_hosts: int = 1) -> dict[str, jnp.ndarray]:
+    """Batch for ``step`` (host slice): {"inputs","labels","positions"}."""
+    b_local = cfg.global_batch // num_hosts
+    rng = np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, host_id]))
+    probs = _zipf_probs(cfg.vocab_size, cfg.zipf_a)
+    toks = rng.choice(cfg.vocab_size, size=(b_local, cfg.seq_len + 1),
+                      p=probs).astype(np.int32)
+    # inject copy spans: second half repeats a window from the first half
+    # (gives the model learnable structure -> decreasing loss in examples)
+    for i in range(b_local):
+        if rng.random() < cfg.copy_prob:
+            w = cfg.seq_len // 4
+            src = rng.integers(0, cfg.seq_len // 2 - w)
+            dst = rng.integers(cfg.seq_len // 2, cfg.seq_len + 1 - w)
+            toks[i, dst:dst + w] = toks[i, src:src + w]
+    pos = np.broadcast_to(np.arange(cfg.seq_len, dtype=np.int32),
+                          (b_local, cfg.seq_len))
+    return {"inputs": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+            "positions": jnp.asarray(pos)}

@@ -1,0 +1,126 @@
+"""Per-kernel allclose vs the pure-jnp oracles, over shape/dtype sweeps
+(interpret mode — kernel bodies execute on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.gather_cache import ops as gops
+from repro.kernels.gather_cache import ref as gref
+from repro.kernels.indexer import ops as iops
+from repro.kernels.indexer import ref as iref
+from repro.kernels.sparse_mla import ops as sops
+from repro.kernels.sparse_mla import ref as sref
+from repro.kernels.sparse_mla.sparse_mla import sparse_mla_partial_kernel
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 \
+        else dict(rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+@pytest.mark.parametrize("S,D,M", [(64, 576, 16), (100, 64, 7), (33, 128, 33)])
+def test_gather_rows(dt, S, D, M):
+    cache = jax.random.normal(jax.random.key(0), (S, D), jnp.float32).astype(dt)
+    ids = jax.random.randint(jax.random.key(1), (M,), -3, S)
+    out = gops.gather_rows(cache, ids)
+    ref = jnp.where((ids >= 0)[:, None], gref.gather_rows_ref(cache, ids), 0)
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(ref, np.float32), **tol(dt))
+
+
+@pytest.mark.parametrize("page", [4, 8])
+def test_gather_pages(page):
+    cache = jax.random.normal(jax.random.key(0), (64, 32), jnp.float32)
+    pids = jax.random.randint(jax.random.key(1), (5,), 0, 64 // page)
+    out = gops.gather_pages(cache, pids, page)
+    ref = gref.gather_row_blocks_ref(cache, pids, page)
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+@pytest.mark.parametrize("H,D,K,R,kb", [
+    (16, 576, 128, 512, 128), (12, 96, 100, 64, 32),
+    (4, 64, 17, 32, 8), (128, 576, 256, 512, 128)])
+def test_sparse_mla_partial(dt, H, D, K, R, kb):
+    q = jax.random.normal(jax.random.key(0), (H, D), jnp.float32).astype(dt)
+    rows = jax.random.normal(jax.random.key(1), (K, D), jnp.float32).astype(dt)
+    valid = jax.random.bernoulli(jax.random.key(2), 0.8, (K,))
+    valid = valid.at[0].set(True)  # at least one valid
+    o, m, l = sparse_mla_partial_kernel(q, rows, valid, 0.1, R, kb=kb)
+    ro, rm, rl = sref.sparse_mla_partial_ref(q, rows, valid, 0.1, R)
+    np.testing.assert_allclose(np.array(m), np.array(rm), **tol(dt))
+    np.testing.assert_allclose(np.array(l), np.array(rl), **tol(dt))
+    np.testing.assert_allclose(np.array(o), np.array(ro), **tol(dt))
+
+
+def test_sparse_mla_batched_and_finalize():
+    B, Q, H, D, K, R = 2, 2, 8, 96, 64, 64
+    q = jax.random.normal(jax.random.key(0), (B, Q, H, D), jnp.bfloat16)
+    rows = jax.random.normal(jax.random.key(1), (B, K, D), jnp.bfloat16)
+    valid = jax.random.bernoulli(jax.random.key(2), 0.7, (B, K))
+    valid = valid.at[:, 0].set(True)
+    p = sops.partial_attend(q, rows, valid, 0.125, R)
+    # against dense softmax
+    s = jnp.einsum("bqhd,bkd->bqhk", q.astype(jnp.float32),
+                   rows.astype(jnp.float32)) * 0.125
+    s = jnp.where(valid[:, None, None, :], s, -2e38)
+    w = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bqhk,bkv->bqhv", w, rows[..., :R].astype(jnp.float32))
+    got = p.o / np.maximum(np.array(p.l)[..., None], 1e-30)
+    np.testing.assert_allclose(np.array(got), np.array(ref), rtol=2e-2,
+                               atol=2e-2)
+
+
+def test_fused_gather_attend_matches_dense():
+    B, Q, H, D, K, S, R = 2, 1, 8, 96, 16, 64, 64
+    q = jax.random.normal(jax.random.key(0), (B, Q, H, D), jnp.float32)
+    lat = jax.random.normal(jax.random.key(1), (B, S, D), jnp.float32)
+    ids = jax.random.randint(jax.random.key(2), (B, Q, K), 0, 48)
+    valid_s = jnp.arange(S)[None] < jnp.array([48, 40])[:, None]
+    out = sops.sparse_mla_gather_attend(q, lat, ids, valid_s, 0.1, R)
+    gl = jnp.take_along_axis(lat[:, None], ids[..., None], axis=2)
+    gv = jnp.take_along_axis(jnp.broadcast_to(valid_s[:, None], (B, Q, S)),
+                             ids, axis=2)
+    s = jnp.einsum("bqhd,bqkd->bqhk", q, gl) * 0.1
+    s = jnp.where(gv[:, :, None], s, -2e38)
+    w = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bqhk,bqkv->bqhv", w, gl[..., :R])
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+@pytest.mark.parametrize("Hi,Di,S", [(64, 128, 300), (10, 48, 64),
+                                     (4, 32, 1000)])
+def test_indexer_scores(dt, Hi, Di, S):
+    B, Q = 2, 3
+    q = jax.random.normal(jax.random.key(0), (B, Q, Hi, Di),
+                          jnp.float32).astype(dt)
+    w = jax.random.normal(jax.random.key(1), (B, Q, Hi),
+                          jnp.float32).astype(dt)
+    keys = jax.random.normal(jax.random.key(2), (B, S, Di),
+                             jnp.float32).astype(dt)
+    valid = jnp.arange(S)[None, :] < jnp.array([S, S // 2])[:, None]
+    sc = iops.indexer_scores(q, w, keys, valid)
+    ref = jax.vmap(lambda q1, w1, k1, v1: jax.vmap(
+        lambda q2, w2: iref.indexer_scores_ref(q2, w2, k1, v1))(q1, w1))(
+        q, w, keys, valid)
+    mask = np.array(ref) > -1e37
+    np.testing.assert_allclose(np.array(sc)[mask], np.array(ref)[mask],
+                               **tol(dt))
+    assert bool(((np.array(sc) <= -1e37) == ~mask).all())
+
+
+def test_indexer_topk_selects_valid_only():
+    B, Q, Hi, Di, S = 1, 1, 4, 16, 50
+    q = jax.random.normal(jax.random.key(0), (B, Q, Hi, Di))
+    w = jnp.abs(jax.random.normal(jax.random.key(1), (B, Q, Hi)))
+    keys = jax.random.normal(jax.random.key(2), (B, S, Di))
+    valid = jnp.arange(S)[None, :] < 30
+    _, ids = iops.topk_select(q, w, keys, valid, k=8)
+    assert int(np.array(ids).max()) < 30

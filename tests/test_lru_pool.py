@@ -1,0 +1,171 @@
+"""Property tests (hypothesis) for the LRU Sparse Memory Pool invariants."""
+
+import hypothesis as hp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lru_pool as LP
+
+
+def mk_pool(B=2, P=8, S=32, D=4):
+    return LP.init_pool(B, P, S, D, jnp.float32)
+
+
+def ref_lru(requests, P):
+    """Python-dict LRU oracle: returns miss count per step."""
+    slot = {}
+    last = {}
+    step = 0
+    misses = []
+    for req in requests:
+        miss = [r for r in req if r not in slot]
+        for r in req:
+            if r in slot:
+                last[r] = step
+        # evict coldest for each miss
+        for r in miss:
+            if len(slot) >= P:
+                coldest = min(slot, key=lambda k: last[k])
+                del slot[coldest]
+                del last[coldest]
+            slot[r] = True
+            last[r] = step
+        misses.append(len(miss))
+        step += 1
+    return misses
+
+
+@hp.given(st.lists(st.integers(0, 31), min_size=1, max_size=24),
+          st.integers(4, 16))
+@hp.settings(max_examples=30, deadline=None)
+def test_lru_miss_counts_match_oracle_single_id(stream, P):
+    """One id per step -> unique LRU stamps -> tie-free, exact oracle."""
+    B, S, D = 1, 32, 4
+    pool = LP.init_pool(B, P, S, D, jnp.float32)
+    got = []
+    for r in stream:
+        ids = jnp.array([[r]], jnp.int32)
+        pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=1)
+        pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 1, D)))
+        pool = LP.tick(pool)
+        got.append(int(stats.misses[0]))
+    assert got == ref_lru([[r] for r in stream], P)
+
+
+@hp.given(st.lists(st.lists(st.integers(0, 31), min_size=1, max_size=6,
+                            unique=True), min_size=1, max_size=10),
+          st.integers(8, 16))
+@hp.settings(max_examples=30, deadline=None)
+def test_lru_guarantee_batched(reqs, P):
+    """Batched admissions share an LRU stamp, so tie-breaking is free —
+    but the LRU *guarantee* must hold: an entry can only miss if, since
+    its last access, at least P distinct (possibly tied) other ids were
+    accessed."""
+    B, S, D = 1, 32, 4
+    pool = LP.init_pool(B, P, S, D, jnp.float32)
+    last_access: dict[int, int] = {}
+    history: list[set] = []
+    for t, req in enumerate(reqs):
+        ids = jnp.full((1, 6), -1, jnp.int32).at[0, :len(req)].set(
+            jnp.array(req, jnp.int32))
+        pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=6)
+        missed = set(int(i) for i in np.array(lk.miss_ids[0]) if i >= 0)
+        for r in req:
+            if r in missed and r in last_access:
+                t0 = last_access[r]
+                others = set()
+                for tt in range(t0, t + 1):
+                    others |= (history[tt] if tt < len(history) else
+                               set(req)) - {r}
+                assert len(others) >= P, (
+                    f"id {r} evicted although only {len(others)} < {P} "
+                    f"other ids were accessed since step {t0}")
+        history.append(set(req))
+        for r in req:
+            last_access[r] = t
+        pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 6, D)))
+        pool = LP.tick(pool)
+
+
+@hp.given(st.lists(st.lists(st.integers(0, 31), min_size=1, max_size=5,
+                            unique=True), min_size=1, max_size=8))
+@hp.settings(max_examples=30, deadline=None)
+def test_pool_invariants(reqs):
+    """forward map consistency: slot_of[id] == p  =>  ids[p] == id."""
+    pool = mk_pool()
+    for req in reqs:
+        ids = jnp.full((2, 5), -1, jnp.int32)
+        ids = ids.at[0, :len(req)].set(jnp.array(req, jnp.int32))
+        ids = ids.at[1, :len(req)].set(jnp.array(req, jnp.int32))
+        pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=5)
+        rows = jnp.ones((2, 5, 4))
+        pool = LP.admit(pool, lk.miss_ids, rows)
+        pool = LP.tick(pool)
+        so = np.array(pool.slot_of)
+        pids = np.array(pool.ids)
+        for b in range(2):
+            for pos in range(so.shape[1]):
+                if so[b, pos] >= 0:
+                    assert pids[b, so[b, pos]] == pos
+            # every valid slot's id maps back (no dangling forward entries)
+            for p_ in range(pids.shape[1]):
+                if pids[b, p_] >= 0:
+                    assert so[b, pids[b, p_]] == p_
+
+
+def test_lookup_marks_hits_and_packs_misses():
+    pool = mk_pool(B=1)
+    ids = jnp.array([[3, 5, 7, -1]], jnp.int32)
+    pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=4)
+    assert int(stats.misses[0]) == 3
+    np.testing.assert_array_equal(np.array(lk.miss_ids[0, :3]), [3, 5, 7])
+    rows = jnp.arange(4 * 4, dtype=jnp.float32).reshape(1, 4, 4)
+    pool = LP.admit(pool, lk.miss_ids, rows)
+    pool = LP.tick(pool)
+    # second lookup: all hits, data returned matches admitted rows
+    pool, lk2, st2 = LP.lookup(pool, ids, ids >= 0, max_misses=4)
+    assert int(st2.misses[0]) == 0
+    got, _ = LP.gather_resident(pool, lk2.slot, lk2.hit)
+    np.testing.assert_allclose(np.array(got[0, 0]), np.array(rows[0, 0]))
+
+
+def test_miss_envelope_overflow_drops_lowest_priority():
+    pool = mk_pool(B=1, P=8)
+    ids = jnp.array([[1, 2, 3, 4, 5]], jnp.int32)   # 5 misses, envelope 3
+    pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=3)
+    assert int(stats.overflow[0]) == 2
+    # packed misses are the FIRST (highest-score) requests
+    np.testing.assert_array_equal(np.array(lk.miss_ids[0]), [1, 2, 3])
+
+
+def test_invalidate_beyond_removes_stale_entries():
+    pool = mk_pool(B=1, P=8)
+    ids = jnp.array([[2, 9, 14]], jnp.int32)
+    pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=3)
+    pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 3, 4)))
+    pool = LP.invalidate_beyond(pool, jnp.array([10]))
+    so = np.array(pool.slot_of[0])
+    assert so[2] >= 0 and so[9] >= 0
+    assert so[14] == -1
+    assert 14 not in np.array(pool.ids[0])
+
+
+def test_protected_slots_not_evicted():
+    pool = mk_pool(B=1, P=4)
+    ids = jnp.array([[0, 1, 2, 3]], jnp.int32)
+    pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=4)
+    pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 4, 4)))
+    pool = LP.tick(pool)
+    # request 2 new ids while protecting slots of ids 0,1
+    prot = jnp.array([[0, 1]], jnp.int32)
+    slot_prot = jnp.take_along_axis(pool.slot_of, prot, axis=1)
+    ids2 = jnp.array([[10, 11]], jnp.int32)
+    pool, lk2, _ = LP.lookup(pool, ids2, ids2 >= 0, max_misses=2)
+    pool = LP.admit(pool, lk2.miss_ids, jnp.ones((1, 2, 4)),
+                    protect_slots=slot_prot)
+    so = np.array(pool.slot_of[0])
+    assert so[0] >= 0 and so[1] >= 0          # protected survived
+    assert so[10] >= 0 and so[11] >= 0        # admitted

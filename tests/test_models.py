@@ -1,0 +1,163 @@
+"""Per-arch smoke tests: reduced configs of every assigned family run one
+train forward + prefill/decode consistency on CPU, asserting shapes + no
+NaNs (instructions: FULL configs are exercised only via the dry-run)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.params import count_params, init_params
+
+SMOKES = ["qwen3-0.6b-smoke", "gemma2-27b-smoke", "gemma3-27b-smoke",
+          "qwen1.5-110b-smoke", "dbrx-132b-smoke", "deepseek-v3-671b-smoke",
+          "mamba2-780m-smoke", "zamba2-7b-smoke", "qwen2-vl-7b-smoke",
+          "whisper-large-v3-smoke", "deepseek-v32-exp-ess-smoke"]
+
+
+def _inputs(cfg, B, S, key):
+    kw = {}
+    if cfg.embedding_inputs and cfg.family != "audio":
+        inputs = jax.random.normal(key, (B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.family == "audio":
+        kw["enc_inputs"] = jax.random.normal(
+            jax.random.key(9), (B, cfg.encdec.encoder_seq, cfg.d_model),
+            jnp.bfloat16)
+    if cfg.mrope_sections is not None:
+        kw["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, :, None], (B, S, 3))
+    return inputs, kw
+
+
+@pytest.mark.parametrize("name", SMOKES)
+def test_train_forward_shapes_no_nan(name):
+    cfg = get_config(name)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    B, S = 2, 32
+    inputs, kw = _inputs(cfg, B, S, jax.random.key(1))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out = T.forward(params, cfg, inputs, pos, mode="train", **kw)
+    assert out.logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(out.logits).any())
+
+
+@pytest.mark.parametrize("name", [n for n in SMOKES
+                                  if n != "deepseek-v32-exp-ess-smoke"])
+def test_prefill_decode_consistent_with_train(name):
+    cfg = get_config(name)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    B, S, Smax = 2, 16, 24
+    inputs, kw = _inputs(cfg, B, S + 1, jax.random.key(1))
+    pos = jnp.broadcast_to(jnp.arange(S + 1)[None], (B, S + 1))
+    ref = T.forward(params, cfg, inputs, pos, mode="train", **kw).logits[:, -1]
+
+    first = inputs[:, :S]
+    if "mrope_positions" in kw:
+        kw = dict(kw)
+        kw["mrope_positions"] = kw["mrope_positions"][:, :S]
+    pf = T.forward(params, cfg, first, pos[:, :S], mode="prefill", **kw)
+    caches = pf.caches
+
+    def pad_seq(x):
+        if x.ndim >= 3 and x.shape[2] == S:
+            padc = [(0, 0)] * x.ndim
+            padc[2] = (0, Smax - S)
+            return jnp.pad(x, padc)
+        return x
+
+    for k in ["kv", "mla", "shared_kv"]:
+        if caches is not None and k in caches:
+            caches[k] = jax.tree.map(pad_seq, caches[k])
+    kw.pop("mrope_positions", None)
+    dec = T.forward(params, cfg, inputs[:, S:S + 1], pos[:, S:S + 1],
+                    mode="decode", caches=caches, **kw)
+    err = float(jnp.max(jnp.abs(dec.logits[:, -1] - ref)))
+    scale = float(jnp.max(jnp.abs(ref)))
+    assert err < 2e-2 + 2e-2 * scale, (name, err, scale)
+
+
+def test_full_config_param_counts():
+    """Exact full configs instantiate abstractly with plausible sizes."""
+    expect = {"qwen3-0.6b": (0.4e9, 1.2e9),
+              "qwen1.5-110b": (95e9, 125e9),
+              "gemma2-27b": (22e9, 32e9),
+              "gemma3-27b": (22e9, 32e9),
+              "dbrx-132b": (115e9, 145e9),
+              "deepseek-v3-671b": (600e9, 720e9),
+              "qwen2-vl-7b": (6e9, 9e9),
+              "mamba2-780m": (0.6e9, 1.0e9),
+              "zamba2-7b": (6e9, 9e9),
+              "whisper-large-v3": (1.2e9, 2.2e9)}
+    for name, (lo, hi) in expect.items():
+        cfg = get_config(name)
+        n = count_params(T.model_def(cfg))
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_sliding_window_masks_differ():
+    """gemma2 local layers must not attend beyond the window."""
+    cfg = get_config("gemma2-27b-smoke")
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    B, S = 1, 32
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    base = T.forward(params, cfg, toks, pos, mode="train").logits
+    # perturb a token far outside the window (w=16) of the last position
+    toks2 = toks.at[0, 2].set((toks[0, 2] + 1) % cfg.vocab_size)
+    pert = T.forward(params, cfg, toks2, pos, mode="train").logits
+    # last-position logits DO change (global layers see everything)
+    assert float(jnp.abs(pert[0, -1] - base[0, -1]).max()) > 0
+    # but early positions before the perturbed token are identical (causal)
+    np.testing.assert_allclose(np.array(pert[0, 1]), np.array(base[0, 1]))
+
+
+def test_mamba2_chunked_matches_sequential():
+    from repro.models import ssm as S
+    b, s, h, p, n = 2, 64, 4, 8, 16
+    x = jax.random.normal(jax.random.key(0), (b, s, h, p))
+    a_dt = -jnp.abs(jax.random.normal(jax.random.key(1), (b, s, h))) * 0.1
+    B_ = jax.random.normal(jax.random.key(2), (b, s, 1, n))
+    C_ = jax.random.normal(jax.random.key(3), (b, s, 1, n))
+    y1, h1 = S.ssd_chunked(x, a_dt, B_, C_, chunk=16)
+    y2, h2 = S.ssd_sequential(x, a_dt, B_, C_)
+    np.testing.assert_allclose(np.array(y1), np.array(y2), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.array(h1), np.array(h2), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_moe_routing_invariants():
+    from repro.models import moe as MoE
+    cfg = get_config("dbrx-132b-smoke")
+    p = init_params(jax.random.key(0), MoE.moe_def(cfg))
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model),
+                          jnp.float32) * 0.5
+    y, aux = MoE.moe_apply(p, cfg, x, train=True)
+    assert y.shape == x.shape
+    assert not bool(jnp.isnan(y).any())
+    assert 0.0 <= float(aux.dropped_fraction) < 1.0
+    # capacity 0 tokens would all drop; generous capacity drops none
+    import dataclasses
+    cfg_big = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    _, aux2 = MoE.moe_apply(p, cfg_big, x, train=True)
+    assert float(aux2.dropped_fraction) == 0.0
+
+
+def test_deepseek_router_bias_selection_only():
+    """Aux-loss-free bias shifts selection but not combine weights."""
+    from repro.models import moe as MoE
+    cfg = get_config("deepseek-v3-671b-smoke")
+    p = init_params(jax.random.key(0), MoE.moe_def(cfg))
+    x = jax.random.normal(jax.random.key(1), (1, 8, cfg.d_model)) * 0.5
+    y1, _ = MoE.moe_apply(p, cfg, x)
+    # huge bias on expert 0 -> it gets selected everywhere
+    p2 = dict(p)
+    p2["router_bias"] = p["router_bias"] + jnp.array(
+        [1e3] + [0.0] * (cfg.moe.num_experts - 1))
+    y2, _ = MoE.moe_apply(p2, cfg, x)
+    assert float(jnp.abs(y1 - y2).max()) > 0   # selection changed

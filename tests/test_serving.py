@@ -1,0 +1,139 @@
+"""Serving layer: scheduler, MTP speculative rollback, paged KV, TBO."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import kv_cache as KV
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving import engine as E
+from repro.serving import mtp as MTP
+from repro.serving.sampling import greedy, sample
+from repro.serving.scheduler import Request, Scheduler, feasible_batch_size
+
+
+def test_scheduler_admission_completion_preemption():
+    s = Scheduler(num_slots=2, max_seq=64)
+    for i in range(3):
+        s.submit(Request(rid=i, prompt_len=8,
+                         max_new_tokens=4 if i == 0 else 16))
+    admitted = s.admit()
+    assert [r.rid for _, r in admitted] == [0, 1]
+    assert s.occupancy() == 1.0
+    # finish slot 0 (4 tokens)
+    for _ in range(4):
+        done = s.record_tokens({0: 1, 1: 1})
+    assert any(r.rid == 0 for r in done)
+    # slot freed; request 2 admitted next round
+    admitted2 = s.admit()
+    assert [r.rid for _, r in admitted2] == [2]
+    # preempt slot 1 -> its request requeues at the FRONT
+    s.preempt(1)
+    assert s.queue[0].rid == 1
+    assert s.queue[0].preempted_count == 1
+
+
+def test_scheduler_rejects_oversize():
+    s = Scheduler(num_slots=1, max_seq=16)
+    s.submit(Request(rid=0, prompt_len=20, max_new_tokens=4))
+    assert s.admit() == []
+    assert s.finished[0].rid == 0
+
+
+def test_feasible_batch_size_formula():
+    b = feasible_batch_size(hbm_bytes=80_000_000_000,
+                            weight_bytes_per_dev=41_000_000_000,
+                            cache_bytes_per_seq=600_000_000)
+    assert 40 <= b <= 60   # the paper's ~52 regime
+
+
+def test_paged_kv_append_and_gather():
+    kv = KV.init_paged(npages=16, page=4, kv_heads=2, head_dim=8, batch=2,
+                       max_blocks=4, dtype=jnp.float32)
+    ks, vs = [], []
+    for t in range(6):
+        k = jax.random.normal(jax.random.key(t), (2, 2, 8))
+        v = k + 1
+        kv = KV.append_token(kv, k, v)
+        ks.append(k)
+    kk, vv, valid = KV.gather_kv(kv, max_seq=8)
+    assert kk.shape == (2, 8, 2, 8)
+    np.testing.assert_array_equal(np.array(valid[:, :6]), True)
+    np.testing.assert_array_equal(np.array(valid[:, 6:]), False)
+    for t in range(6):
+        np.testing.assert_allclose(np.array(kk[:, t]), np.array(ks[t]),
+                                   rtol=1e-6)
+    kv2 = KV.release_sequence(kv, 0)
+    assert int(kv2.lens[0]) == 0 and int(kv2.lens[1]) == 6
+
+
+def test_mtp_speculative_rollback_semantics():
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    cfg = dataclasses.replace(
+        cfg, ess=dataclasses.replace(cfg.ess, max_miss_ratio=1.0))
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    B, S, Smax = 2, 16, 48
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    logits, caches = E.ess_prefill(params, cfg, toks, pos, Smax,
+                                   do_warmup=False)
+    tok = greedy(logits[:, -1])
+    out = E.ess_decode(params, cfg, tok[:, None], caches.lens[:, None],
+                       caches)
+    hidden = out.stats["hidden"][:, -1]
+    caches = out.caches
+    tok = greedy(out.logits[:, -1])
+    lens_before = np.array(caches.lens)
+
+    def dec_fn(p_, c_, t_, po_, ca_):
+        return E.ess_decode(p_, c_, t_, po_, ca_)
+
+    spec = MTP.speculative_step(dec_fn, params, cfg, caches, tok, hidden)
+    n = np.array(spec.n_accepted)
+    assert ((1 <= n) & (n <= cfg.mtp_depth + 1)).all()
+    np.testing.assert_array_equal(np.array(spec.caches.lens),
+                                  lens_before + n)
+    # pool must hold no entries at positions >= lens (rollback invalidation)
+    for pool in spec.caches.pools:
+        ids = np.array(pool.ids)
+        lens = np.array(spec.caches.lens)
+        for b in range(B):
+            assert (ids[b][ids[b] >= 0] < lens[b]).all()
+
+
+def test_sampling_greedy_and_temperature():
+    logits = jnp.array([[0.1, 3.0, -1.0]])
+    assert int(greedy(logits)[0]) == 1
+    assert int(sample(jax.random.key(0), logits, temperature=0.0)[0]) == 1
+    t = sample(jax.random.key(0), logits, temperature=1.0, top_k=2)
+    assert int(t[0]) in (0, 1)
+
+
+def test_two_batch_overlap_split_merge():
+    from repro.serving.tbo import split_caches, two_batch_step
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    cfg = dataclasses.replace(
+        cfg, ess=dataclasses.replace(cfg.ess, max_miss_ratio=1.0))
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    B, S, Smax = 2, 12, 32
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    _, caches = E.ess_prefill(params, cfg, toks, pos, Smax, do_warmup=False)
+    nxt = jax.random.randint(jax.random.key(2), (B, 1), 0, cfg.vocab_size)
+
+    ref = E.ess_decode(params, cfg, nxt, caches.lens[:, None], caches)
+
+    ca, cb = split_caches(caches, 1)
+
+    def step_fn(p_, c_, t_, po_, ch_):
+        return E.ess_decode(p_, c_, t_, po_, ch_)
+
+    logits, ca2, cb2 = two_batch_step(step_fn, params, cfg, nxt,
+                                      caches.lens[:, None], ca, cb)
+    np.testing.assert_allclose(np.array(logits), np.array(ref.logits),
+                               atol=2e-2)

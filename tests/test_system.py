@@ -1,0 +1,96 @@
+"""End-to-end behaviour of the paper's system: ESS serving loop produces
+the same greedy continuation as the monolithic model, with decreasing miss
+counts (temporal locality, paper §2.2) — plus the layer-wise overlap
+policy (paper §3.3)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.policy import (OverlapCosts, choose_layerwise, dba_threshold,
+                               exposed_da, exposed_dba)
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving import engine as E
+from repro.serving.sampling import greedy
+
+
+def test_ess_greedy_continuation_matches_monolithic():
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    cfg = dataclasses.replace(
+        cfg, ess=dataclasses.replace(cfg.ess, max_miss_ratio=1.0))
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    B, S, Smax, NEW = 2, 20, 48, 5
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    # --- monolithic greedy continuation ------------------------------------
+    pf = T.forward(params, cfg, toks, pos, mode="prefill")
+    cm = pf.caches
+    cm["mla"] = jax.tree.map(
+        lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, Smax - S), (0, 0))),
+        cm["mla"])
+    tok_m = greedy(pf.logits[:, -1])
+    mono = [np.array(tok_m)]
+    caches_m = cm
+    for i in range(NEW - 1):
+        o = T.forward(params, cfg, tok_m[:, None],
+                      caches_m["lens"][:, None], mode="decode",
+                      caches=caches_m)
+        caches_m = o.caches
+        tok_m = greedy(o.logits[:, -1])
+        mono.append(np.array(tok_m))
+
+    # --- ESS greedy continuation -------------------------------------------
+    lg, caches = E.ess_prefill(params, cfg, toks, pos, Smax, do_warmup=False)
+    tok = greedy(lg[:, -1])
+    ess = [np.array(tok)]
+    miss_hist = []
+    for i in range(NEW - 1):
+        o = E.ess_decode(params, cfg, tok[:, None], caches.lens[:, None],
+                         caches)
+        caches = o.caches
+        tok = greedy(o.logits[:, -1])
+        ess.append(np.array(tok))
+        miss_hist.append(int(np.array(o.stats["misses"]).sum()))
+
+    np.testing.assert_array_equal(np.stack(mono), np.stack(ess))
+    # temporal locality: later steps miss less than the first
+    assert miss_hist[-1] <= miss_hist[0]
+
+
+def test_layerwise_policy_picks_dba_for_heavy_layers():
+    # block_bytes folds the per-GPU batch (160 seqs x 656 B per miss)
+    c = OverlapCosts(t_attn0=3e-4, t_preattn=2e-4, t_indexer=8e-4,
+                     t_split_overhead=5e-5, fetch_bw=37e9,
+                     block_bytes=656 * 160)
+    thr = dba_threshold(c)
+    assert 0 < thr < 4096
+    # below threshold DA, above DBA
+    profile = np.array([thr // 2, thr * 2, 16, 4000])
+    plan = choose_layerwise(profile, c)
+    assert plan == ["da", "dba", "da", "dba"]
+    # exposed time monotonicity
+    assert exposed_da(c, 0) == 0.0
+    assert exposed_dba(c, 4096) < exposed_da(c, 4096) + c.t_split_overhead
+
+
+def test_ess_decode_with_kernels_matches_jnp_path():
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    cfg = dataclasses.replace(
+        cfg, ess=dataclasses.replace(cfg.ess, max_miss_ratio=1.0))
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    B, S, Smax = 2, 16, 32
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    _, caches = E.ess_prefill(params, cfg, toks, pos, Smax, do_warmup=False)
+    nxt = jax.random.randint(jax.random.key(2), (B, 1), 0, cfg.vocab_size)
+    o_jnp = E.ess_decode(params, cfg, nxt, caches.lens[:, None], caches,
+                         use_kernel=False)
+    o_krn = E.ess_decode(params, cfg, nxt, caches.lens[:, None], caches,
+                         use_kernel=True)
+    np.testing.assert_allclose(np.array(o_krn.logits),
+                               np.array(o_jnp.logits), atol=3e-2)
