@@ -1,0 +1,14 @@
+# Tier-1 verify: the exact command from ROADMAP.md.
+.PHONY: test test-full bench-serve example-serve
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+
+test-full:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -q
+
+bench-serve:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/serve_bench.py
+
+example-serve:
+	python examples/serve_ess.py

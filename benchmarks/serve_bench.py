@@ -1,0 +1,136 @@
+"""Macro serve benchmark — throughput trajectory through the paged serve loop.
+
+Emits ``BENCH_serve.json`` with tokens/s vs. batch:
+
+* ``simulated_32k`` — DeepSeek-V3.2-Exp at 32K context on the calibrated
+  H800 profile: the batch sweep of the paper's Figure 1, with the ESS rows
+  run through the **paged-transfer model** (page-granular writeback DMA +
+  page-granular host reservations) and the host-side admission ceilings
+  (dense per-slot pin vs. free-page accounting) alongside.
+* ``live_smoke`` — the real ``ServeSession`` continuous-batching loop on
+  the smoke arch at >= 2 batch sizes (CPU wall times; structural numbers,
+  the modelled column carries the 32K-equivalent projection).
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--out BENCH_serve.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+import jax
+
+
+def simulated_trajectory() -> dict:
+    import dataclasses
+
+    from repro.simulator.costmodel import (ServeConfig,
+                                           max_feasible_batch,
+                                           max_host_admission_batch)
+    from repro.simulator.hardware import H800_EP32
+    from repro.simulator.pipeline import throughput_node
+
+    hw = H800_EP32
+    base = ServeConfig(batch_per_gpu=52, context=32768, mtp=2,
+                       accept_ratio=1.7, sparse_memory_ratio=1.0,
+                       offload=False, overlap="layerwise")
+    ess = dataclasses.replace(base, sparse_memory_ratio=0.21, offload=True,
+                              paged_host=True)
+    gpu_cap = max_feasible_batch(hw, base)
+    rows = []
+    for bs in [8, 16, 32, 52, 64, 96, 128, 160]:
+        sc_b = dataclasses.replace(base, batch_per_gpu=bs)
+        sc_e = dataclasses.replace(ess, batch_per_gpu=bs)
+        rows.append({
+            "batch": bs,
+            "baseline_tokens_per_s": round(throughput_node(hw, sc_b), 1),
+            "baseline_feasible_on_gpu": bs <= gpu_cap,
+            "ess_paged_tokens_per_s": round(throughput_node(hw, sc_e), 1),
+        })
+    return {
+        "hardware": hw.name,
+        "context": 32768,
+        "gpu_batch_ceiling_dense": gpu_cap,
+        "host_admission_ceiling_dense": max_host_admission_batch(
+            hw, dataclasses.replace(ess, paged_host=False)),
+        "host_admission_ceiling_paged": max_host_admission_batch(hw, ess),
+        "trajectory": rows,
+    }
+
+
+def live_smoke_trajectory(batches=(2, 4)) -> list[dict]:
+    from repro.cache import latent_cache as LC
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.serving import engine as E
+    from repro.serving.scheduler import Request
+
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    PROMPT, NEW, SMAX = 12, 4, 32
+    rows = []
+    for bs in batches:
+        reqs = [Request(rid=i, prompt_len=PROMPT, max_new_tokens=NEW)
+                for i in range(2 * bs)]        # 2x slots stream through
+        session = E.ServeSession(params, cfg, num_slots=bs, max_seq=SMAX)
+        report = session.run(reqs, max_rounds=100)
+        assert sorted(report.finished_rids) == [r.rid for r in reqs]
+        rows.append({
+            "batch": bs,
+            "requests": len(reqs),
+            "rounds": report.rounds,
+            "decode_tokens": report.decode_tokens,
+            "tokens_per_s": round(report.tokens_per_s, 2),
+            "pages": report.num_pages,
+            "peak_pages_in_use": report.peak_pages_in_use,
+            "page_rows": cfg.ess.host_page_rows,
+            "context_equiv_note":
+                f"smoke arch, max_seq={SMAX}; pool/context and page/context "
+                f"ratios match the 32K cell "
+                f"(sparse_memory_ratio={cfg.ess.sparse_memory_ratio})",
+        })
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--skip-live", action="store_true",
+                    help="simulator trajectory only")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    out = {"simulated_32k": simulated_trajectory()}
+    if not args.skip_live:
+        out["live_smoke"] = live_smoke_trajectory()
+    out["wall_s"] = round(time.time() - t0, 1)
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    sim = out["simulated_32k"]
+    print(f"wrote {args.out} ({out['wall_s']}s)")
+    print(f"  gpu ceiling (dense): {sim['gpu_batch_ceiling_dense']}; "
+          f"host admission ceiling dense/paged: "
+          f"{sim['host_admission_ceiling_dense']}/"
+          f"{sim['host_admission_ceiling_paged']}")
+    for r in sim["trajectory"]:
+        print(f"  bs={r['batch']:4d}  base={r['baseline_tokens_per_s']:9.1f}"
+              f"{'' if r['baseline_feasible_on_gpu'] else ' (infeasible)':13s}"
+              f" ess_paged={r['ess_paged_tokens_per_s']:9.1f} tok/s")
+    for r in out.get("live_smoke", []):
+        print(f"  live bs={r['batch']}: {r['tokens_per_s']} tok/s "
+              f"({r['requests']} reqs, {r['rounds']} rounds, "
+              f"peak pages {r['peak_pages_in_use']}/{r['pages']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,9 +1,11 @@
-"""ESS serving with continuous batching + MTP speculative decode.
+"""ESS serving with continuous batching over the paged host latent-cache.
 
-Drives the offload-centric engine through the scheduler: requests arrive,
-prefill with LRU-Warmup, decode rounds emit tokens (optionally MTP
-speculative), finished sequences leave and new ones take their slots —
-with a mid-run preemption to demonstrate the recovery path.
+Drives ``repro.serving.engine.ServeSession``: more requests than decode
+slots stream through one long-lived decode batch; admission is gated on
+free host pages (the pool is provisioned *below* the dense layout's
+``slots x blocks`` pin, so the gate actually engages); a mid-run preemption
+demonstrates the recovery path — pages return to the allocator and the slot
+gets a full cache reset before its next occupant.
 
     PYTHONPATH=src python examples/serve_ess.py
 """
@@ -13,75 +15,56 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
+from repro.cache import latent_cache as LC
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.models.params import init_params
 from repro.serving import engine as E
-from repro.serving.sampling import greedy
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import Request
 
 
 def main() -> None:
     cfg = get_config("deepseek-v32-exp-ess-smoke")
     params = init_params(jax.random.key(0), T.model_def(cfg))
-    B, SMAX, PROMPT = 2, 96, 24
+    NUM_SLOTS, SMAX = 2, 96
 
-    sched = Scheduler(num_slots=B, max_seq=SMAX)
-    for rid in range(4):
-        sched.submit(Request(rid=rid, prompt_len=PROMPT, max_new_tokens=6))
+    # >= 2x num_slots requests stream through the two decode slots; the
+    # later, longer requests pin 3 pages each so a freed slot has to *wait*
+    # for pages — the admission gate in action.
+    requests = [Request(rid=0, prompt_len=24, max_new_tokens=6),
+                Request(rid=1, prompt_len=24, max_new_tokens=6),
+                Request(rid=2, prompt_len=40, max_new_tokens=8),
+                Request(rid=3, prompt_len=40, max_new_tokens=8),
+                Request(rid=4, prompt_len=40, max_new_tokens=8)]
 
-    # one shared decode batch: slot i <-> batch row i
-    toks = jax.random.randint(jax.random.key(1), (B, PROMPT), 0,
-                              cfg.vocab_size)
-    pos = jnp.broadcast_to(jnp.arange(PROMPT)[None], (B, PROMPT))
-    admitted = sched.admit()
-    print(f"admitted: {[r.rid for _, r in admitted]}")
-    logits, caches = E.ess_prefill(params, cfg, toks, pos, SMAX)
-    tok = greedy(logits[:, -1])
+    # page budget far below the dense pin (2 slots x 6 blocks = 12 pages
+    # would be capacity parity at page_rows=16)
+    num_pages = 5
+    per_req = [LC.pages_for_len(cfg, r.prompt_len + r.max_new_tokens)
+               for r in requests]
+    print(f"slots={NUM_SLOTS} pages={num_pages} (per request: {per_req}, "
+          f"page_rows={cfg.ess.host_page_rows})")
 
-    rounds = 0
-    while sched.running or sched.queue:
-        out = E.ess_decode(params, cfg, tok[:, None], caches.lens[:, None],
-                           caches)
-        caches = out.caches
-        tok = greedy(out.logits[:, -1])
-        done = sched.record_tokens({i: 1 for i in sched.active_slots()})
-        for req in done:
-            print(f"  round {rounds}: request {req.rid} finished "
-                  f"({req.generated} tokens)")
-        if rounds == 2 and sched.slots[1].active:
+    session = E.ServeSession(params, cfg, num_slots=NUM_SLOTS, max_seq=SMAX,
+                             num_host_pages=num_pages)
+
+    def on_round(s: E.ServeSession, rnd: int) -> None:
+        if rnd == 2 and s.sched.slots[1].active:
             print("  round 2: PREEMPTING slot 1 (simulated node loss)")
-            sched.preempt(1)
-            # its cache rows are reset on re-admission (re-prefill)
-            caches = caches._replace(
-                lens=caches.lens.at[1].set(0))
-        newly = sched.admit()
-        for slot, req in newly:
-            print(f"  round {rounds}: request {req.rid} -> slot {slot} "
-                  f"(preempted {req.preempted_count}x), re-prefilling")
-            ntoks = jax.random.randint(jax.random.key(10 + req.rid),
-                                       (1, PROMPT), 0, cfg.vocab_size)
-            lg1, c1 = E.ess_prefill(params, cfg, ntoks, pos[:1], SMAX,
-                                    do_warmup=False)
-            # graft the fresh sequence into the shared batch state
-            caches = caches._replace(
-                lens=caches.lens.at[slot].set(int(c1.lens[0])),
-                host_latent=caches.host_latent.at[:, slot].set(
-                    c1.host_latent[:, 0]),
-                ikeys=tuple(full.at[slot].set(one[0]) for full, one in
-                            zip(caches.ikeys, c1.ikeys)),
-                pools=tuple(jax.tree.map(
-                    lambda f, o: f.at[slot].set(o[0]) if f.ndim > 0 else f,
-                    fp, op) for fp, op in zip(caches.pools, c1.pools)))
-            tok = tok.at[slot].set(greedy(lg1[:, -1])[0])
-        rounds += 1
-        if rounds > 40:
-            break
-    print(f"\nall requests served in {rounds} decode rounds; "
-          f"finished: {[r.rid for r in sched.finished]}")
+            s.preempt(1)
+
+    report = session.run(requests, on_round=on_round)
+    for ev in report.events:
+        print(f"  {ev}")
+    print(f"\nall requests served in {report.rounds} decode rounds; "
+          f"finished: {sorted(report.finished_rids)}")
+    print(f"decode tokens: {report.decode_tokens} "
+          f"({report.tokens_per_s:.1f} tok/s); "
+          f"admissions blocked on pages: {report.admissions_blocked}; "
+          f"peak pages in use: {report.peak_pages_in_use}/{report.num_pages}")
+    assert sorted(report.finished_rids) == [r.rid for r in requests]
+    assert report.admissions_blocked > 0, "page gate never engaged"
 
 
 if __name__ == "__main__":

@@ -2,9 +2,20 @@
 
 Layout (per model):
 
-* ``host_latent [L, B, S, D]`` — the **Total Memory Pool** (paper Fig. 3),
-  pinned host memory.  One buffer; layers index it inside the host
-  computation (updates alias in place).
+* ``host_latent`` — the **Total Memory Pool** (paper Fig. 3), pinned host
+  memory.  Two layouts:
+
+  - **paged** (default when ``cfg.ess.offload_kv``): a *global* page pool
+    ``[L, num_pages, page_rows, D]`` plus per-slot ``block_tables [B, NB]``
+    (page id per block, ``-1`` = unmapped).  Host bytes track actual
+    sequence lengths: a decode slot only pins the pages its block table
+    maps, so serve-loop admission is gated on the free-page count instead
+    of ``B × max_seq`` dense rows (KVDrive-style multi-tier paging).
+  - **dense** (``cfg.ess.paged_host = False`` or no offload): one
+    ``[L, B, max_seq, D]`` buffer, every slot pinning ``max_seq`` rows.
+
+  One buffer either way; layers index it inside the host computation
+  (updates alias in place).
 * ``ikeys``  — tuple of per-layer [B, S, Di] Indexer-Cache buffers, device
   HBM, never offloaded (16.8 % of cache bytes, fully read each step).
   Per-layer leaves (not a stacked array) so each decode layer touches only
@@ -15,7 +26,8 @@ Layout (per model):
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from collections import deque
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,9 +40,14 @@ from repro.distributed import sharding as shd
 
 class ESSCaches(NamedTuple):
     lens: jax.Array                    # [B]
-    host_latent: jax.Array             # [L, B, S, D] (pinned_host w/ mesh)
+    host_latent: jax.Array             # dense [L,B,S,D] | paged [L,NP,R,D]
     ikeys: tuple                       # L x [B, S, Di]
     pools: tuple                       # L x PoolState
+    block_tables: Optional[jax.Array] = None   # [B, NB] int32 (paged only)
+
+    @property
+    def paged(self) -> bool:
+        return self.block_tables is not None
 
 
 def pool_entries(cfg: ArchConfig, max_seq: int) -> int:
@@ -38,15 +55,63 @@ def pool_entries(cfg: ArchConfig, max_seq: int) -> int:
                                cfg.dsa.index_topk, cfg.ess.pool_min_entries)
 
 
+def uses_paged_host(cfg: ArchConfig) -> bool:
+    """Paged host tier is the default for offloaded configs."""
+    return cfg.ess.offload_kv and cfg.ess.paged_host
+
+
+def num_blocks(cfg: ArchConfig, max_seq: int) -> int:
+    R = cfg.ess.host_page_rows
+    return -(-max_seq // R)
+
+
+def pages_for_len(cfg: ArchConfig, n_rows: int) -> int:
+    """Host pages a sequence of ``n_rows`` latent rows pins."""
+    return -(-n_rows // cfg.ess.host_page_rows)
+
+
 def init_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
-                    dtype=jnp.bfloat16) -> ESSCaches:
+                    dtype=jnp.bfloat16, *, num_pages: int | None = None,
+                    map_slots: bool = True) -> ESSCaches:
+    """Build decode caches for ``batch`` slots of up to ``max_seq`` tokens.
+
+    Paged host tier (default with ``cfg.ess.offload_kv``):
+
+    * ``num_pages`` sizes the global pool; default ``batch * NB`` (capacity
+      parity with the dense layout).  A serve loop passes fewer pages and
+      gates admission on the free-page count.
+    * ``map_slots=True`` pre-maps slot ``b`` onto the identity page range
+      ``[b*NB, (b+1)*NB)`` — the drop-in layout for fixed-batch callers.
+      ``map_slots=False`` starts with every block table unmapped; pages are
+      assigned at admission (see :class:`HostPageAllocator` / `map_slot`).
+    """
     Lh = cfg.num_layers
     D = cfg.mla.latent_dim
     Di = cfg.dsa.index_dim
     P = pool_entries(cfg, max_seq)
-    host = jnp.zeros((Lh, batch, max_seq, D), dtype)
-    host = offload.to_host(host, None, "batch", None, None) \
-        if cfg.ess.offload_kv else host
+    paged = uses_paged_host(cfg)
+
+    block_tables = None
+    if paged:
+        R = cfg.ess.host_page_rows
+        NB = num_blocks(cfg, max_seq)
+        NP = batch * NB if num_pages is None else num_pages
+        host = jnp.zeros((Lh, NP, R, D), dtype)
+        host = offload.to_host(host, None, "cache_batch", None, None)
+        if map_slots:
+            if NP < batch * NB:
+                raise ValueError(
+                    f"identity slot mapping needs {batch * NB} pages, "
+                    f"pool has {NP}; pass map_slots=False and admit "
+                    f"through a HostPageAllocator")
+            block_tables = jnp.arange(batch * NB,
+                                      dtype=jnp.int32).reshape(batch, NB)
+        else:
+            block_tables = jnp.full((batch, NB), -1, jnp.int32)
+    else:
+        host = jnp.zeros((Lh, batch, max_seq, D), dtype)
+        host = offload.to_host(host, None, "batch", None, None) \
+            if cfg.ess.offload_kv else host
     return ESSCaches(
         lens=jnp.zeros((batch,), jnp.int32),
         host_latent=host,
@@ -54,7 +119,152 @@ def init_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
                     for _ in range(Lh)),
         pools=tuple(LP.init_pool(batch, P, max_seq, D, dtype)
                     for _ in range(Lh)),
+        block_tables=block_tables,
     )
+
+
+# ---------------------------------------------------------------------------
+# Slot lifecycle (continuous batching)
+# ---------------------------------------------------------------------------
+
+def reset_slot(caches: ESSCaches, slot: int) -> ESSCaches:
+    """Full per-slot cache reset for a recycled decode slot.
+
+    Clears ``lens`` *and* every layer's pool maps (``ids`` / ``last_use`` /
+    ``slot_of``).  Resetting only ``lens`` (the old preemption path) leaves
+    stale pool entries behind: the recycled slot's next occupant would take
+    pool *hits* on another request's latents.  Pool ``data`` rows become
+    unreachable once the maps are cleared, so they are left in place (they
+    are overwritten on admission).
+    """
+    pools = tuple(
+        p._replace(ids=p.ids.at[slot].set(-1),
+                   last_use=p.last_use.at[slot].set(-1),
+                   slot_of=p.slot_of.at[slot].set(-1))
+        for p in caches.pools)
+    return caches._replace(lens=caches.lens.at[slot].set(0), pools=pools)
+
+
+def map_slot(caches: ESSCaches, slot: int,
+             pages: Sequence[int]) -> ESSCaches:
+    """Install a slot's block table from an allocator's page list."""
+    if caches.block_tables is None:
+        return caches
+    NB = caches.block_tables.shape[1]
+    if len(pages) > NB:
+        raise ValueError(f"{len(pages)} pages > {NB} blocks per slot")
+    row = jnp.full((NB,), -1, jnp.int32).at[:len(pages)].set(
+        jnp.asarray(list(pages), jnp.int32))
+    return caches._replace(
+        block_tables=caches.block_tables.at[slot].set(row))
+
+
+def unmap_slot(caches: ESSCaches, slot: int) -> ESSCaches:
+    if caches.block_tables is None:
+        return caches
+    return caches._replace(
+        block_tables=caches.block_tables.at[slot].set(-1))
+
+
+class HostPageAllocator:
+    """Host-side free-list for the global page pool (deterministic FIFO).
+
+    The serve loop owns one of these; admission asks ``can_alloc`` (the
+    free-page gate), maps the returned pages into the slot's block table,
+    and ``release`` returns them when the slot finishes or is preempted.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: deque[int] = deque(range(num_pages))
+        self._owned: dict[int, list[int]] = {}
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, slot: int, n: int) -> list[int]:
+        if not self.can_alloc(n):
+            raise RuntimeError(f"allocator: want {n} pages, "
+                               f"{len(self._free)} free")
+        if slot in self._owned:
+            raise RuntimeError(f"slot {slot} already owns pages")
+        pages = [self._free.popleft() for _ in range(n)]
+        self._owned[slot] = pages
+        return pages
+
+    def release(self, slot: int) -> list[int]:
+        pages = self._owned.pop(slot, [])
+        self._free.extend(pages)
+        return pages
+
+
+# ---------------------------------------------------------------------------
+# Paged <-> packed views
+# ---------------------------------------------------------------------------
+
+def slot_latents(caches: ESSCaches, slot: int, *,
+                 use_kernel: bool = False) -> jax.Array:
+    """All host-tier latent rows of one slot, packed ``[L, NB*R, D]``.
+
+    Paged layout routes through the block table; ``use_kernel=True`` runs
+    the Pallas ``gather_pages`` page-fetch kernel
+    (:mod:`repro.kernels.gather_cache`) — the PagedAttention-style whole-page
+    DMA — instead of the jnp reference.  Rows of unmapped pages are zero.
+    """
+    if caches.block_tables is None:
+        return caches.host_latent[:, slot]
+    Lh, NP, R, D = caches.host_latent.shape
+    bt = caches.block_tables[slot]                       # [NB]
+    NB = bt.shape[0]
+    safe = jnp.clip(bt, 0, NP - 1)
+    if use_kernel:
+        from repro.kernels.gather_cache import ops as gops
+        flat = caches.host_latent.reshape(Lh, NP * R, D)
+        out = gops.gather_pages(flat, jnp.broadcast_to(safe, (Lh, NB)), R)
+    else:
+        out = jnp.take(caches.host_latent, safe, axis=1)  # [L,NB,R,D]
+        out = out.reshape(Lh, NB * R, D)
+    valid = jnp.repeat(bt >= 0, R)                       # [NB*R]
+    return jnp.where(valid[None, :, None], out, 0)
+
+
+def graft_slot(caches: ESSCaches, slot: int, donor: ESSCaches,
+               n_rows: int, *, use_kernel: bool = False) -> ESSCaches:
+    """Copy ``donor``'s sequence 0 (a batch-1 prefill) into ``slot``.
+
+    Writes the first ``n_rows`` host-tier latent rows through the target
+    slot's block table (paged) or batch row (dense), grafts the indexer
+    cache and per-layer pool state, and sets ``lens[slot]``.  The target
+    slot must already be mapped (serve-loop admission maps pages first).
+    """
+    rows = slot_latents(donor, 0, use_kernel=use_kernel)[:, :n_rows]
+    ids = jnp.arange(n_rows, dtype=jnp.int32)[None]      # [1, n]
+    host = offload.host_scatter_rows_stacked(
+        caches.host_latent, ids, rows[:, None], batch_offset=slot,
+        block_table=caches.block_tables)
+
+    def graft_pool(full: LP.PoolState, one: LP.PoolState) -> LP.PoolState:
+        # donor LRU stamps are clamped to the shared pool's clock so the
+        # recycled slot's entries do not look hotter than resident ones
+        lu = jnp.minimum(one.last_use[0], full.step)
+        lu = jnp.where(one.last_use[0] < 0, -1, lu)
+        return full._replace(
+            data=full.data.at[slot].set(one.data[0].astype(full.data.dtype)),
+            ids=full.ids.at[slot].set(one.ids[0]),
+            last_use=full.last_use.at[slot].set(lu),
+            slot_of=full.slot_of.at[slot].set(one.slot_of[0]))
+
+    return caches._replace(
+        lens=caches.lens.at[slot].set(n_rows),
+        host_latent=host,
+        ikeys=tuple(full.at[slot].set(one[0].astype(full.dtype))
+                    for full, one in zip(caches.ikeys, donor.ikeys)),
+        pools=tuple(graft_pool(fp, op)
+                    for fp, op in zip(caches.pools, donor.pools)))
 
 
 def abstract_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
@@ -64,6 +274,7 @@ def abstract_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
     D = cfg.mla.latent_dim
     Di = cfg.dsa.index_dim
     P = pool_entries(cfg, max_seq)
+    paged = uses_paged_host(cfg)
 
     ctx = shd.current()
     # cache shardings are pinned to explicit mesh axes (batch over the data
@@ -88,10 +299,21 @@ def abstract_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
         return jax.ShapeDtypeStruct(
             shape, dt, sharding=jax.sharding.NamedSharding(ctx.mesh, spec))
 
-    host = offload.abstract_host((Lh, batch, max_seq, D), dtype,
-                                 None, "batch", None, None) \
-        if cfg.ess.offload_kv else dev((Lh, batch, max_seq, D), dtype,
-                                       None, "batch", None, None)
+    block_tables = None
+    if paged:
+        R = cfg.ess.host_page_rows
+        NB = num_blocks(cfg, max_seq)
+        # pages laid out batch-major, so sharding the page dim over the data
+        # axes is the paged analogue of batch-sharding the dense tier
+        host = offload.abstract_host((Lh, batch * NB, R, D), dtype,
+                                     None, "cache_batch", None, None)
+        block_tables = dev((batch, NB), jnp.int32, "batch", None)
+    elif cfg.ess.offload_kv:
+        host = offload.abstract_host((Lh, batch, max_seq, D), dtype,
+                                     None, "batch", None, None)
+    else:
+        host = dev((Lh, batch, max_seq, D), dtype,
+                   None, "batch", None, None)
     pool = LP.PoolState(
         data=dev((batch, P, D), dtype, "batch", None, None),
         ids=dev((batch, P), jnp.int32, "batch", None),
@@ -105,4 +327,5 @@ def abstract_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
         ikeys=tuple(dev((batch, max_seq, Di), dtype, "batch", None, None)
                     for _ in range(Lh)),
         pools=tuple(pool for _ in range(Lh)),
+        block_tables=block_tables,
     )

@@ -89,6 +89,12 @@ class ESSOptions:
     overlap: str = "da"                # none | da | dba | layerwise
     offload_kv: bool = True            # host tier for the full cache
     pool_min_entries: int = 6400       # paper: ">= 6.4K" recommendation
+    # paged host tier (KVDrive-style): the offloaded Total Memory Pool is a
+    # global page pool + per-slot block tables instead of a dense
+    # [B, max_seq] allotment, so host bytes track actual sequence lengths
+    # and serve-loop admission is gated on free pages.
+    paged_host: bool = True
+    host_page_rows: int = 16           # latent rows per host page
 
 
 @dataclasses.dataclass(frozen=True)

@@ -55,7 +55,8 @@ def deepseek_v32_exp_ess() -> ArchConfig:
                  # (0.3, 0.25); pool stays >= the paper's 6.4K floor
                  ess=ESSOptions(enabled=True, sparse_memory_ratio=0.25,
                                 max_miss_ratio=0.125, warmup_windows=32,
-                                overlap="layerwise", offload_kv=True))
+                                overlap="layerwise", offload_kv=True,
+                                host_page_rows=64))
 
 
 @register("deepseek-v3-671b-smoke")

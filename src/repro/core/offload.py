@@ -66,25 +66,79 @@ def to_device(x: jax.Array, *axes) -> jax.Array:
     return jax.device_put(x, ctx.sharding(*axes))
 
 
+def _paged_phys(ids: jax.Array, block_table: jax.Array, page_rows: int,
+                num_pages: int, batch_offset: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Translate sequence positions -> physical pool rows via block tables.
+
+    ids [B,M] (sequence positions, -1 padding), block_table [B_total, NB].
+    Returns (phys [B,M] rows into the flat [NP*R, D] pool view,
+    valid [B,M] — in-range *and* mapped)."""
+    B = ids.shape[0]
+    bt = jax.lax.slice_in_dim(block_table, batch_offset, batch_offset + B,
+                              axis=0)
+    cap = bt.shape[1] * page_rows
+    safe = jnp.clip(ids, 0, cap - 1)
+    page = jnp.take_along_axis(bt, safe // page_rows, axis=1)      # [B,M]
+    valid = (ids >= 0) & (ids < cap) & (page >= 0)
+    phys = jnp.clip(page, 0, num_pages - 1) * page_rows + safe % page_rows
+    return phys, valid
+
+
 def host_gather_rows(host_cache: jax.Array, ids: jax.Array, *,
                      layer: int = 0, batch_offset: int = 0,
+                     block_table: jax.Array | None = None,
                      axes_out=("cache_batch", None, None)) -> jax.Array:
-    """FlashTrans fetch: host_cache [B,S,D] or [L,B,S,D] (pinned_host),
-    ids [B,M] (-1 padding) -> rows [B,M,D] on device.
+    """FlashTrans fetch: ids [B,M] (-1 padding) -> rows [B,M,D] on device.
 
-    The gather executes in the host memory space; the (batch, position)
-    index pairs are packed on the *device* and shipped to the host, so the
-    host computation is exactly one ``lax.gather`` — no auxiliary iota or
-    bounds constants can land in the wrong memory space, and the SPMD
-    partitioner keeps everything batch-sharded (verified: zero host-buffer
-    all-gathers).  Only the packed [B,M,D] result is DMA'd to the device —
-    one coalesced transaction instead of M fragmented ones (the FlashTrans
-    effect).
+    Two host-tier layouts:
+
+    * dense — host_cache [B,S,D] or [L,B,S,D] (pinned_host), positions
+      index the slot's own row range;
+    * paged (``block_table`` given) — host_cache [NP,R,D] or [L,NP,R,D]
+      global page pool; positions route through the slot's block table to
+      physical pool rows, unmapped pages read as zero.
+
+    The gather executes in the host memory space; the index pairs are
+    packed on the *device* and shipped to the host, so the host computation
+    is exactly one ``lax.gather`` — no auxiliary iota or bounds constants
+    can land in the wrong memory space, and the SPMD partitioner keeps
+    everything batch-sharded (verified: zero host-buffer all-gathers).
+    Only the packed [B,M,D] result is DMA'd to the device — one coalesced
+    transaction instead of M fragmented ones (the FlashTrans effect).
     """
     ctx = shd.current()
     B, M = ids.shape
-    S = host_cache.shape[-2]
     D = host_cache.shape[-1]
+
+    if block_table is not None:
+        R = host_cache.shape[-2]
+        NP = host_cache.shape[-3]
+        phys, valid = _paged_phys(ids, block_table, R, NP, batch_offset)
+        if ctx is None or ctx.mesh is None:
+            cl = host_cache[layer] if host_cache.ndim == 4 else host_cache
+            rows = jnp.take(cl.reshape(NP * R, D), phys, axis=0)
+            return jnp.where(valid[..., None], rows, 0)
+
+        idx_h = jax.device_put(phys[..., None], host_sharding_for(
+            (B, M, 1), ("cache_batch", None, None)))
+        dn = jax.lax.GatherDimensionNumbers(
+            offset_dims=(2,), collapsed_slice_dims=(0,),
+            start_index_map=(0,))
+
+        @compute_on("device_host")
+        @jax.jit
+        def _gather_paged(c, i):
+            cl = c[layer] if c.ndim == 4 else c
+            return jax.lax.gather(
+                cl.reshape(NP * R, D), i, dn, (1, D),
+                mode=jax.lax.GatherScatterMode.PROMISE_IN_BOUNDS)
+
+        rows = _gather_paged(host_cache, idx_h)
+        rows = jax.device_put(rows, ctx.sharding_for((B, M, D), axes_out))
+        return jnp.where(valid[..., None], rows, 0)
+
+    S = host_cache.shape[-2]
     safe = jnp.clip(ids, 0, S - 1)
     if ctx is None or ctx.mesh is None:
         cl = host_cache[layer] if host_cache.ndim == 4 else host_cache
@@ -114,25 +168,70 @@ def host_gather_rows(host_cache: jax.Array, ids: jax.Array, *,
 
 def host_scatter_rows(host_cache: jax.Array, ids: jax.Array,
                       rows: jax.Array, *, layer: int = 0,
-                      batch_offset: int = 0) -> jax.Array:
+                      batch_offset: int = 0,
+                      block_table: jax.Array | None = None) -> jax.Array:
     """D2H writeback: scatter rows [B,Q,D] into the host cache at ids
     [B,Q] (sequence positions; -1 = masked).  Returns the functionally
     updated full cache (XLA aliases the host buffer in place when the step
     donates its caches).
 
-    Masked rows are handled read-modify-write (rewrite the current value),
-    so no copy of the huge host buffer is ever materialized."""
+    With ``block_table`` the positions route through the paged
+    indirection; writes to unmapped pages are dropped.  Masked rows are
+    otherwise handled read-modify-write (rewrite the current value), so no
+    copy of the huge host buffer is ever materialized."""
     ctx = shd.current()
     B, Q = ids.shape
+
+    if block_table is not None:
+        R = host_cache.shape[-2]
+        NP = host_cache.shape[-3]
+        D = host_cache.shape[-1]
+        phys, valid = _paged_phys(ids, block_table, R, NP, batch_offset)
+        if ctx is None or ctx.mesh is None:
+            cl = host_cache[layer] if host_cache.ndim == 4 else host_cache
+            flat = cl.reshape(NP * R, D)
+            tgt = jnp.where(valid, phys, NP * R)         # OOB -> drop
+            flat2 = flat.at[tgt].set(rows.astype(cl.dtype), mode="drop")
+            cl2 = flat2.reshape(NP, R, D)
+            return (host_cache.at[layer].set(cl2) if host_cache.ndim == 4
+                    else cl2)
+
+        ax2 = host_sharding_for(phys.shape, ("cache_batch", None))
+        phys_h = jax.device_put(phys, ax2)
+        valid_h = jax.device_put(valid, ax2)
+        rows_h = jax.device_put(rows.astype(host_cache.dtype),
+                                host_sharding_for(
+                                    rows.shape, ("cache_batch", None, None)))
+
+        @compute_on("device_host")
+        @jax.jit
+        def _scatter_paged(c, i, v, r):
+            cl = c[layer] if c.ndim == 4 else c
+            flat = cl.reshape(NP * R, D)
+            cur = flat.at[i].get(mode="promise_in_bounds")
+            r2 = jnp.where(v[..., None], r, cur)
+            flat2 = flat.at[i].set(r2, mode="promise_in_bounds")
+            cl2 = flat2.reshape(NP, R, D)
+            if c.ndim == 4:
+                return jax.lax.dynamic_update_slice_in_dim(c, cl2[None],
+                                                           layer, axis=0)
+            return cl2
+
+        return _scatter_paged(host_cache, phys_h, valid_h, rows_h)
+
     S = host_cache.shape[-2]
     valid = ids >= 0
     safe = jnp.clip(ids, 0, S - 1)
     if ctx is None or ctx.mesh is None:
         cl = host_cache[layer] if host_cache.ndim == 4 else host_cache
-        cur = jnp.take_along_axis(cl, safe[..., None], axis=1)
+        cl_s = jax.lax.slice_in_dim(cl, batch_offset, batch_offset + B,
+                                    axis=0)
+        cur = jnp.take_along_axis(cl_s, safe[..., None], axis=1)
         r2 = jnp.where(valid[..., None], rows.astype(cl.dtype), cur)
         bi = jnp.arange(B)[:, None]
-        cl2 = cl.at[bi, safe].set(r2)
+        cl2_s = cl_s.at[bi, safe].set(r2)
+        cl2 = jax.lax.dynamic_update_slice_in_dim(cl, cl2_s, batch_offset,
+                                                  axis=0)
         return (host_cache.at[layer].set(cl2) if host_cache.ndim == 4
                 else cl2)
 
@@ -157,6 +256,43 @@ def host_scatter_rows(host_cache: jax.Array, ids: jax.Array,
         return cl2
 
     return _scatter(host_cache, bi_h, ids_h, valid_h, rows_h)
+
+
+def host_scatter_rows_stacked(host_cache: jax.Array, ids: jax.Array,
+                              rows: jax.Array, *, batch_offset: int = 0,
+                              block_table: jax.Array | None = None
+                              ) -> jax.Array:
+    """Scatter rows [L,B,Q,D] at the *same* positions ids [B,Q] into every
+    layer of a stacked host cache in one pass (admission graft: the target
+    pages are identical per layer, so L separate per-layer scatters would
+    functionally rewrite the full pool L times)."""
+    ctx = shd.current()
+    Lh = host_cache.shape[0]
+    if ctx is not None and ctx.mesh is not None:
+        # mesh path: fall back to the per-layer host-compute scatter
+        out = host_cache
+        for layer in range(Lh):
+            out = host_scatter_rows(out, ids, rows[layer], layer=layer,
+                                    batch_offset=batch_offset,
+                                    block_table=block_table)
+        return out
+    B, Q = ids.shape
+    D = host_cache.shape[-1]
+    if block_table is not None:
+        NP, R = host_cache.shape[1], host_cache.shape[2]
+        phys, valid = _paged_phys(ids, block_table, R, NP, batch_offset)
+        flat = host_cache.reshape(Lh, NP * R, D)
+        tgt = jnp.where(valid, phys, NP * R)             # OOB -> drop
+        flat2 = flat.at[:, tgt].set(
+            rows.astype(host_cache.dtype), mode="drop")
+        return flat2.reshape(Lh, NP, R, D)
+    S = host_cache.shape[-2]
+    valid = (ids >= 0) & (ids < S)
+    bi = jnp.broadcast_to(jnp.arange(B)[:, None] + batch_offset, ids.shape)
+    bi = jnp.where(valid, bi, host_cache.shape[1])       # OOB -> drop
+    safe = jnp.clip(ids, 0, S - 1)
+    return host_cache.at[:, bi, safe].set(
+        rows.astype(host_cache.dtype), mode="drop")
 
 
 def abstract_host(shape, dtype, *axes):

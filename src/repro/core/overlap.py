@@ -36,9 +36,11 @@ NEG_INF = -2.0e38
 
 class ESSLayerState(NamedTuple):
     pool: LP.PoolState         # device-resident sparse memory pool
-    host_latent: jax.Array     # [B,S,D] or full [L,B,S,D] (pinned_host)
-    layer: int = 0             # layer index when host_latent is [L,B,S,D]
+    host_latent: jax.Array     # dense [B,S,D] / [L,B,S,D] or paged page
+                               # pool [NP,R,D] / [L,NP,R,D] (pinned_host)
+    layer: int = 0             # layer index when host_latent is stacked [L,...]
     batch_offset: int = 0      # DBA half-batch offset into the host cache
+    block_table: jax.Array | None = None   # [B_total, NB] paged indirection
 
 
 class ESSStats(NamedTuple):
@@ -119,7 +121,8 @@ def _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
     # ---- issue the H2D fetch as early as possible (DA overlap) ----
     fetched = offload.host_gather_rows(state.host_latent, lk.miss_ids,
                                        layer=state.layer,
-                                       batch_offset=state.batch_offset)
+                                       batch_offset=state.batch_offset,
+                                       block_table=state.block_table)
 
     q_comb = M.absorbed_query(mla_p, cfg, x_norm, positions)     # [B,Q,H,D]
 
@@ -175,9 +178,10 @@ def _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
         pool = LP.PoolState(*(a[sl] if a.ndim > 0 else a
                               for a in state.pool))
         pool = pool._replace(step=state.pool.step)
-        # host cache stays whole; the half indexes it via batch_offset
+        # host cache (and block table) stays whole; the half indexes it
+        # via batch_offset
         return ESSLayerState(pool, state.host_latent, state.layer,
-                             state.batch_offset + off)
+                             state.batch_offset + off, state.block_table)
 
     s0, s1 = half(slice(0, h), 0), half(slice(h, None), h)
     # half-1 indexer + fetch issue
@@ -185,13 +189,15 @@ def _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
         idx_p, cfg, x_norm[:h], s0, idx_keys[:h], lens[:h])
     fetched0 = offload.host_gather_rows(s0.host_latent, lk0.miss_ids,
                                         layer=s0.layer,
-                                        batch_offset=s0.batch_offset)
+                                        batch_offset=s0.batch_offset,
+                                        block_table=s0.block_table)
     # half-2 indexer (independent of fetched0 -> overlaps the copy)
     p1_pool, lk1, st1, ids1, rv1, _, _ = _topk_and_lookup(
         idx_p, cfg, x_norm[h:], s1, idx_keys[h:], lens[h:])
     fetched1 = offload.host_gather_rows(s1.host_latent, lk1.miss_ids,
                                         layer=s1.layer,
-                                        batch_offset=s1.batch_offset)
+                                        batch_offset=s1.batch_offset,
+                                        block_table=s1.block_table)
 
     out0, ns0 = _finish_half(mla_p, cfg, x_norm[:h], positions[:h], p0_pool,
                              lk0, ids0, rv0, fetched0, s0, K, M_env,

@@ -81,11 +81,12 @@ def pipeline_apply(layer_fn: Callable, stacked_params, x: jax.Array,
         final = jax.lax.psum(mine, axis)
         return final.reshape((1, B) + x.shape[1:])
 
+    from repro.distributed.sharding import shard_map_compat
+
     spec_p = jax.tree.map(lambda _: P(axis), stacked_params)
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         stage_program, mesh=mesh,
-        in_specs=(spec_p, P(axis)), out_specs=P(axis),
-        check_vma=False)
+        in_specs=(spec_p, P(axis)), out_specs=P(axis))
     # replicate x to every stage's input slot (stage 0 uses it; others churn)
     xin = jnp.broadcast_to(x[None], (n_stages,) + x.shape)
     return fn(stacked_params, xin)[0]

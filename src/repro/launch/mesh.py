@@ -5,25 +5,47 @@ Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
 
 Functions, not module-level constants — importing this module never touches
 jax device state (the dry-run sets XLA_FLAGS *before* the first jax init).
+
+``make_mesh`` is the version-guarded entry point: newer JAX wants explicit
+``axis_types`` (Auto) for meshes that feed ``shard_map``; JAX <= 0.4.x has
+neither ``jax.sharding.AxisType`` nor the ``axis_types`` kwarg, so the
+helper passes it only when the installed JAX understands it.
 """
 
 from __future__ import annotations
 
+import inspect
+from typing import Sequence
+
 import jax
+
+
+def _axis_types_kwargs(n_axes: int) -> dict:
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    try:
+        if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+            return {}
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **_axis_types_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())
     mp = min(model_parallel, n)
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // mp, mp), ("data", "model"))

@@ -20,8 +20,10 @@ Prefill runs the chunked DSA path, scatters the latents to the host tier
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, NamedTuple
+import time
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +38,8 @@ from repro.models import layers as L
 from repro.models import mla as M
 from repro.models import moe as MoE
 from repro.models import transformer as T
+from repro.serving.sampling import greedy
+from repro.serving.scheduler import Request, Scheduler
 
 
 class DecodeOut(NamedTuple):
@@ -106,11 +110,13 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
             new_ik.astype(ikeys_all[layer].dtype), mode="drop")
         ikeys_all = ikeys_all[:layer] + (ik_l,) + ikeys_all[layer + 1:]
         new_lat = M.latent_entries(lp["mla"], cfg, h, positions) # [B,Q,D]
-        host_latent = offload.host_scatter_rows(host_latent, widx, new_lat,
-                                                layer=layer)
+        host_latent = offload.host_scatter_rows(
+            host_latent, widx, new_lat, layer=layer,
+            block_table=caches.block_tables)
 
         # --- ESS sparse attention (fetch ∥ Attn0, Attn1, merge, admit) ---
-        st = ESSLayerState(pools[layer], host_latent, layer)
+        st = ESSLayerState(pools[layer], host_latent, layer,
+                           block_table=caches.block_tables)
         ov = _overlap_for_layer(cfg, layer, layerwise_policy)
         attn, st2, stats = ess_sparse_attention(
             lp["mla"], lp["indexer"], cfg, h, positions, st, ik_l, new_lens,
@@ -160,12 +166,25 @@ def ess_prefill(params, cfg: ArchConfig, tokens, positions, max_seq: int,
     caches = LC.init_ess_caches(cfg, B, max_seq, cfg.param_dtype)
     lens = jnp.full((B,), Sp, jnp.int32)
 
-    lat_pad = jnp.pad(mla_c.latent,
-                      ((0, 0), (0, 0), (0, max_seq - Sp), (0, 0)))
     ik_pad = jnp.pad(mla_c.ikeys, ((0, 0), (0, 0), (0, max_seq - Sp), (0, 0)))
-    host = offload.to_host(lat_pad.astype(caches.host_latent.dtype),
-                           None, "batch", None, None) \
-        if cfg.ess.offload_kv else lat_pad.astype(caches.host_latent.dtype)
+    if caches.block_tables is not None:
+        # paged host tier: with the identity slot mapping of init_ess_caches
+        # (page j of slot b = b*NB + j, pages batch-major) the page pool's
+        # flat view IS the dense [L,B,S_pad,D] layout, so loading the
+        # prefill latents is one pad + reshape — no per-row scatter.
+        Lh, NP, R, D = caches.host_latent.shape
+        NB = NP // B
+        S_pad = NB * R
+        lat_pad = jnp.pad(mla_c.latent,
+                          ((0, 0), (0, 0), (0, S_pad - Sp), (0, 0)))
+        host = lat_pad.astype(caches.host_latent.dtype).reshape(Lh, NP, R, D)
+        host = offload.to_host(host, None, "cache_batch", None, None)
+    else:
+        lat_pad = jnp.pad(mla_c.latent,
+                          ((0, 0), (0, 0), (0, max_seq - Sp), (0, 0)))
+        host = lat_pad.astype(caches.host_latent.dtype)
+        if cfg.ess.offload_kv:
+            host = offload.to_host(host, None, "batch", None, None)
     ik_dtype = caches.ikeys[0].dtype
     caches = caches._replace(
         lens=lens, host_latent=host,
@@ -193,3 +212,210 @@ def ess_prefill(params, cfg: ArchConfig, tokens, positions, max_seq: int,
         caches, lg = jax.lax.scan(step, caches, (toks_w, pos_w))
         logits = jnp.concatenate([logits, lg.transpose(1, 0, 2)], axis=1)
     return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching serve loop (scheduler + paged host tier)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeReport:
+    rounds: int = 0
+    decode_tokens: int = 0              # tokens emitted by active slots
+    wall_s: float = 0.0
+    finished_rids: list = dataclasses.field(default_factory=list)
+    admissions_blocked: int = 0         # admit attempts gated on resources
+    peak_pages_in_use: int = 0
+    num_pages: int = 0
+    events: list = dataclasses.field(default_factory=list)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.decode_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+
+class ServeSession:
+    """One long-lived ESS decode batch driven by the continuous-batching
+    scheduler.
+
+    * ``num_slots`` decode slots share one jit-shaped batch; more requests
+      than slots stream through as slots free up.
+    * With the paged host tier, admission is gated on **free host pages**
+      (``pages = ceil((prompt + max_new) / page_rows)`` per request) and
+      free Sparse-Memory-Pool entries; ``num_host_pages`` can be provisioned
+      *below* ``num_slots × blocks_per_slot`` — the dense layout's pin — to
+      exercise the gate.
+    * A finished or preempted slot returns its pages to the allocator and
+      gets a full per-slot cache reset (``reset_slot``: lens + pool maps),
+      so a recycled slot can never take pool hits on the previous
+      occupant's latents.
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *, num_slots: int,
+                 max_seq: int, num_host_pages: Optional[int] = None,
+                 prompt_fn: Optional[Callable[[Request], jax.Array]] = None,
+                 do_warmup: bool = False, use_kernel: bool = False):
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.do_warmup = do_warmup
+        self.use_kernel = use_kernel
+        self.paged = LC.uses_paged_host(cfg)
+        blocks_per_slot = LC.num_blocks(cfg, max_seq) if cfg.ess.enabled \
+            else 0
+        self.num_pages = 0
+        self.allocator: Optional[LC.HostPageAllocator] = None
+        if self.paged:
+            self.num_pages = (num_host_pages if num_host_pages is not None
+                              else num_slots * blocks_per_slot)
+            self.allocator = LC.HostPageAllocator(self.num_pages)
+        self.caches = LC.init_ess_caches(
+            cfg, num_slots, max_seq, cfg.param_dtype,
+            num_pages=self.num_pages if self.paged else None,
+            map_slots=not self.paged)
+        self.pool_entries_per_slot = LC.pool_entries(cfg, max_seq)
+        self.free_pool_entries = num_slots * self.pool_entries_per_slot
+        self.sched = Scheduler(num_slots, max_seq,
+                               admission_gate=self._admission_gate,
+                               release_hook=self._release_slot)
+        self.tok = jnp.zeros((num_slots,), jnp.int32)
+        self.report = ServeReport(num_pages=self.num_pages)
+        self._prompt_fn = prompt_fn or self._default_prompt
+        # resources promised to earlier admissions of the same admit batch
+        # (the scheduler consults the gate before the engine allocates)
+        self._promised_pages = 0
+        self._promised_slots = 0
+
+    # -- resource accounting -------------------------------------------------
+
+    def _default_prompt(self, req: Request) -> jax.Array:
+        return jax.random.randint(jax.random.key(1000 + req.rid),
+                                  (1, req.prompt_len), 0,
+                                  self.cfg.vocab_size)
+
+    def pages_needed(self, req: Request) -> int:
+        return LC.pages_for_len(self.cfg, req.prompt_len + req.max_new_tokens)
+
+    def _admission_gate(self, req: Request) -> bool:
+        # pool-entry gate: with today's per-slot dedicated pools this tracks
+        # slot freeness exactly (the scheduler already enforces it); it is
+        # the accounting hook that becomes load-bearing once the Sparse
+        # Memory Pool is shared across slots
+        need_entries = self.pool_entries_per_slot * (self._promised_slots + 1)
+        if self.free_pool_entries < need_entries:
+            return False
+        need = self.pages_needed(req)
+        if self.allocator is not None \
+                and not self.allocator.can_alloc(need + self._promised_pages):
+            ev = (f"blocked rid={req.rid}: needs {need} pages, "
+                  f"{self.allocator.free_pages - self._promised_pages} free")
+            if not self.report.events or self.report.events[-1] != ev:
+                self.report.events.append(ev)
+            return False
+        self._promised_pages += need
+        self._promised_slots += 1
+        return True
+
+    def _release_slot(self, slot: int) -> None:
+        if self.allocator is not None:
+            self.allocator.release(slot)
+            self.caches = LC.unmap_slot(self.caches, slot)
+        self.caches = LC.reset_slot(self.caches, slot)
+        self.free_pool_entries += self.pool_entries_per_slot
+
+    # -- request flow --------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        # a request needing more pages than the whole pool can never be
+        # admitted — reject up front instead of blocking the FIFO head
+        # forever (the scheduler itself only screens against max_seq)
+        if self.allocator is not None \
+                and self.pages_needed(req) > self.num_pages:
+            req.finished = True
+            self.sched.finished.append(req)
+            self.report.events.append(
+                f"rejected rid={req.rid}: needs {self.pages_needed(req)} "
+                f"pages, pool has {self.num_pages}")
+            return
+        self.sched.submit(req)
+
+    def preempt(self, slot: int) -> None:
+        """Evict a running slot (node loss / rebalance); pages return and
+        the slot's caches are fully reset via the scheduler's hook."""
+        self.sched.preempt(slot)
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Admit queued requests into free slots: allocate + map host pages,
+        prefill the prompt (batch-1), and graft it into the shared batch."""
+        self._promised_pages = 0
+        self._promised_slots = 0
+        admitted = self.sched.admit()
+        for slot, req in admitted:
+            if self.allocator is not None:
+                pages = self.allocator.alloc(slot, self.pages_needed(req))
+                self.caches = LC.map_slot(self.caches, slot, pages)
+                used = self.num_pages - self.allocator.free_pages
+                self.report.peak_pages_in_use = max(
+                    self.report.peak_pages_in_use, used)
+            self.free_pool_entries -= self.pool_entries_per_slot
+            toks = self._prompt_fn(req)
+            pos = jnp.arange(req.prompt_len, dtype=jnp.int32)[None]
+            lg, donor = ess_prefill(self.params, self.cfg, toks, pos,
+                                    self.max_seq, do_warmup=self.do_warmup,
+                                    use_kernel=self.use_kernel)
+            self.caches = LC.graft_slot(self.caches, slot, donor,
+                                        req.prompt_len,
+                                        use_kernel=self.use_kernel)
+            self.tok = self.tok.at[slot].set(greedy(lg[:, -1])[0])
+        return admitted
+
+    def decode_round(self) -> list[Request]:
+        """One decode step over the whole batch; returns newly finished."""
+        active = self.sched.active_slots()
+        out = ess_decode(self.params, self.cfg, self.tok[:, None],
+                         self.caches.lens[:, None], self.caches,
+                         use_kernel=self.use_kernel)
+        self.caches = out.caches
+        self.tok = greedy(out.logits[:, -1])
+        # inactive slots must not accumulate phantom length
+        if len(active) < self.num_slots:
+            mask = jnp.zeros((self.num_slots,), bool)
+            if active:
+                mask = mask.at[jnp.asarray(active)].set(True)
+            self.caches = self.caches._replace(
+                lens=jnp.where(mask, self.caches.lens, 0))
+        done = self.sched.record_tokens({i: 1 for i in active})
+        self.report.rounds += 1
+        self.report.decode_tokens += len(active)
+        return done
+
+    def run(self, requests=None, *, max_rounds: int = 200,
+            on_round: Optional[Callable[["ServeSession", int], None]] = None
+            ) -> ServeReport:
+        """Drive the loop until every submitted request finishes."""
+        for req in (requests or []):
+            self.submit(req)
+        t0 = time.perf_counter()
+        self.admit()
+        rounds = 0
+        while self.sched.running or self.sched.queue:
+            done = self.decode_round()
+            for req in done:
+                self.report.events.append(
+                    f"round {rounds}: rid={req.rid} finished "
+                    f"({req.generated} tokens)")
+            if on_round is not None:
+                on_round(self, rounds)
+            for slot, req in self.admit():
+                self.report.events.append(
+                    f"round {rounds}: rid={req.rid} -> slot {slot} "
+                    f"(preempted {req.preempted_count}x)")
+            rounds += 1
+            if rounds >= max_rounds:
+                self.report.events.append("max_rounds reached")
+                break
+        self.report.wall_s = time.perf_counter() - t0
+        self.report.finished_rids = [r.rid for r in self.sched.finished]
+        self.report.admissions_blocked = self.sched.blocked_admissions
+        return self.report

@@ -38,9 +38,23 @@ class SlotState:
 
 
 class Scheduler:
-    """Slot-based continuous batching with preemption."""
+    """Slot-based continuous batching with preemption.
 
-    def __init__(self, num_slots: int, max_seq: int):
+    Resource hooks wire the scheduler to the engine's cache tiers:
+
+    * ``admission_gate(req) -> bool`` — called before a queued request takes
+      a free slot; the engine gates on free host pages / free pool entries.
+      A ``False`` verdict blocks the queue head (FIFO — no head-of-line
+      bypass, so admission order stays deterministic).
+    * ``release_hook(slot)`` — called whenever a slot stops serving its
+      request (completion *or* preemption); the engine returns the slot's
+      host pages and performs the full per-slot cache reset
+      (:func:`repro.cache.latent_cache.reset_slot`).
+    """
+
+    def __init__(self, num_slots: int, max_seq: int,
+                 admission_gate: Optional[Callable[["Request"], bool]] = None,
+                 release_hook: Optional[Callable[[int], None]] = None):
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.slots = [SlotState() for _ in range(num_slots)]
@@ -48,6 +62,9 @@ class Scheduler:
         self.running: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.step = 0
+        self.admission_gate = admission_gate
+        self.release_hook = release_hook
+        self.blocked_admissions = 0
 
     # -- admission ----------------------------------------------------------
 
@@ -60,13 +77,23 @@ class Scheduler:
         prefill."""
         admitted = []
         for i, s in enumerate(self.slots):
-            if s.active or not self.queue:
+            if s.active:
                 continue
-            req = self.queue.popleft()
-            if req.prompt_len + req.max_new_tokens > self.max_seq:
-                req.finished = True          # reject oversize
+            # reject oversize heads outright (they can never be admitted)
+            while self.queue and (self.queue[0].prompt_len
+                                  + self.queue[0].max_new_tokens
+                                  > self.max_seq):
+                req = self.queue.popleft()
+                req.finished = True
                 self.finished.append(req)
-                continue
+            if not self.queue:
+                break
+            req = self.queue[0]
+            if self.admission_gate is not None \
+                    and not self.admission_gate(req):
+                self.blocked_admissions += 1
+                break                        # resources exhausted: wait
+            self.queue.popleft()
             s.rid, s.active, s.len = req.rid, True, req.prompt_len
             req.slot = i
             self.running[req.rid] = req
@@ -106,6 +133,8 @@ class Scheduler:
         req.slot = None
         self.queue.appendleft(req)
         s.rid, s.active, s.len = -1, False, 0
+        if self.release_hook is not None:
+            self.release_hook(slot)
 
     def _release(self, slot: int) -> None:
         s = self.slots[slot]
@@ -113,6 +142,8 @@ class Scheduler:
         if req is not None:
             self.finished.append(req)
         s.rid, s.active, s.len = -1, False, 0
+        if self.release_hook is not None:
+            self.release_hook(slot)
 
     # -- accounting ----------------------------------------------------------
 

@@ -40,13 +40,19 @@ def split_caches(caches, half: int):
     """
     def cut(lo, hi):
         if hasattr(caches, "pools"):            # ESSCaches
+            paged = getattr(caches, "block_tables", None) is not None
+            # paged host tier: the page pool is global; each half keeps the
+            # whole pool and slices its block-table rows (slots own disjoint
+            # pages, so the halves' writebacks never collide)
             return caches._replace(
                 lens=caches.lens[lo:hi],
-                host_latent=caches.host_latent[:, lo:hi],
+                host_latent=caches.host_latent if paged
+                else caches.host_latent[:, lo:hi],
                 ikeys=tuple(a[lo:hi] for a in caches.ikeys),
                 pools=tuple(jax.tree.map(
                     lambda a: a[lo:hi] if a.ndim > 0 else a, p)
-                    for p in caches.pools))
+                    for p in caches.pools),
+                block_tables=caches.block_tables[lo:hi] if paged else None)
         def one(a):
             if a.ndim == 0:
                 return a

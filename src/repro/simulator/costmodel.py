@@ -61,6 +61,11 @@ class ServeConfig:
     two_batch_overlap: bool = True
     avg_miss_per_seq: float | None = None   # override (else from locality model)
     warmup: bool = True
+    # paged host tier (repro.cache.latent_cache): page-granular transfers +
+    # page-granular host reservations.  False keeps the calibrated
+    # FlashTrans row-fragment baseline (Table-2 anchors unchanged).
+    paged_host: bool = False
+    host_page_rows: int = 64
 
     @property
     def q_len(self) -> int:
@@ -81,6 +86,74 @@ def active_params() -> float:
     return (N_DENSE * per_dense_layer
             + (N_LAYERS - N_DENSE) * per_moe_layer
             + 2 * VOCAB * D_MODEL)
+
+
+# ---------------------------------------------------------------------------
+# Paged host-tier transfer + reservation model
+# ---------------------------------------------------------------------------
+
+# PCIe payload headroom over FlashTrans's measured 656-byte-fragment rate:
+# the paper's 37 GB/s folds a per-fragment descriptor cost; whole-page
+# fragments amortize it toward the link payload limit (~64/37 for PCIe5;
+# 1.6 is the conservative figure used here for every profile).
+PAGE_LINK_HEADROOM = 1.6
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedTransferModel:
+    """Scatter-gather transfer cost at page granularity.
+
+    ``t = bytes / link_bw + fragments * frag_overhead``: the per-fragment
+    descriptor overhead is *derived* from the profile's measured
+    row-fragment bandwidth (``1/bw_meas = 1/link + ovh/656``), so the model
+    reduces exactly to FlashTrans when every fragment is one 656 B row and
+    approaches the link payload limit when fragments are whole pages.
+    """
+    page_rows: int
+    link_h2d_bw: float
+    link_d2h_bw: float
+    h2d_frag_overhead_s: float
+    d2h_frag_overhead_s: float
+
+    def h2d_time(self, rows: float, fragments: float) -> float:
+        return (rows * LATENT_BYTES / self.link_h2d_bw
+                + fragments * self.h2d_frag_overhead_s)
+
+    def d2h_time(self, rows: float, fragments: float) -> float:
+        return (rows * LATENT_BYTES / self.link_d2h_bw
+                + fragments * self.d2h_frag_overhead_s)
+
+
+def paged_transfer_model(hw: HardwareProfile,
+                         page_rows: int = 64) -> PagedTransferModel:
+    link_h2d = hw.h2d_bw * PAGE_LINK_HEADROOM
+    link_d2h = hw.d2h_bw * PAGE_LINK_HEADROOM
+    ovh_h2d = LATENT_BYTES * (1.0 / hw.h2d_bw - 1.0 / link_h2d)
+    ovh_d2h = LATENT_BYTES * (1.0 / hw.d2h_bw - 1.0 / link_d2h)
+    return PagedTransferModel(page_rows, link_h2d, link_d2h,
+                              ovh_h2d, ovh_d2h)
+
+
+def host_bytes_per_seq(sc: ServeConfig, avg_fill: float = 0.43) -> float:
+    """Host-tier bytes one admitted sequence pins across the layer stack.
+
+    Dense layout reserves ``context`` rows per slot up front; the paged
+    layout maps pages as the sequence grows, so the pin tracks the actual
+    mean fill (rounded up to whole pages — the only fragmentation)."""
+    rows = float(sc.context)
+    if sc.paged_host:
+        R = sc.host_page_rows
+        rows = math.ceil(avg_fill * sc.context / R) * R
+    return N_LAYERS * rows * LATENT_BYTES
+
+
+def max_host_admission_batch(hw: HardwareProfile, sc: ServeConfig,
+                             avg_fill: float = 0.43,
+                             reserve_frac: float = 0.05) -> int:
+    """Host-memory admission ceiling: sequences admittable by free-page
+    count (paged) vs dense per-slot reservations — the serve loop's gate."""
+    usable = hw.host_mem_bytes * (1.0 - reserve_frac)
+    return max(1, int(usable // host_bytes_per_seq(sc, avg_fill)))
 
 
 @dataclasses.dataclass
@@ -164,10 +237,21 @@ def layer_costs(hw: HardwareProfile, sc: ServeConfig, *, moe_layer: bool,
 
     # --- Offload traffic ----------------------------------------------------
     if sc.offload:
-        bw_h2d = hw.h2d_bw if sc.use_flashtrans else hw.h2d_naive_bw
-        bw_d2h = hw.d2h_bw if sc.use_flashtrans else hw.d2h_naive_bw
-        t_fetch = B * miss_per_seq * LATENT_BYTES / bw_h2d
-        t_writeback = B * q * LATENT_BYTES / bw_d2h
+        if sc.paged_host and sc.use_flashtrans:
+            pm = paged_transfer_model(hw, sc.host_page_rows)
+            # fetched misses are top-k scattered: one fragment per miss,
+            # bounded by the pages a context spans
+            frags = B * min(miss_per_seq,
+                            math.ceil(sc.context / pm.page_rows))
+            t_fetch = pm.h2d_time(B * miss_per_seq, frags)
+            # writeback rows are consecutive: whole-page fragments
+            wb_frags = B * math.ceil(q / pm.page_rows)
+            t_writeback = pm.d2h_time(B * q, wb_frags)
+        else:
+            bw_h2d = hw.h2d_bw if sc.use_flashtrans else hw.h2d_naive_bw
+            bw_d2h = hw.d2h_bw if sc.use_flashtrans else hw.d2h_naive_bw
+            t_fetch = B * miss_per_seq * LATENT_BYTES / bw_h2d
+            t_writeback = B * q * LATENT_BYTES / bw_d2h
     else:
         t_fetch = 0.0
         t_writeback = 0.0

@@ -29,9 +29,9 @@ def test_pipeline_parallel_matches_sequential():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.pipeline import pipeline_apply
+        from repro.launch.mesh import make_mesh
 
-        mesh = jax.make_mesh((4, 2), ("pod", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((4, 2), ("pod", "model"))
         L, B, D = 8, 8, 16
         w = jax.random.normal(jax.random.key(0), (L, D, D)) * 0.3
         x = jax.random.normal(jax.random.key(1), (B, D))
@@ -54,9 +54,9 @@ def test_sharded_flash_decode_matches_oracle():
     out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.distributed.collectives import sharded_flash_decode
+        from repro.launch.mesh import make_mesh
 
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         B, H, S, D = 2, 4, 64, 16
         q = jax.random.normal(jax.random.key(0), (B, H, D))
         k = jax.random.normal(jax.random.key(1), (B, S, D))
@@ -93,9 +93,10 @@ def test_compression_under_psum():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.compression import (compress_grads,
                                                    decompress_grads, init_ef)
+        from repro.distributed.sharding import shard_map_compat
+        from repro.launch.mesh import make_mesh
 
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         g = {"w": jax.random.normal(jax.random.key(0), (8, 64))}
 
         def allreduce_compressed(gs):
@@ -104,9 +105,9 @@ def test_compression_under_psum():
             deq = decompress_grads(q, s)
             return jax.tree.map(lambda x: jax.lax.pmean(x, "data"), deq)
 
-        fn = jax.shard_map(allreduce_compressed, mesh=mesh,
-                           in_specs=({"w": P("data")},),
-                           out_specs={"w": P("data")}, check_vma=False)
+        fn = shard_map_compat(allreduce_compressed, mesh=mesh,
+                              in_specs=({"w": P("data")},),
+                              out_specs={"w": P("data")})
         got = fn(g)
         # reference: the true mean across shards (rows), tiled back
         ref = jnp.broadcast_to(jnp.mean(g["w"], axis=0, keepdims=True),

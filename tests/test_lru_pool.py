@@ -1,11 +1,16 @@
-"""Property tests (hypothesis) for the LRU Sparse Memory Pool invariants."""
+"""Property tests (hypothesis) for the LRU Sparse Memory Pool invariants.
 
-import hypothesis as hp
-import hypothesis.strategies as st
+``hypothesis`` is a dev-only dependency (requirements-dev.txt); environments
+without it still collect the suite — these property tests just skip.
+"""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.core import lru_pool as LP
 

@@ -1,0 +1,228 @@
+"""Paged host latent-cache: block-table parity, slot recycling, serve loop."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import latent_cache as LC
+from repro.configs import get_config
+from repro.core import lru_pool as LP
+from repro.core import offload
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving import engine as E
+from repro.serving.scheduler import Request
+
+
+def smoke_cfg(**ess_overrides):
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    if ess_overrides:
+        cfg = dataclasses.replace(
+            cfg, ess=dataclasses.replace(cfg.ess, **ess_overrides))
+    return cfg
+
+
+def test_paged_is_default_for_offload_configs():
+    cfg = smoke_cfg()
+    assert LC.uses_paged_host(cfg)
+    caches = LC.init_ess_caches(cfg, 2, 40, jnp.float32)
+    assert caches.paged and caches.block_tables.shape[0] == 2
+    dense = LC.init_ess_caches(smoke_cfg(paged_host=False), 2, 40,
+                               jnp.float32)
+    assert not dense.paged and dense.host_latent.shape == \
+        (cfg.num_layers, 2, 40, cfg.mla.latent_dim)
+
+
+def test_paged_vs_dense_roundtrip_bitwise():
+    """host_gather_rows/host_scatter_rows must round-trip bitwise-equal
+    through a *scrambled* (non-identity) block table."""
+    cfg = smoke_cfg()
+    B, S, D = 3, 40, cfg.mla.latent_dim
+    caches = LC.init_ess_caches(cfg, B, S, jnp.float32)
+    NP = caches.host_latent.shape[1]
+    perm = np.random.RandomState(0).permutation(NP)
+    bt = jnp.asarray(perm.reshape(B, -1), jnp.int32)
+
+    dense = jnp.zeros((cfg.num_layers, B, S, D), jnp.float32)
+    ids = jnp.array([[0, 5, 17, 39], [1, 2, 3, -1], [38, 0, 7, 12]],
+                    jnp.int32)
+    rows = jax.random.normal(jax.random.key(0), (B, 4, D), jnp.float32)
+
+    for layer in (0, cfg.num_layers - 1):
+        hp = offload.host_scatter_rows(caches.host_latent, ids, rows,
+                                       layer=layer, block_table=bt)
+        hd = offload.host_scatter_rows(dense, ids, rows, layer=layer)
+        got_p = offload.host_gather_rows(hp, ids, layer=layer,
+                                         block_table=bt)
+        got_d = offload.host_gather_rows(hd, ids, layer=layer)
+        np.testing.assert_array_equal(np.array(got_p), np.array(got_d))
+        ref = jnp.where((ids >= 0)[..., None], rows, 0)
+        np.testing.assert_array_equal(np.array(got_p), np.array(ref))
+
+
+def test_paged_scatter_drops_unmapped_and_out_of_range():
+    cfg = smoke_cfg()
+    B, S, D = 2, 40, cfg.mla.latent_dim
+    caches = LC.init_ess_caches(cfg, B, S, jnp.float32)
+    bt = caches.block_tables.at[1].set(-1)               # slot 1 unmapped
+    ids = jnp.array([[0, 999], [3, 5]], jnp.int32)       # 999 out of range
+    rows = jnp.ones((B, 2, D), jnp.float32)
+    h = offload.host_scatter_rows(caches.host_latent, ids, rows,
+                                  block_table=bt)
+    got = offload.host_gather_rows(h, ids, block_table=bt)
+    np.testing.assert_array_equal(np.array(got[0, 0]), np.ones(D))
+    assert np.array(got[0, 1]).sum() == 0                # OOR dropped
+    assert np.array(got[1]).sum() == 0                   # unmapped dropped
+    # nothing leaked into other pages: only one row non-zero globally
+    assert int((np.array(h) != 0).any(axis=-1).sum()) == 1
+
+
+def test_slot_latents_gather_pages_kernel_parity():
+    """The Pallas gather_pages page-fetch matches the jnp reference view."""
+    cfg = smoke_cfg()
+    B, S, D = 2, 40, cfg.mla.latent_dim
+    caches = LC.init_ess_caches(cfg, B, S, jnp.float32)
+    NP = caches.host_latent.shape[1]
+    perm = np.random.RandomState(1).permutation(NP)
+    bt = jnp.asarray(perm.reshape(B, -1), jnp.int32)
+    host = jax.random.normal(jax.random.key(2), caches.host_latent.shape,
+                             jnp.float32)
+    caches = caches._replace(host_latent=host, block_tables=bt)
+    for slot in range(B):
+        a = LC.slot_latents(caches, slot, use_kernel=False)
+        b = LC.slot_latents(caches, slot, use_kernel=True)
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+
+
+def test_engine_paged_matches_dense_path():
+    """Full prefill+decode parity: paged host tier vs the dense layout."""
+    cfg_p = smoke_cfg(max_miss_ratio=1.0)
+    cfg_d = smoke_cfg(max_miss_ratio=1.0, paged_host=False)
+    params = init_params(jax.random.key(0), T.model_def(cfg_p))
+    B, S, Smax = 2, 20, 40
+    toks = jax.random.randint(jax.random.key(1), (B, S + 1), 0,
+                              cfg_p.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S + 1)[None], (B, S + 1))
+
+    lg_p, c_p = E.ess_prefill(params, cfg_p, toks[:, :S], pos[:, :S], Smax,
+                              do_warmup=False)
+    lg_d, c_d = E.ess_prefill(params, cfg_d, toks[:, :S], pos[:, :S], Smax,
+                              do_warmup=False)
+    assert c_p.paged and not c_d.paged
+    np.testing.assert_allclose(np.array(lg_p), np.array(lg_d), atol=1e-6)
+    o_p = E.ess_decode(params, cfg_p, toks[:, S:], pos[:, S:], c_p)
+    o_d = E.ess_decode(params, cfg_d, toks[:, S:], pos[:, S:], c_d)
+    np.testing.assert_allclose(np.array(o_p.logits), np.array(o_d.logits),
+                               atol=1e-6)
+    for k in ("hits", "misses"):
+        np.testing.assert_array_equal(np.array(o_p.stats[k]),
+                                      np.array(o_d.stats[k]))
+
+
+# ---------------------------------------------------------------------------
+# Slot recycling
+# ---------------------------------------------------------------------------
+
+def test_reset_slot_clears_pool_maps():
+    """Regression: a recycled slot's pool must not hit stale entries.
+    Resetting only ``lens`` (the old preemption path) leaves the maps
+    populated — lookups would *hit* and serve the previous request's
+    latents."""
+    cfg = smoke_cfg()
+    B, S = 2, 40
+    caches = LC.init_ess_caches(cfg, B, S, jnp.float32)
+    ids = jnp.array([[3, 7, 11], [5, 9, 13]], jnp.int32)
+    pools = []
+    for p in caches.pools:
+        p, lk, _ = LP.lookup(p, ids, ids >= 0, max_misses=3)
+        p = LP.admit(p, lk.miss_ids, jnp.ones((B, 3, cfg.mla.latent_dim)))
+        pools.append(LP.tick(p))
+    caches = caches._replace(pools=tuple(pools),
+                             lens=jnp.array([20, 20], jnp.int32))
+
+    # the old buggy path: only lens reset -> stale HIT
+    stale = caches._replace(lens=caches.lens.at[1].set(0))
+    _, lk_stale, st_stale = LP.lookup(stale.pools[0], ids, ids >= 0, 3)
+    assert int(st_stale.hits[1]) == 3        # the bug this PR fixes
+
+    # reset_slot: full per-slot reset -> no hits, slot 0 untouched
+    clean = LC.reset_slot(caches, 1)
+    assert int(clean.lens[1]) == 0 and int(clean.lens[0]) == 20
+    for p in clean.pools:
+        assert (np.array(p.ids[1]) == -1).all()
+        assert (np.array(p.last_use[1]) == -1).all()
+        assert (np.array(p.slot_of[1]) == -1).all()
+        assert (np.array(p.ids[0]) >= 0).sum() == 3
+    _, lk_clean, st_clean = LP.lookup(clean.pools[0], ids, ids >= 0, 3)
+    assert int(st_clean.hits[1]) == 0
+    assert int(st_clean.hits[0]) == 3
+
+
+def _pool_host_consistent(caches, slot):
+    """Every resident pool entry of ``slot`` must equal the host-tier row
+    at its position — stale entries from a previous occupant cannot."""
+    host = LC.slot_latents(caches, slot)                 # [L, S_pad, D]
+    for layer, p in enumerate(caches.pools):
+        ids = np.array(p.ids[slot])
+        data = np.array(p.data[slot])
+        n_checked = 0
+        for j, pid in enumerate(ids):
+            if pid >= 0:
+                np.testing.assert_array_equal(
+                    data[j], np.array(host[layer, pid]),
+                    err_msg=f"layer {layer} pool slot {j} pos {pid}")
+                n_checked += 1
+        assert n_checked > 0
+    return True
+
+
+def test_preempt_readmit_no_stale_pool_entries():
+    """preempt -> re-admit -> the recycled slot's pool serves only the new
+    occupant's latents (consistency with the host tier, which the graft
+    rewrote)."""
+    cfg = smoke_cfg()
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    session = E.ServeSession(params, cfg, num_slots=2, max_seq=48)
+    reqs = [Request(rid=i, prompt_len=12, max_new_tokens=4)
+            for i in range(3)]
+    for r in reqs:
+        session.submit(r)
+    session.admit()
+    session.decode_round()
+    # preempt slot 1 mid-flight: the release hook must fully reset it
+    session.preempt(1)
+    for p in session.caches.pools:
+        assert (np.array(p.ids[1]) == -1).all()
+        assert (np.array(p.slot_of[1]) == -1).all()
+    assert int(session.caches.lens[1]) == 0
+    # rid=1 re-queued at the front; next admit recycles slot 1
+    admitted = session.admit()
+    assert [(s, r.rid) for s, r in admitted] == [(1, 1)]
+    session.decode_round()
+    _pool_host_consistent(session.caches, 1)
+    # drive to completion: everything finishes, pools stay consistent
+    report = session.run(max_rounds=60)
+    assert sorted(report.finished_rids) == [0, 1, 2]
+
+
+def test_serve_loop_streams_requests_page_gated():
+    """>= 2x num_slots requests through one long-lived batch; admission
+    gated on free host pages (pool provisioned below the dense pin)."""
+    cfg = smoke_cfg()
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    # 16 rows/request -> 1 page each; 32-row requests -> 2 pages.
+    reqs = [Request(rid=0, prompt_len=12, max_new_tokens=4),
+            Request(rid=1, prompt_len=12, max_new_tokens=4),
+            Request(rid=2, prompt_len=24, max_new_tokens=8),
+            Request(rid=3, prompt_len=24, max_new_tokens=8)]
+    session = E.ServeSession(params, cfg, num_slots=2, max_seq=48,
+                             num_host_pages=3)
+    report = session.run(reqs, max_rounds=80)
+    assert sorted(report.finished_rids) == [0, 1, 2, 3]
+    assert report.admissions_blocked > 0           # the gate engaged
+    assert report.peak_pages_in_use <= report.num_pages == 3
+    assert session.allocator.free_pages == 3       # all pages returned
+    assert (np.array(session.caches.block_tables) == -1).all()
