@@ -1,5 +1,5 @@
 # Tier-1 verify: the exact command from ROADMAP.md.
-.PHONY: test test-full bench-serve example-serve
+.PHONY: test test-full bench-serve bench-smoke example-serve
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -9,6 +9,11 @@ test-full:
 
 bench-serve:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/serve_bench.py
+
+# CI smoke: append one 2-slot/5-request interleaved-prefill tokens/s point
+# to BENCH_serve.json (accumulates the perf trajectory across runs)
+bench-smoke:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/serve_bench.py --smoke
 
 example-serve:
 	python examples/serve_ess.py

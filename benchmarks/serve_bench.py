@@ -9,9 +9,14 @@ Emits ``BENCH_serve.json`` with tokens/s vs. batch:
   (dense per-slot pin vs. free-page accounting) alongside.
 * ``live_smoke`` — the real ``ServeSession`` continuous-batching loop on
   the smoke arch at >= 2 batch sizes (CPU wall times; structural numbers,
-  the modelled column carries the 32K-equivalent projection).
+  the modelled column carries the 32K-equivalent projection), now with
+  chunked decode-interleaved prefill (TTFT + chunk counts per point).
+* ``smoke_trajectory`` (``--smoke``) — appends one 2-slot/5-request
+  interleaved-prefill tokens/s point per run, so the perf trajectory
+  accumulates across CI runs instead of being overwritten.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--out BENCH_serve.json]
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke
 """
 
 from __future__ import annotations
@@ -66,7 +71,6 @@ def simulated_trajectory() -> dict:
 
 
 def live_smoke_trajectory(batches=(2, 4)) -> list[dict]:
-    from repro.cache import latent_cache as LC
     from repro.configs import get_config
     from repro.models import transformer as T
     from repro.models.params import init_params
@@ -89,6 +93,9 @@ def live_smoke_trajectory(batches=(2, 4)) -> list[dict]:
             "rounds": report.rounds,
             "decode_tokens": report.decode_tokens,
             "tokens_per_s": round(report.tokens_per_s, 2),
+            "prefill_chunks": report.prefill_chunks,
+            "prefill_tokens": report.prefill_tokens,
+            "mean_ttft_s": round(report.mean_ttft_s, 4),
             "pages": report.num_pages,
             "peak_pages_in_use": report.peak_pages_in_use,
             "page_rows": cfg.ess.host_page_rows,
@@ -100,17 +107,84 @@ def live_smoke_trajectory(batches=(2, 4)) -> list[dict]:
     return rows
 
 
+def smoke_point(prefill_chunk: int = 8) -> dict:
+    """One 2-slot/5-request interleaved-prefill point (CI smoke): a long
+    prompt streams in chunks while short requests keep decoding."""
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.serving import engine as E
+    from repro.serving.scheduler import Request
+
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    reqs = [Request(rid=0, prompt_len=40, max_new_tokens=6),   # long prompt
+            Request(rid=1, prompt_len=8, max_new_tokens=8),
+            Request(rid=2, prompt_len=8, max_new_tokens=8),
+            Request(rid=3, prompt_len=12, max_new_tokens=6),
+            Request(rid=4, prompt_len=12, max_new_tokens=6)]
+    session = E.ServeSession(params, cfg, num_slots=2, max_seq=64,
+                             prefill_chunk=prefill_chunk)
+    report = session.run(reqs, max_rounds=120)
+    assert sorted(report.finished_rids) == [r.rid for r in reqs]
+    assert report.prefill_chunks > len(reqs)       # chunking engaged
+    return {
+        "slots": 2,
+        "requests": len(reqs),
+        "prefill_chunk": prefill_chunk,
+        "rounds": report.rounds,
+        "decode_tokens": report.decode_tokens,
+        "prefill_chunks": report.prefill_chunks,
+        "prefill_tokens": report.prefill_tokens,
+        "tokens_per_s": round(report.tokens_per_s, 2),
+        "mean_ttft_s": round(report.mean_ttft_s, 4),
+        "wall_s": round(report.wall_s, 2),
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--skip-live", action="store_true",
                     help="simulator trajectory only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="append one 2-slot/5-request interleaved-prefill "
+                         "point to --out (keeps prior runs)")
     args = ap.parse_args(argv)
 
+    if args.smoke:
+        t0 = time.time()
+        point = smoke_point()
+        prev = {}
+        if os.path.exists(args.out):
+            try:
+                with open(args.out) as f:
+                    prev = json.load(f)
+            except Exception:
+                prev = {}              # corrupt file: restart the history
+        prev.setdefault("smoke_trajectory", []).append(point)
+        with open(args.out, "w") as f:
+            json.dump(prev, f, indent=2)
+        print(f"appended smoke point #{len(prev['smoke_trajectory'])} to "
+              f"{args.out} ({round(time.time() - t0, 1)}s): "
+              f"{point['tokens_per_s']} tok/s, "
+              f"ttft {point['mean_ttft_s']}s, "
+              f"{point['prefill_chunks']} prefill chunks")
+        return 0
+
     t0 = time.time()
+    prev_smoke = None
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                prev_smoke = json.load(f).get("smoke_trajectory")
+        except Exception:
+            prev_smoke = None
     out = {"simulated_32k": simulated_trajectory()}
     if not args.skip_live:
         out["live_smoke"] = live_smoke_trajectory()
+    if prev_smoke:
+        out["smoke_trajectory"] = prev_smoke   # full runs keep the history
     out["wall_s"] = round(time.time() - t0, 1)
 
     with open(args.out, "w") as f:

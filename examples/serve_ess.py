@@ -7,6 +7,12 @@ free host pages (the pool is provisioned *below* the dense layout's
 demonstrates the recovery path — pages return to the allocator and the slot
 gets a full cache reset before its next occupant.
 
+Prefill is **chunked and decode-interleaved**: each serve round runs one
+``prefill_chunk``-token chunk for at most one admitting slot, scattered
+straight into its mapped host pages, while every running slot keeps
+decoding — watch rid=4's long prompt stream in between other requests'
+token events.
+
     PYTHONPATH=src python examples/serve_ess.py
 """
 
@@ -31,23 +37,24 @@ def main() -> None:
 
     # >= 2x num_slots requests stream through the two decode slots; the
     # later, longer requests pin 3 pages each so a freed slot has to *wait*
-    # for pages — the admission gate in action.
+    # for pages — the admission gate in action.  rid=4's long prompt
+    # streams through several prefill chunks while the others decode.
     requests = [Request(rid=0, prompt_len=24, max_new_tokens=6),
                 Request(rid=1, prompt_len=24, max_new_tokens=6),
                 Request(rid=2, prompt_len=40, max_new_tokens=8),
                 Request(rid=3, prompt_len=40, max_new_tokens=8),
-                Request(rid=4, prompt_len=40, max_new_tokens=8)]
+                Request(rid=4, prompt_len=72, max_new_tokens=8)]
 
     # page budget far below the dense pin (2 slots x 6 blocks = 12 pages
     # would be capacity parity at page_rows=16)
-    num_pages = 5
+    num_pages = 7
     per_req = [LC.pages_for_len(cfg, r.prompt_len + r.max_new_tokens)
                for r in requests]
     print(f"slots={NUM_SLOTS} pages={num_pages} (per request: {per_req}, "
           f"page_rows={cfg.ess.host_page_rows})")
 
     session = E.ServeSession(params, cfg, num_slots=NUM_SLOTS, max_seq=SMAX,
-                             num_host_pages=num_pages)
+                             num_host_pages=num_pages, prefill_chunk=16)
 
     def on_round(s: E.ServeSession, rnd: int) -> None:
         if rnd == 2 and s.sched.slots[1].active:
@@ -61,10 +68,16 @@ def main() -> None:
           f"finished: {sorted(report.finished_rids)}")
     print(f"decode tokens: {report.decode_tokens} "
           f"({report.tokens_per_s:.1f} tok/s); "
+          f"prefill: {report.prefill_tokens} toks in "
+          f"{report.prefill_chunks} chunks; "
           f"admissions blocked on pages: {report.admissions_blocked}; "
           f"peak pages in use: {report.peak_pages_in_use}/{report.num_pages}")
+    print("ttft (serve rounds from submit to first token): "
+          + ", ".join(f"rid{r}={t}" for r, t in
+                      sorted(report.ttft_rounds.items())))
     assert sorted(report.finished_rids) == [r.rid for r in requests]
     assert report.admissions_blocked > 0, "page gate never engaged"
+    assert report.prefill_chunks > len(requests), "chunking never engaged"
 
 
 if __name__ == "__main__":

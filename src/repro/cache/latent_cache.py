@@ -232,9 +232,31 @@ def slot_latents(caches: ESSCaches, slot: int, *,
     return jnp.where(valid[None, :, None], out, 0)
 
 
+def graft_pool_into(full: LP.PoolState, one: LP.PoolState,
+                    slot: int) -> LP.PoolState:
+    """Install a batch-1 pool (donor prefill or per-slot warmup replay)
+    as ``slot`` of a shared pool.
+
+    The source's LRU stamps are clamped to the shared pool's clock so the
+    recycled slot's entries do not look hotter than resident ones."""
+    lu = jnp.minimum(one.last_use[0], full.step)
+    lu = jnp.where(one.last_use[0] < 0, -1, lu)
+    return full._replace(
+        data=full.data.at[slot].set(one.data[0].astype(full.data.dtype)),
+        ids=full.ids.at[slot].set(one.ids[0]),
+        last_use=full.last_use.at[slot].set(lu),
+        slot_of=full.slot_of.at[slot].set(one.slot_of[0]))
+
+
 def graft_slot(caches: ESSCaches, slot: int, donor: ESSCaches,
                n_rows: int, *, use_kernel: bool = False) -> ESSCaches:
     """Copy ``donor``'s sequence 0 (a batch-1 prefill) into ``slot``.
+
+    Compat shim for callers that still prefill into a detached donor
+    cache.  The serve loop no longer routes admissions through here: its
+    chunked prefill scatters each chunk's latents straight into the slot's
+    mapped host pages (:func:`repro.serving.engine.ess_prefill_chunk`),
+    avoiding this max_seq-sized intermediate + full-pool rewrite.
 
     Writes the first ``n_rows`` host-tier latent rows through the target
     slot's block table (paged) or batch row (dense), grafts the indexer
@@ -247,23 +269,12 @@ def graft_slot(caches: ESSCaches, slot: int, donor: ESSCaches,
         caches.host_latent, ids, rows[:, None], batch_offset=slot,
         block_table=caches.block_tables)
 
-    def graft_pool(full: LP.PoolState, one: LP.PoolState) -> LP.PoolState:
-        # donor LRU stamps are clamped to the shared pool's clock so the
-        # recycled slot's entries do not look hotter than resident ones
-        lu = jnp.minimum(one.last_use[0], full.step)
-        lu = jnp.where(one.last_use[0] < 0, -1, lu)
-        return full._replace(
-            data=full.data.at[slot].set(one.data[0].astype(full.data.dtype)),
-            ids=full.ids.at[slot].set(one.ids[0]),
-            last_use=full.last_use.at[slot].set(lu),
-            slot_of=full.slot_of.at[slot].set(one.slot_of[0]))
-
     return caches._replace(
         lens=caches.lens.at[slot].set(n_rows),
         host_latent=host,
         ikeys=tuple(full.at[slot].set(one[0].astype(full.dtype))
                     for full, one in zip(caches.ikeys, donor.ikeys)),
-        pools=tuple(graft_pool(fp, op)
+        pools=tuple(graft_pool_into(fp, op, slot)
                     for fp, op in zip(caches.pools, donor.pools)))
 
 

@@ -196,28 +196,30 @@ def host_scatter_rows(host_cache: jax.Array, ids: jax.Array,
             return (host_cache.at[layer].set(cl2) if host_cache.ndim == 4
                     else cl2)
 
-        ax2 = host_sharding_for(phys.shape, ("cache_batch", None))
-        phys_h = jax.device_put(phys, ax2)
-        valid_h = jax.device_put(valid, ax2)
+        # masked/unmapped rows are routed to an out-of-bounds sentinel and
+        # dropped — a clipped target (page 0 row 0) would alias a *live*
+        # slot's physical row, and a duplicate-index scatter against that
+        # slot's own append leaves the winner unspecified
+        tgt = jnp.where(valid, phys, NP * R)
+        ax2 = host_sharding_for(tgt.shape, ("cache_batch", None))
+        tgt_h = jax.device_put(tgt, ax2)
         rows_h = jax.device_put(rows.astype(host_cache.dtype),
                                 host_sharding_for(
                                     rows.shape, ("cache_batch", None, None)))
 
         @compute_on("device_host")
         @jax.jit
-        def _scatter_paged(c, i, v, r):
+        def _scatter_paged(c, i, r):
             cl = c[layer] if c.ndim == 4 else c
             flat = cl.reshape(NP * R, D)
-            cur = flat.at[i].get(mode="promise_in_bounds")
-            r2 = jnp.where(v[..., None], r, cur)
-            flat2 = flat.at[i].set(r2, mode="promise_in_bounds")
+            flat2 = flat.at[i].set(r, mode="drop")
             cl2 = flat2.reshape(NP, R, D)
             if c.ndim == 4:
                 return jax.lax.dynamic_update_slice_in_dim(c, cl2[None],
                                                            layer, axis=0)
             return cl2
 
-        return _scatter_paged(host_cache, phys_h, valid_h, rows_h)
+        return _scatter_paged(host_cache, tgt_h, rows_h)
 
     S = host_cache.shape[-2]
     valid = ids >= 0

@@ -16,13 +16,19 @@ from repro.models import mla as M
 
 def lru_warmup(pool: LP.PoolState, host_latent: jax.Array,
                x_tail: jax.Array, idx_p: dict, idx_keys: jax.Array,
-               lens: jax.Array, cfg: ArchConfig) -> LP.PoolState:
+               lens: jax.Array, cfg: ArchConfig, *, layer: int = 0,
+               batch_offset: int = 0,
+               block_table: jax.Array | None = None) -> LP.PoolState:
     """Seed the pool.
 
     x_tail [B, W, d]: post-ln1 hidden states of the last W prefill tokens
     (the "windows"); idx_keys [B, S, Di] full indexer cache; lens [B].
     Sequentially (scan) inserts each window's Top-K set with full LRU
     semantics, so stamps increase window by window.
+
+    ``layer`` / ``batch_offset`` / ``block_table`` route the miss fetches
+    through a stacked and/or paged host tier (the serve loop replays warmup
+    per admitted slot against the slot's mapped pages).
     """
     B, W, _ = x_tail.shape
     S = idx_keys.shape[1]
@@ -38,7 +44,9 @@ def lru_warmup(pool: LP.PoolState, host_latent: jax.Array,
     def body(p, wi):
         ids, vw = wi                                     # [B,K]
         p, lk, _ = LP.lookup(p, ids, vw, K)              # envelope = K (exact)
-        rows = offload.host_gather_rows(host_latent, lk.miss_ids)
+        rows = offload.host_gather_rows(host_latent, lk.miss_ids,
+                                        layer=layer, batch_offset=batch_offset,
+                                        block_table=block_table)
         p = LP.admit(p, lk.miss_ids, rows)
         p = LP.tick(p)
         return p, None

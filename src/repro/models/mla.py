@@ -240,6 +240,23 @@ def dsa_threshold(sc: jax.Array, k: int, valid: jax.Array) -> jax.Array:
     return vals[..., -1]
 
 
+def dsa_keep_mask(sc: jax.Array, k: int, valid: jax.Array) -> jax.Array:
+    """Exact top-k membership mask [..., S] with ``lax.top_k`` tie
+    semantics (lowest index wins among equal scores).
+
+    A ``sc >= threshold`` mask admits *every* tie at the k-th score — and
+    the relu'd indexer produces many exact-0.0 ties — so thresholding
+    attends to more than k entries while the decode/serve paths gather
+    exactly k.  All DSA paths (train, prefill, decode) select through this
+    same top-k set so their outputs agree up to fp reassociation."""
+    sc = jnp.where(valid, sc, NEG_INF)
+    kk = min(k, sc.shape[-1])
+    _, ids = jax.lax.top_k(sc, kk)
+    keep = jnp.zeros(sc.shape, bool)
+    keep = jnp.put_along_axis(keep, ids, True, axis=-1, inplace=False)
+    return keep & valid
+
+
 def mla_train_attend(p: dict, pi: Optional[dict], cfg: ArchConfig,
                      x: jax.Array, positions: jax.Array) -> jax.Array:
     """Dense differentiable MLA (+DSA top-k mask) for train_4k shapes."""
@@ -255,9 +272,7 @@ def mla_train_attend(p: dict, pi: Optional[dict], cfg: ArchConfig,
     if pi is not None and cfg.dsa is not None and cfg.dsa.index_topk < S:
         iq = indexer_query(pi, x)
         sc = indexer_scores(iq, indexer_keys(pi, x))             # [B,Q,S]
-        thr = dsa_threshold(sc, cfg.dsa.index_topk,
-                            causal[:, 0])                        # [B,Q]
-        keep = sc >= thr[..., None]
+        keep = dsa_keep_mask(sc, cfg.dsa.index_topk, causal[:, 0])
         bias = bias + jnp.where(keep[:, None], 0.0, NEG_INF)
     w = jax.nn.softmax(s + bias, axis=-1)
     o_lat = jnp.einsum("bhqk,bkv->bqhv", w,
@@ -287,6 +302,7 @@ def mla_prefill_attend(p: dict, pi: Optional[dict], cfg: ArchConfig,
 
     ikeys = None
     thr = None
+    n_tie = None
     iq = None
     if pi is not None and cfg.dsa is not None and cfg.dsa.index_topk < S:
         ikeys = indexer_keys(pi, x)
@@ -313,6 +329,11 @@ def mla_prefill_attend(p: dict, pi: Optional[dict], cfg: ArchConfig,
         top0 = jnp.full((B, S, cfg.dsa.index_topk), NEG_INF, jnp.float32)
         topv, _ = jax.lax.scan(tb, top0, (kb_keys, kb_pos))
         thr = topv[..., -1]                                      # [B,S]
+        # exact top-k, lax.top_k tie semantics: besides every score > thr,
+        # keep only the first (index order) n_tie scores == thr — a plain
+        # ">= thr" mask would admit *all* ties (the relu'd indexer emits
+        # many exact-0.0 scores) and diverge from the decode-side gather
+        n_tie = k - (topv > thr[..., None]).sum(-1)              # [B,S]
 
     # pass 2: chunked online-softmax over latent blocks
     nb = Sp // kv_block
@@ -327,14 +348,22 @@ def mla_prefill_attend(p: dict, pi: Optional[dict], cfg: ArchConfig,
             if ik_p2 is not None else jnp.zeros((nb, B, kv_block, 1), x.dtype))
 
     def body(carry, blk):
-        mx, l, acc = carry
+        mx, l, acc, tie_seen = carry
         lc, pc, kc = blk
         s = jnp.einsum("bqhd,bkd->bhqk", q_comb.astype(jnp.float32),
                        lc.astype(jnp.float32)) * mla_scale(cfg)
         ok = pc[:, None, None, :] <= positions[:, None, :, None]
         if thr is not None:
             sc = indexer_scores(iq, kc)                          # [B,S,kb]
-            ok &= (sc >= thr[..., None])[:, None]
+            okq = pc[:, None, :] <= positions[:, :, None]        # [B,S,kb]
+            gt = (sc > thr[..., None]) & okq
+            eq = (sc == thr[..., None]) & okq
+            # running index-order rank of threshold ties across blocks
+            rank = tie_seen[..., None] + \
+                jnp.cumsum(eq.astype(jnp.int32), axis=-1) - eq
+            keep = gt | (eq & (rank < n_tie[..., None]))
+            tie_seen = tie_seen + eq.sum(axis=-1)
+            ok &= keep[:, None]
         s = jnp.where(ok, s, NEG_INF)
         m_new = jnp.maximum(mx, s.max(axis=-1))
         pw = jnp.exp(s - m_new[..., None])
@@ -343,12 +372,14 @@ def mla_prefill_attend(p: dict, pi: Optional[dict], cfg: ArchConfig,
         l_new = l * corr + pw.sum(axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bhqk,bkv->bhqv", pw, lc[..., :m.kv_lora_rank].astype(jnp.float32))
-        return (m_new, l_new, acc_new), None
+        return (m_new, l_new, acc_new, tie_seen), None
 
     m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
     l0 = jnp.zeros((B, H, S), jnp.float32)
     a0 = jnp.zeros((B, H, S, m.kv_lora_rank), jnp.float32)
-    (mx, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (lat_b, pos_b, ik_b))
+    t0 = jnp.zeros((B, S), jnp.int32)
+    (mx, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, t0),
+                                      (lat_b, pos_b, ik_b))
     o_lat = (acc / jnp.maximum(l, 1e-30)[..., None]).transpose(0, 2, 1, 3)
     out = output_proj(p, cfg, o_lat.astype(x.dtype))
     return out, lat, ikeys

@@ -32,7 +32,8 @@ from repro.cache import latent_cache as LC
 from repro.configs.base import ArchConfig
 from repro.core import lru_pool as LP
 from repro.core import offload, warmup
-from repro.core.overlap import ESSLayerState, ess_sparse_attention
+from repro.core.overlap import (ESSLayerState, _attend_rows,
+                                ess_sparse_attention)
 from repro.distributed.sharding import shard
 from repro.models import layers as L
 from repro.models import mla as M
@@ -85,15 +86,33 @@ def _overlap_for_layer(cfg: ArchConfig, layer: int,
 
 def ess_decode(params, cfg: ArchConfig, tokens, positions,
                caches: LC.ESSCaches, *, use_kernel: bool = False,
-               layerwise_policy: tuple[str, ...] | None = None) -> DecodeOut:
-    """tokens [B,Q] -> logits [B,Q,V].  Q>1 = MTP draft verification."""
+               layerwise_policy: tuple[str, ...] | None = None,
+               slot_mask: jax.Array | None = None) -> DecodeOut:
+    """tokens [B,Q] -> logits [B,Q,V].  Q>1 = MTP draft verification.
+
+    ``slot_mask`` [B] bool marks the live decode slots of a continuous
+    batch.  Masked slots are gated *inside* the step: their host scatter
+    and indexer-cache append are dropped, their pool takes no lookups or
+    admissions, and their ``lens`` do not advance.  Without in-step gating
+    a freed (or still-prefilling) slot runs a phantom step — its stale
+    block table can alias a live slot's physical host page and its pool
+    silently admits a garbage latent row that a future occupant then
+    *hits* on.
+    """
     B, Q = tokens.shape
     x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
     x = shard(x, "batch", None, "embed_act")
     lens = caches.lens
-    new_lens = lens + Q
+    if slot_mask is None:
+        live = jnp.ones((B,), bool)
+    else:
+        live = slot_mask
+    new_lens = lens + Q * live.astype(lens.dtype)
     bi = jnp.arange(B)[:, None]
-    widx = lens[:, None] + jnp.arange(Q)[None, :]                # [B,Q]
+    widx = jnp.where(live[:, None],
+                     lens[:, None] + jnp.arange(Q)[None, :], -1)  # [B,Q]
+    # masked slots contribute no valid cache entries to attention either
+    attn_lens = jnp.where(live, new_lens, 0)
 
     host_latent = caches.host_latent
     ikeys_all = caches.ikeys
@@ -106,7 +125,9 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
 
         # --- append: indexer key (device) + latent entry (host, D2H) -----
         new_ik = M.indexer_keys(lp["indexer"], h)                # [B,Q,Di]
-        ik_l = ikeys_all[layer].at[bi, widx].set(
+        S_ik = ikeys_all[layer].shape[1]
+        ik_widx = jnp.where(widx >= 0, widx, S_ik)               # OOB -> drop
+        ik_l = ikeys_all[layer].at[bi, ik_widx].set(
             new_ik.astype(ikeys_all[layer].dtype), mode="drop")
         ikeys_all = ikeys_all[:layer] + (ik_l,) + ikeys_all[layer + 1:]
         new_lat = M.latent_entries(lp["mla"], cfg, h, positions) # [B,Q,D]
@@ -119,7 +140,7 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
                            block_table=caches.block_tables)
         ov = _overlap_for_layer(cfg, layer, layerwise_policy)
         attn, st2, stats = ess_sparse_attention(
-            lp["mla"], lp["indexer"], cfg, h, positions, st, ik_l, new_lens,
+            lp["mla"], lp["indexer"], cfg, h, positions, st, ik_l, attn_lens,
             overlap=ov, use_kernel=use_kernel)
         pools = pools[:layer] + (st2.pool,) + pools[layer + 1:]
         x = x + attn
@@ -145,52 +166,156 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
                       "hidden": x})
 
 
-def ess_prefill(params, cfg: ArchConfig, tokens, positions, max_seq: int,
-                *, do_warmup: bool = True, use_kernel: bool = False
-                ) -> tuple[jax.Array, LC.ESSCaches]:
-    """Prefill + LRU-Warmup (paper §3.2).
+def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
+                      caches: LC.ESSCaches, *, slot: int | None = None,
+                      want_logits: bool = True, collect_tail: int = 0,
+                      use_kernel: bool = False
+                      ) -> tuple[Optional[jax.Array], LC.ESSCaches, tuple]:
+    """One chunked-prefill step: ``tokens [B,C]`` continue the sequence(s)
+    at ``caches.lens`` and their latents/indexer keys land **directly in
+    the already-mapped host pages** — no donor cache, no graft.
 
-    The first ``S - W`` tokens run through the chunked DSA prefill; the
-    resulting latents are loaded into the host-tier Total Memory Pool
-    (Figure 3's cross-node "Load").  The last ``W = warmup_windows`` tokens
-    are then replayed as scanned single-token ESS decode steps: each step
-    computes the true indexer Top-2K of its window and LRU-admits the
-    misses — *exactly* "sequentially insert the Top-2K IDs of the last W
-    prefill windows into the LRU cache"."""
+    * ``slot`` restricts the step to one decode slot of a shared
+      continuous-batching cache (``None`` = all ``B`` rows, the compat
+      :func:`ess_prefill` path).
+    * Attention is the exact causal DSA selection: per-query Top-K over the
+      slot's indexer cache, prior-context rows fetched from the host tier,
+      intra-chunk rows served from the chunk itself (they are D2H'd once,
+      *after* the layer loop, via one stacked scatter per chunk).
+    * The Sparse Memory Pool is untouched — prefill runs on the
+      bandwidth-rich side of the PD split; LRU-Warmup is replayed
+      separately after the last chunk.
+    * Per-token outputs are invariant to the chunking (fixed-shape score /
+      gather / attend stages), so any ``prefill_chunk`` is bit-identical
+      to the one-shot path.
+
+    Returns ``(logits|None, caches, tails)`` where ``tails`` holds each
+    layer's post-ln1 hidden states for the last ``collect_tail`` chunk
+    positions (LRU-Warmup replay input).
+    """
+    if slot is None:
+        b0, Bc = 0, tokens.shape[0]
+    else:
+        b0, Bc = slot, 1
+    C = tokens.shape[1]
+    start = jax.lax.slice_in_dim(caches.lens, b0, b0 + Bc)       # [Bc]
+    x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
+    x = shard(x, "batch", None, "embed_act")
+    bi = jnp.arange(Bc)[:, None]
+    widx = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # [Bc,C]
+
+    host = caches.host_latent
+    ikeys_all = caches.ikeys
+    S = ikeys_all[0].shape[1]
+    K = min(cfg.dsa.index_topk, S)
+    causal = jnp.arange(S)[None, None, :] <= widx[:, :, None]    # [Bc,C,S]
+    lat_stack = []
+    tails = []
+
+    for layer in range(cfg.num_layers):
+        lp, is_moe = _layer_params(params, cfg, layer)
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        if collect_tail:
+            tails.append(h[:, -collect_tail:])
+
+        # --- append indexer keys (device) + chunk latents (deferred D2H) --
+        ik_full = ikeys_all[layer]
+        ik_slot = jax.lax.slice_in_dim(ik_full, b0, b0 + Bc, axis=0)
+        new_ik = M.indexer_keys(lp["indexer"], h)                # [Bc,C,Di]
+        ik_slot = ik_slot.at[bi, widx].set(
+            new_ik.astype(ik_slot.dtype), mode="drop")
+        ik_full = jax.lax.dynamic_update_slice_in_dim(ik_full, ik_slot, b0,
+                                                      axis=0)
+        ikeys_all = ikeys_all[:layer] + (ik_full,) + ikeys_all[layer + 1:]
+        new_lat = M.latent_entries(lp["mla"], cfg, h, positions) \
+            .astype(host.dtype)                                  # [Bc,C,D]
+        lat_stack.append(new_lat)
+
+        # --- exact causal DSA: per-query Top-K over the slot's keys ------
+        iq = M.indexer_query(lp["indexer"], h)
+        sc = M.indexer_scores(iq, ik_slot)                       # [Bc,C,S]
+        ids = M.topk_ids(sc, K, causal)                          # [Bc,C,K]
+        req_valid = jnp.take_along_axis(
+            jnp.broadcast_to(causal, (Bc, C, S)), ids, axis=2)
+        # prior context from host pages; intra-chunk rows from the chunk
+        local = ids >= start[:, None, None]
+        prior_ids = jnp.where(local, -1, ids)
+        rows_h = offload.host_gather_rows(
+            host, prior_ids.reshape(Bc, C * K), layer=layer,
+            batch_offset=b0, block_table=caches.block_tables
+        ).reshape(Bc, C, K, -1)
+        loc = jnp.clip(ids - start[:, None, None], 0, C - 1)
+        rows_l = jnp.take_along_axis(new_lat[:, None], loc[..., None],
+                                     axis=2)                     # [Bc,C,K,D]
+        rows = jnp.where(local[..., None], rows_l, rows_h)
+
+        q_comb = M.absorbed_query(lp["mla"], cfg, h, positions)
+        # fp32 attend (prefill runs on the compute-rich side): matches the
+        # monolithic prefill/train references' softmax precision, so the
+        # selection sets of deeper layers don't drift across near-ties
+        part = _attend_rows(q_comb.astype(jnp.float32),
+                            rows.astype(jnp.float32), req_valid, cfg,
+                            use_kernel=use_kernel)
+        attn = M.output_proj(lp["mla"], cfg,
+                             M.finalize_partial(part, x.dtype))
+        x = x + attn
+
+        # --- ffn ----------------------------------------------------------
+        h2 = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if is_moe:
+            f, _ = MoE.moe_apply(lp["ffn"], cfg, h2)
+        else:
+            f = L.mlp(lp["ffn"], h2, cfg.act)
+        x = x + f
+
+    # one stacked D2H scatter for the whole chunk (all layers, same rows)
+    host = offload.host_scatter_rows_stacked(
+        host, widx, jnp.stack(lat_stack), batch_offset=b0,
+        block_table=caches.block_tables)
+    new_lens = jax.lax.dynamic_update_slice(
+        caches.lens, start + jnp.int32(C), (b0,))
+    logits = None
+    if want_logits:
+        xf = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.unembed(params.get("unembed", params.get("embed")), xf,
+                           cap=cfg.logit_softcap)
+    caches = caches._replace(lens=new_lens, host_latent=host,
+                             ikeys=ikeys_all)
+    return logits, caches, tuple(tails)
+
+
+def ess_prefill(params, cfg: ArchConfig, tokens, positions, max_seq: int,
+                *, do_warmup: bool = True, use_kernel: bool = False,
+                prefill_chunk: Optional[int] = None
+                ) -> tuple[jax.Array, LC.ESSCaches]:
+    """Prefill + LRU-Warmup (paper §3.2) — compat shim over the chunked
+    prefill engine.
+
+    The first ``S - W`` tokens stream through :func:`ess_prefill_chunk`
+    (one chunk by default, ``prefill_chunk``-sized chunks otherwise —
+    bit-identical either way); their latents land in the host-tier Total
+    Memory Pool (Figure 3's cross-node "Load").  The last
+    ``W = warmup_windows`` tokens are then replayed as scanned
+    single-token ESS decode steps: each step computes the true indexer
+    Top-2K of its window and LRU-admits the misses — *exactly*
+    "sequentially insert the Top-2K IDs of the last W prefill windows
+    into the LRU cache"."""
     B, S = tokens.shape
     W = min(cfg.ess.warmup_windows, S - 1) if do_warmup else 0
     Sp = S - W
-    out = T.forward(params, cfg, tokens[:, :Sp], positions[:, :Sp],
-                    mode="prefill")
-    mla_c: Any = out.caches["mla"]                     # latent [L,B,Sp,D]
     caches = LC.init_ess_caches(cfg, B, max_seq, cfg.param_dtype)
-    lens = jnp.full((B,), Sp, jnp.int32)
-
-    ik_pad = jnp.pad(mla_c.ikeys, ((0, 0), (0, 0), (0, max_seq - Sp), (0, 0)))
-    if caches.block_tables is not None:
-        # paged host tier: with the identity slot mapping of init_ess_caches
-        # (page j of slot b = b*NB + j, pages batch-major) the page pool's
-        # flat view IS the dense [L,B,S_pad,D] layout, so loading the
-        # prefill latents is one pad + reshape — no per-row scatter.
-        Lh, NP, R, D = caches.host_latent.shape
-        NB = NP // B
-        S_pad = NB * R
-        lat_pad = jnp.pad(mla_c.latent,
-                          ((0, 0), (0, 0), (0, S_pad - Sp), (0, 0)))
-        host = lat_pad.astype(caches.host_latent.dtype).reshape(Lh, NP, R, D)
-        host = offload.to_host(host, None, "cache_batch", None, None)
-    else:
-        lat_pad = jnp.pad(mla_c.latent,
-                          ((0, 0), (0, 0), (0, max_seq - Sp), (0, 0)))
-        host = lat_pad.astype(caches.host_latent.dtype)
-        if cfg.ess.offload_kv:
-            host = offload.to_host(host, None, "batch", None, None)
-    ik_dtype = caches.ikeys[0].dtype
-    caches = caches._replace(
-        lens=lens, host_latent=host,
-        ikeys=tuple(ik_pad[l].astype(ik_dtype)
-                    for l in range(cfg.num_layers)))
-    logits = out.logits
+    # cap the default chunk: a single Sp-sized chunk materializes
+    # O(Sp*K*D) gathered rows + O(Sp*S) score tensors, and chunking is
+    # bit-identical anyway
+    C = min(Sp, 512) if prefill_chunk is None else max(1, prefill_chunk)
+    parts = []
+    for c0 in range(0, Sp, C):
+        ck = min(C, Sp - c0)
+        lg, caches, _ = ess_prefill_chunk(
+            params, cfg, tokens[:, c0:c0 + ck], positions[:, c0:c0 + ck],
+            caches, use_kernel=use_kernel)
+        parts.append(lg)
+    logits = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
 
     if W > 0:
         # warmup replays run on the prefill side (bandwidth-rich): use the
@@ -220,18 +345,39 @@ def ess_prefill(params, cfg: ArchConfig, tokens, positions, max_seq: int,
 
 @dataclasses.dataclass
 class ServeReport:
-    rounds: int = 0
+    rounds: int = 0                     # decode rounds actually stepped
     decode_tokens: int = 0              # tokens emitted by active slots
+    prefill_chunks: int = 0             # chunked-prefill steps run
+    prefill_tokens: int = 0             # prompt tokens prefilled
     wall_s: float = 0.0
     finished_rids: list = dataclasses.field(default_factory=list)
     admissions_blocked: int = 0         # admit attempts gated on resources
-    peak_pages_in_use: int = 0
+    peak_pages_in_use: int = 0          # sampled every serve round
     num_pages: int = 0
+    ttft_rounds: dict = dataclasses.field(default_factory=dict)
+    ttft_s: dict = dataclasses.field(default_factory=dict)
     events: list = dataclasses.field(default_factory=list)
 
     @property
     def tokens_per_s(self) -> float:
         return self.decode_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def mean_ttft_s(self) -> float:
+        vals = list(self.ttft_s.values())
+        return sum(vals) / len(vals) if vals else 0.0
+
+
+@dataclasses.dataclass
+class _PrefillTask:
+    """Chunk cursor of one admitting slot (engine-side prefill state)."""
+    req: Request
+    tokens: jax.Array        # [1, prompt_len]
+    cursor: int = 0
+    # rolling per-layer post-ln1 tails of the last `warmup_windows` prompt
+    # positions (accumulated across chunks so warmup depth never depends
+    # on prompt_len % prefill_chunk)
+    tails: Optional[list] = None
 
 
 class ServeSession:
@@ -240,6 +386,12 @@ class ServeSession:
 
     * ``num_slots`` decode slots share one jit-shaped batch; more requests
       than slots stream through as slots free up.
+    * Prefill is **chunked and interleaved**: each serve round runs one
+      ``prefill_chunk``-token chunk for at most one admitting slot plus one
+      decode step for all running slots.  Chunk latents scatter straight
+      into the slot's mapped host pages (no max_seq-sized donor cache, no
+      graft), so admitting a long prompt never stalls the decode batch —
+      it costs one chunk per round.
     * With the paged host tier, admission is gated on **free host pages**
       (``pages = ceil((prompt + max_new) / page_rows)`` per request) and
       free Sparse-Memory-Pool entries; ``num_host_pages`` can be provisioned
@@ -248,19 +400,23 @@ class ServeSession:
     * A finished or preempted slot returns its pages to the allocator and
       gets a full per-slot cache reset (``reset_slot``: lens + pool maps),
       so a recycled slot can never take pool hits on the previous
-      occupant's latents.
+      occupant's latents.  Decode steps gate inactive slots *in-step*
+      (``slot_mask``), so a freed or mid-prefill slot can never scatter a
+      phantom latent row or pollute its pool between admissions.
     """
 
     def __init__(self, params, cfg: ArchConfig, *, num_slots: int,
                  max_seq: int, num_host_pages: Optional[int] = None,
                  prompt_fn: Optional[Callable[[Request], jax.Array]] = None,
-                 do_warmup: bool = False, use_kernel: bool = False):
+                 do_warmup: bool = False, use_kernel: bool = False,
+                 prefill_chunk: int = 64):
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.do_warmup = do_warmup
         self.use_kernel = use_kernel
+        self.prefill_chunk = max(1, prefill_chunk)
         self.paged = LC.uses_paged_host(cfg)
         blocks_per_slot = LC.num_blocks(cfg, max_seq) if cfg.ess.enabled \
             else 0
@@ -286,6 +442,12 @@ class ServeSession:
         # (the scheduler consults the gate before the engine allocates)
         self._promised_pages = 0
         self._promised_slots = 0
+        # chunked-prefill state machine: slot -> task, FIFO service order
+        # by dict insertion (re-admissions re-insert at the back)
+        self._prefill: dict[int, _PrefillTask] = {}
+        self._round = 0
+        self._submit_round: dict[int, int] = {}
+        self._submit_time: dict[int, float] = {}
 
     # -- resource accounting -------------------------------------------------
 
@@ -318,11 +480,20 @@ class ServeSession:
         return True
 
     def _release_slot(self, slot: int) -> None:
+        # a mid-prefill preemption drops the chunk cursor: the attempt
+        # re-prefills from scratch on its next admission
+        self._prefill.pop(slot, None)
         if self.allocator is not None:
             self.allocator.release(slot)
             self.caches = LC.unmap_slot(self.caches, slot)
         self.caches = LC.reset_slot(self.caches, slot)
         self.free_pool_entries += self.pool_entries_per_slot
+
+    def _sample_pages(self) -> None:
+        if self.allocator is not None:
+            used = self.num_pages - self.allocator.free_pages
+            self.report.peak_pages_in_use = max(
+                self.report.peak_pages_in_use, used)
 
     # -- request flow --------------------------------------------------------
 
@@ -338,6 +509,8 @@ class ServeSession:
                 f"rejected rid={req.rid}: needs {self.pages_needed(req)} "
                 f"pages, pool has {self.num_pages}")
             return
+        self._submit_round.setdefault(req.rid, self._round)
+        self._submit_time.setdefault(req.rid, time.perf_counter())
         self.sched.submit(req)
 
     def preempt(self, slot: int) -> None:
@@ -346,8 +519,11 @@ class ServeSession:
         self.sched.preempt(slot)
 
     def admit(self) -> list[tuple[int, Request]]:
-        """Admit queued requests into free slots: allocate + map host pages,
-        prefill the prompt (batch-1), and graft it into the shared batch."""
+        """Admit queued requests into free slots: allocate + map host pages
+        and enqueue the slot on the chunked-prefill state machine.  The
+        prompt itself streams in ``prefill_chunk``-token chunks across
+        subsequent :meth:`prefill_round` calls — admission never blocks the
+        decode batch on a monolithic prefill."""
         self._promised_pages = 0
         self._promised_slots = 0
         admitted = self.sched.admit()
@@ -355,39 +531,123 @@ class ServeSession:
             if self.allocator is not None:
                 pages = self.allocator.alloc(slot, self.pages_needed(req))
                 self.caches = LC.map_slot(self.caches, slot, pages)
-                used = self.num_pages - self.allocator.free_pages
-                self.report.peak_pages_in_use = max(
-                    self.report.peak_pages_in_use, used)
+            self._sample_pages()
             self.free_pool_entries -= self.pool_entries_per_slot
-            toks = self._prompt_fn(req)
-            pos = jnp.arange(req.prompt_len, dtype=jnp.int32)[None]
-            lg, donor = ess_prefill(self.params, self.cfg, toks, pos,
-                                    self.max_seq, do_warmup=self.do_warmup,
-                                    use_kernel=self.use_kernel)
-            self.caches = LC.graft_slot(self.caches, slot, donor,
-                                        req.prompt_len,
-                                        use_kernel=self.use_kernel)
-            self.tok = self.tok.at[slot].set(greedy(lg[:, -1])[0])
+            self._prefill[slot] = _PrefillTask(req, self._prompt_fn(req))
+            self.report.events.append(
+                f"round {self._round}: rid={req.rid} -> slot {slot} "
+                f"(prefill {req.prompt_len} toks, "
+                f"preempted {req.preempted_count}x)")
         return admitted
 
+    def prefill_round(self) -> bool:
+        """Run one prefill chunk for the oldest admitting slot (if any).
+
+        The chunk's latents and indexer keys scatter directly into the
+        slot's mapped host pages; after the last chunk the slot's LRU
+        warmup is replayed and the slot joins the decode batch."""
+        if not self._prefill:
+            return False
+        slot = next(iter(self._prefill))         # FIFO by insertion order
+        task = self._prefill[slot]
+        n = task.req.prompt_len
+        c0 = task.cursor
+        ck = min(self.prefill_chunk, n - c0)
+        last = c0 + ck >= n
+        W = max(0, min(self.cfg.ess.warmup_windows, n - 1)) \
+            if self.do_warmup else 0
+        toks = task.tokens[:, c0:c0 + ck]
+        pos = jnp.arange(c0, c0 + ck, dtype=jnp.int32)[None]
+        lg, self.caches, tails = ess_prefill_chunk(
+            self.params, self.cfg, toks, pos, self.caches, slot=slot,
+            want_logits=last, collect_tail=min(W, ck),
+            use_kernel=self.use_kernel)
+        if W > 0:
+            if task.tails is None:
+                task.tails = list(tails)
+            else:
+                task.tails = [jnp.concatenate([a, b], axis=1)[:, -W:]
+                              for a, b in zip(task.tails, tails)]
+        task.cursor += ck
+        self.report.prefill_chunks += 1
+        self.report.prefill_tokens += ck
+        self.report.events.append(
+            f"round {self._round}: rid={task.req.rid} prefill chunk "
+            f"[{c0}:{c0 + ck})/{n} (slot {slot})")
+        if last:
+            if W > 0:
+                self._warmup_slot(slot, tuple(task.tails), n)
+            self.tok = self.tok.at[slot].set(greedy(lg[:, -1])[0])
+            self.sched.promote(slot)
+            del self._prefill[slot]
+            rid = task.req.rid
+            ttft = self._round - self._submit_round.get(rid, self._round)
+            # a preempted request's first token was already delivered by
+            # its first attempt: keep that TTFT
+            self.report.ttft_rounds.setdefault(rid, ttft)
+            self.report.ttft_s.setdefault(
+                rid, time.perf_counter()
+                - self._submit_time.get(rid, time.perf_counter()))
+            self.report.events.append(
+                f"round {self._round}: rid={rid} first token ready "
+                f"(ttft {ttft} rounds)")
+        return True
+
+    def _warmup_slot(self, slot: int, tails: tuple, prompt_len: int) -> None:
+        """LRU-Warmup replay for one freshly prefilled slot (paper §3.2):
+        the Top-K sets of the last W prefill windows are inserted into a
+        fresh batch-1 pool from the slot's mapped pages, then grafted into
+        the shared Sparse Memory Pool with clock-clamped stamps."""
+        lens1 = jnp.full((1,), prompt_len, jnp.int32)
+        pools = []
+        for layer, x_tail in enumerate(tails):
+            lp, _ = _layer_params(self.params, self.cfg, layer)
+            full = self.caches.pools[layer]
+            one = LP.init_pool(1, full.data.shape[1],
+                               self.caches.ikeys[layer].shape[1],
+                               full.data.shape[2], full.data.dtype)
+            ik_slot = jax.lax.slice_in_dim(self.caches.ikeys[layer], slot,
+                                           slot + 1, axis=0)
+            one = warmup.lru_warmup(
+                one, self.caches.host_latent, x_tail, lp["indexer"], ik_slot,
+                lens1, self.cfg, layer=layer, batch_offset=slot,
+                block_table=self.caches.block_tables)
+            pools.append(LC.graft_pool_into(full, one, slot))
+        self.caches = self.caches._replace(pools=tuple(pools))
+
     def decode_round(self) -> list[Request]:
-        """One decode step over the whole batch; returns newly finished."""
+        """One decode step over the running slots; returns newly finished.
+
+        Inactive and mid-prefill slots are masked *inside* the step
+        (``slot_mask``): their host pages, pool state and ``lens`` are
+        untouched — no post-hoc fixups."""
+        self._sample_pages()
         active = self.sched.active_slots()
+        if not active:
+            return []
+        mask = jnp.zeros((self.num_slots,), bool) \
+            .at[jnp.asarray(active)].set(True)
         out = ess_decode(self.params, self.cfg, self.tok[:, None],
                          self.caches.lens[:, None], self.caches,
-                         use_kernel=self.use_kernel)
+                         use_kernel=self.use_kernel, slot_mask=mask)
         self.caches = out.caches
-        self.tok = greedy(out.logits[:, -1])
-        # inactive slots must not accumulate phantom length
-        if len(active) < self.num_slots:
-            mask = jnp.zeros((self.num_slots,), bool)
-            if active:
-                mask = mask.at[jnp.asarray(active)].set(True)
-            self.caches = self.caches._replace(
-                lens=jnp.where(mask, self.caches.lens, 0))
+        self.tok = jnp.where(mask, greedy(out.logits[:, -1]), self.tok)
         done = self.sched.record_tokens({i: 1 for i in active})
         self.report.rounds += 1
         self.report.decode_tokens += len(active)
+        return done
+
+    def step(self) -> list[Request]:
+        """One serve round: admissions, then one prefill chunk for at most
+        one admitting slot, then one decode step for all running slots."""
+        self.admit()
+        self.prefill_round()
+        done = self.decode_round()
+        for req in done:
+            self.report.events.append(
+                f"round {self._round}: rid={req.rid} finished "
+                f"({req.generated} tokens)")
+        self._round += 1
         return done
 
     def run(self, requests=None, *, max_rounds: int = 200,
@@ -397,22 +657,14 @@ class ServeSession:
         for req in (requests or []):
             self.submit(req)
         t0 = time.perf_counter()
-        self.admit()
-        rounds = 0
+        budget = max_rounds            # rounds granted to THIS run() call
         while self.sched.running or self.sched.queue:
-            done = self.decode_round()
-            for req in done:
-                self.report.events.append(
-                    f"round {rounds}: rid={req.rid} finished "
-                    f"({req.generated} tokens)")
+            self.step()
             if on_round is not None:
-                on_round(self, rounds)
-            for slot, req in self.admit():
-                self.report.events.append(
-                    f"round {rounds}: rid={req.rid} -> slot {slot} "
-                    f"(preempted {req.preempted_count}x)")
-            rounds += 1
-            if rounds >= max_rounds:
+                # the serve round just executed (aligned with event labels)
+                on_round(self, self._round - 1)
+            budget -= 1
+            if budget <= 0:
                 self.report.events.append("max_rounds reached")
                 break
         self.report.wall_s = time.perf_counter() - t0

@@ -35,6 +35,7 @@ class SlotState:
     rid: int = -1
     active: bool = False
     len: int = 0
+    phase: str = "idle"      # idle | prefill | decode
 
 
 class Scheduler:
@@ -95,6 +96,7 @@ class Scheduler:
                 break                        # resources exhausted: wait
             self.queue.popleft()
             s.rid, s.active, s.len = req.rid, True, req.prompt_len
+            s.phase = "prefill"
             req.slot = i
             self.running[req.rid] = req
             admitted.append((i, req))
@@ -103,7 +105,21 @@ class Scheduler:
     # -- stepping -----------------------------------------------------------
 
     def active_slots(self) -> list[int]:
-        return [i for i, s in enumerate(self.slots) if s.active]
+        """Decode-eligible slots.  Slots still streaming prefill chunks are
+        admitted (they hold pages + a pool reservation) but must not take
+        decode steps until :meth:`promote`."""
+        return [i for i, s in enumerate(self.slots)
+                if s.active and s.phase == "decode"]
+
+    def prefill_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots)
+                if s.active and s.phase == "prefill"]
+
+    def promote(self, slot: int) -> None:
+        """Prefill finished: the slot joins the decode batch."""
+        s = self.slots[slot]
+        if s.active and s.phase == "prefill":
+            s.phase = "decode"
 
     def record_tokens(self, slot_tokens: dict[int, int]) -> list[Request]:
         """slot -> n tokens emitted this step; returns newly finished."""
@@ -124,15 +140,21 @@ class Scheduler:
 
     def preempt(self, slot: int) -> None:
         """Evict a running sequence (node loss / rebalance); it re-queues and
-        will re-prefill on next admission (PD-disaggregation semantics)."""
+        will re-prefill on next admission (PD-disaggregation semantics).
+
+        Per-attempt progress resets: the next attempt re-prefills from
+        scratch and generates the full ``max_new_tokens`` again.  Carrying
+        ``generated`` across attempts made :meth:`record_tokens` finish the
+        re-admitted request ``generated`` tokens early."""
         s = self.slots[slot]
         if not s.active:
             return
         req = self.running.pop(s.rid)
         req.preempted_count += 1
         req.slot = None
+        req.generated = 0
         self.queue.appendleft(req)
-        s.rid, s.active, s.len = -1, False, 0
+        s.rid, s.active, s.len, s.phase = -1, False, 0, "idle"
         if self.release_hook is not None:
             self.release_hook(slot)
 
@@ -141,7 +163,7 @@ class Scheduler:
         req = self.running.pop(s.rid, None)
         if req is not None:
             self.finished.append(req)
-        s.rid, s.active, s.len = -1, False, 0
+        s.rid, s.active, s.len, s.phase = -1, False, 0, "idle"
         if self.release_hook is not None:
             self.release_hook(slot)
 

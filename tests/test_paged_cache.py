@@ -191,6 +191,8 @@ def test_preempt_readmit_no_stale_pool_entries():
     for r in reqs:
         session.submit(r)
     session.admit()
+    session.prefill_round()          # chunked prefill: one slot per round
+    session.prefill_round()
     session.decode_round()
     # preempt slot 1 mid-flight: the release hook must fully reset it
     session.preempt(1)
@@ -201,6 +203,7 @@ def test_preempt_readmit_no_stale_pool_entries():
     # rid=1 re-queued at the front; next admit recycles slot 1
     admitted = session.admit()
     assert [(s, r.rid) for s, r in admitted] == [(1, 1)]
+    session.prefill_round()
     session.decode_round()
     _pool_host_consistent(session.caches, 1)
     # drive to completion: everything finishes, pools stay consistent
@@ -220,9 +223,18 @@ def test_serve_loop_streams_requests_page_gated():
             Request(rid=3, prompt_len=24, max_new_tokens=8)]
     session = E.ServeSession(params, cfg, num_slots=2, max_seq=48,
                              num_host_pages=3)
-    report = session.run(reqs, max_rounds=80)
+    samples = []                                   # pages in use, per round
+
+    def on_round(s, rnd):
+        samples.append(s.num_pages - s.allocator.free_pages)
+
+    report = session.run(reqs, max_rounds=80, on_round=on_round)
     assert sorted(report.finished_rids) == [0, 1, 2, 3]
     assert report.admissions_blocked > 0           # the gate engaged
     assert report.peak_pages_in_use <= report.num_pages == 3
+    # peak is sampled every round (not just at admit): it must dominate
+    # every end-of-round sample (intra-round admit/release transients can
+    # push it higher than any end-of-round observation)
+    assert report.peak_pages_in_use >= max(samples)
     assert session.allocator.free_pages == 3       # all pages returned
     assert (np.array(session.caches.block_tables) == -1).all()
