@@ -206,7 +206,9 @@ def bench_lru_pool_ops() -> None:
 
     @jax.jit
     def step(pool, ids):
-        pool, lk, stats = LP.lookup(pool, ids, ids >= 0, M)
+        # dedup=False pins the historical single-query lookup cost (the
+        # Q>1 dedup path would add an O(K^2) compare to this row)
+        pool, lk, stats = LP.lookup(pool, ids, ids >= 0, M, dedup=False)
         rows = jnp.zeros((B, M, 576), jnp.bfloat16)
         pool = LP.admit(pool, lk.miss_ids, rows)
         return LP.tick(pool), stats

@@ -13,7 +13,11 @@ Emits ``BENCH_serve.json`` with tokens/s vs. batch:
   chunked decode-interleaved prefill (TTFT + chunk counts per point).
 * ``smoke_trajectory`` (``--smoke``) — appends one 2-slot/5-request
   interleaved-prefill tokens/s point per run, so the perf trajectory
-  accumulates across CI runs instead of being overwritten.
+  accumulates across CI runs instead of being overwritten.  Each point
+  now carries an ``mtp`` sub-point: Q=1 tokens/s vs MTP depth-2
+  accepted-tokens/s on the same config and params (zero-init, so every
+  draft matches the model's argmax — ideal acceptance isolates the
+  engine's round mechanics and keeps the point deterministic).
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--out BENCH_serve.json]
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke
@@ -142,6 +146,63 @@ def smoke_point(prefill_chunk: int = 8) -> dict:
     }
 
 
+def mtp_smoke_point(depth: int = 2) -> dict:
+    """Q=1 vs MTP speculative accepted-tokens/s on the *same* config,
+    params and request set.
+
+    Zero-init params make every MTP draft match the model's greedy
+    prediction (all logits tie at zero, argmax 0), so acceptance is
+    deterministically 1.0 and the point measures the engine's
+    verify-round mechanics: depth+1 tokens emitted per round vs one.
+    ``accepted_tokens_per_s`` counts emitted (accepted + bonus) tokens
+    over wall time — the ServeReport's tokens/s semantics at Q>1."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.serving import engine as E
+    from repro.serving.scheduler import Request
+
+    cfg = dataclasses.replace(get_config("deepseek-v32-exp-ess-smoke"),
+                              mtp_depth=depth)
+    params = jax.tree.map(jnp.zeros_like,
+                          init_params(jax.random.key(0), T.model_def(cfg)))
+
+    def reqs():
+        return [Request(rid=i, prompt_len=8, max_new_tokens=9)
+                for i in range(4)]
+
+    def run(md):
+        # first pass warms the per-shape dispatch caches (the smoke model
+        # is compile-dominated otherwise); the second measures steady state
+        for _ in range(2):
+            s = E.ServeSession(params, cfg, num_slots=2, max_seq=32,
+                               mtp_depth=md)
+            r = s.run(reqs(), max_rounds=200)
+            assert sorted(r.finished_rids) == [0, 1, 2, 3]
+        return s, r
+
+    base_s, base_r = run(0)
+    spec_s, spec_r = run(depth)
+    assert base_s.outputs == spec_s.outputs      # greedy streams identical
+    point = {
+        "mtp_depth": depth,
+        "accept_rate": round(spec_r.accept_rate, 3),
+        "q1_tokens_per_s": round(base_r.tokens_per_s, 2),
+        "accepted_tokens_per_s": round(spec_r.accepted_tokens_per_s, 2),
+        "q1_rounds": base_r.rounds,
+        "spec_rounds": spec_r.spec_rounds,
+        "decode_tokens": spec_r.decode_tokens,
+        "note": "zero-init params (ideal acceptance); same config/params "
+                "for both columns",
+    }
+    assert point["accepted_tokens_per_s"] >= point["q1_tokens_per_s"], point
+    return point
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -155,6 +216,7 @@ def main(argv=None) -> int:
     if args.smoke:
         t0 = time.time()
         point = smoke_point()
+        point["mtp"] = mtp_smoke_point()
         prev = {}
         if os.path.exists(args.out):
             try:
@@ -165,11 +227,15 @@ def main(argv=None) -> int:
         prev.setdefault("smoke_trajectory", []).append(point)
         with open(args.out, "w") as f:
             json.dump(prev, f, indent=2)
+        m = point["mtp"]
         print(f"appended smoke point #{len(prev['smoke_trajectory'])} to "
               f"{args.out} ({round(time.time() - t0, 1)}s): "
               f"{point['tokens_per_s']} tok/s, "
               f"ttft {point['mean_ttft_s']}s, "
-              f"{point['prefill_chunks']} prefill chunks")
+              f"{point['prefill_chunks']} prefill chunks; "
+              f"mtp{m['mtp_depth']} {m['accepted_tokens_per_s']} "
+              f"accepted-tok/s vs {m['q1_tokens_per_s']} q1-tok/s "
+              f"(accept rate {m['accept_rate']})")
         return 0
 
     t0 = time.time()

@@ -13,9 +13,16 @@ straight into its mapped host pages, while every running slot keeps
 decoding — watch rid=4's long prompt stream in between other requests'
 token events.
 
+Decode runs **MTP speculative rounds** (depth 2) composed with
+**Two-Batch Overlap**: every round drafts 2 tokens per slot, verifies all
+drafts with one Q=3 step split into two overlapped half-batches, and
+emits 1–3 accepted tokens per slot; rid=3 samples (temperature 0.8) and
+transparently degrades to exact Q=1 emission inside the same rounds.
+
     PYTHONPATH=src python examples/serve_ess.py
 """
 
+import dataclasses
 import sys
 
 sys.path.insert(0, "src")
@@ -32,6 +39,7 @@ from repro.serving.scheduler import Request
 
 def main() -> None:
     cfg = get_config("deepseek-v32-exp-ess-smoke")
+    cfg = dataclasses.replace(cfg, mtp_depth=2)    # 2 stacked draft modules
     params = init_params(jax.random.key(0), T.model_def(cfg))
     NUM_SLOTS, SMAX = 2, 96
 
@@ -42,7 +50,8 @@ def main() -> None:
     requests = [Request(rid=0, prompt_len=24, max_new_tokens=6),
                 Request(rid=1, prompt_len=24, max_new_tokens=6),
                 Request(rid=2, prompt_len=40, max_new_tokens=8),
-                Request(rid=3, prompt_len=40, max_new_tokens=8),
+                Request(rid=3, prompt_len=40, max_new_tokens=8,
+                        temperature=0.8, top_k=64, seed=7),
                 Request(rid=4, prompt_len=72, max_new_tokens=8)]
 
     # page budget far below the dense pin (2 slots x 6 blocks = 12 pages
@@ -54,7 +63,8 @@ def main() -> None:
           f"page_rows={cfg.ess.host_page_rows})")
 
     session = E.ServeSession(params, cfg, num_slots=NUM_SLOTS, max_seq=SMAX,
-                             num_host_pages=num_pages, prefill_chunk=16)
+                             num_host_pages=num_pages, prefill_chunk=16,
+                             mtp_depth=2, tbo=True)
 
     def on_round(s: E.ServeSession, rnd: int) -> None:
         if rnd == 2 and s.sched.slots[1].active:
@@ -64,10 +74,14 @@ def main() -> None:
     report = session.run(requests, on_round=on_round)
     for ev in report.events:
         print(f"  {ev}")
-    print(f"\nall requests served in {report.rounds} decode rounds; "
+    print(f"\nall requests served in {report.rounds} decode rounds "
+          f"({report.spec_rounds} speculative); "
           f"finished: {sorted(report.finished_rids)}")
     print(f"decode tokens: {report.decode_tokens} "
-          f"({report.tokens_per_s:.1f} tok/s); "
+          f"({report.tokens_per_s:.1f} accepted-tok/s, "
+          f"{report.rounds_per_s:.1f} rounds/s); "
+          f"accept rate {report.accept_rate:.2f} "
+          f"({report.accepted_tokens}/{report.drafted_tokens} drafts); "
           f"prefill: {report.prefill_tokens} toks in "
           f"{report.prefill_chunks} chunks; "
           f"admissions blocked on pages: {report.admissions_blocked}; "
@@ -75,9 +89,14 @@ def main() -> None:
     print("ttft (serve rounds from submit to first token): "
           + ", ".join(f"rid{r}={t}" for r, t in
                       sorted(report.ttft_rounds.items())))
+    for rid in sorted(session.outputs):
+        print(f"  rid{rid} tokens: {session.outputs[rid]}")
     assert sorted(report.finished_rids) == [r.rid for r in requests]
     assert report.admissions_blocked > 0, "page gate never engaged"
     assert report.prefill_chunks > len(requests), "chunking never engaged"
+    assert report.spec_rounds > 0, "speculative rounds never engaged"
+    assert all(len(session.outputs[r.rid]) == r.max_new_tokens
+               for r in requests)
 
 
 if __name__ == "__main__":

@@ -159,6 +159,18 @@ def map_slot(caches: ESSCaches, slot: int,
         block_tables=caches.block_tables.at[slot].set(row))
 
 
+def pages_owned_mask(block_tables: jax.Array, num_pages: int) -> jax.Array:
+    """[NP] bool — physical pages mapped by *any* row of ``block_tables``.
+
+    The TBO page-merge (:func:`repro.serving.tbo.merge_caches`) selects
+    each half-batch's D2H writes out of the shared global page pool with
+    this mask; slots own disjoint pages (allocator invariant), so the two
+    halves' masks never overlap."""
+    flat = block_tables.reshape(-1)
+    return jnp.zeros((num_pages,), bool).at[
+        jnp.where(flat >= 0, flat, num_pages)].set(True, mode="drop")
+
+
 def unmap_slot(caches: ESSCaches, slot: int) -> ESSCaches:
     if caches.block_tables is None:
         return caches

@@ -63,11 +63,25 @@ def init_pool(batch: int, pool_entries: int, max_seq: int, dim: int,
 
 
 def lookup(pool: PoolState, req_ids: jax.Array, req_valid: jax.Array,
-           max_misses: int) -> tuple[PoolState, Lookup, PoolStats]:
+           max_misses: int, *, dedup: bool = True
+           ) -> tuple[PoolState, Lookup, PoolStats]:
     """Resolve requested cache ids against the pool.
 
     req_ids [B,K] (score-descending), req_valid [B,K].  Touches hit slots
     (LRU stamp).  Returns miss buffer of fixed width ``max_misses``.
+
+    With ``dedup`` the request list may contain **duplicates** (a Q>1
+    speculative-verify step flattens every draft's top-k into one list,
+    and drafts routinely select the same positions).  Duplicate misses
+    share the first occurrence's miss-buffer rank, so the buffer holds
+    *unique* positions: each row is fetched once, and :func:`admit` never
+    installs the same position into two pool slots — a duplicate admit
+    left a zombie entry (forward map without inverse link) that wasted
+    capacity and, on its eventual eviction, clobbered the live
+    duplicate's ``slot_of`` link.  Dedup costs an O(K^2) compare; callers
+    whose requests are distinct by construction (one query's top-k, a
+    warmup window) pass ``dedup=False`` for the linear-rank path — the
+    two are bit-identical on duplicate-free input.
     """
     B, K = req_ids.shape
     bi = jnp.arange(B)[:, None]
@@ -81,14 +95,29 @@ def lookup(pool: PoolState, req_ids: jax.Array, req_valid: jax.Array,
     last_use = pool.last_use.at[bi, touch_slot].max(
         pool.step, mode="drop")
 
-    # pack misses (score order preserved): rank = prefix count of misses
-    rank = jnp.cumsum(miss.astype(jnp.int32), axis=1) - 1        # [B,K]
+    # pack misses (score order preserved): unique misses get consecutive
+    # ranks; a duplicate miss inherits its first occurrence's rank
+    if dedup:
+        eq = req_ids[:, :, None] == req_ids[:, None, :]          # [B,K,K]
+        earlier = jnp.tril(jnp.ones((K, K), bool), k=-1)[None]   # i < j
+        dup = miss & (eq & earlier & miss[:, None, :]).any(-1)
+        unique_miss = miss & ~dup
+        rank_u = jnp.cumsum(unique_miss.astype(jnp.int32), axis=1) - 1
+        # rank of request j = rank of the unique miss sharing its id
+        # (itself when unique); at most one unique miss per id, so the
+        # sum selects it
+        rank = jnp.einsum("bji,bi->bj", (eq & unique_miss[:, None, :])
+                          .astype(jnp.int32),
+                          jnp.where(unique_miss, rank_u, 0))
+    else:
+        unique_miss = miss
+        rank = jnp.cumsum(miss.astype(jnp.int32), axis=1) - 1
     rank = jnp.where(miss, rank, K + max_misses)                 # invalid big
     scat = jnp.where(rank < max_misses, rank, max_misses)        # OOB -> drop
     miss_ids = jnp.full((B, max_misses + 1), -1, jnp.int32)
     miss_ids = miss_ids.at[bi, scat].set(req_ids, mode="drop")[:, :max_misses]
 
-    n_miss = miss.sum(axis=1)
+    n_miss = unique_miss.sum(axis=1)                 # rows actually fetched
     stats = PoolStats(hits=hit.sum(axis=1), misses=n_miss,
                       overflow=jnp.maximum(n_miss - max_misses, 0))
     return (pool._replace(last_use=last_use),
@@ -103,9 +132,17 @@ def admit(pool: PoolState, miss_ids: jax.Array, rows: jax.Array,
     protect_slots [B,Kp]: slots that must not be evicted this step (current
     hits are protected automatically by their fresh LRU stamp as long as
     P >= K; pass explicit slots for extra safety with tiny pools).
+
+    A Q>1 step's miss envelope can exceed the pool size (``M = ratio*K*Q``
+    vs ``P`` entries); admission is then capped at the ``P``
+    highest-scoring misses — the fetch itself still serves attention at
+    full width, only residency is capacity-clipped.
     """
     B, M = miss_ids.shape
     P = pool.ids.shape[1]
+    if M > P:
+        miss_ids, rows = miss_ids[:, :P], rows[:, :P]
+        M = P
     bi = jnp.arange(B)[:, None]
     valid = miss_ids >= 0
 
@@ -140,13 +177,51 @@ def tick(pool: PoolState) -> PoolState:
 def invalidate_beyond(pool: PoolState, lens: jax.Array) -> PoolState:
     """Drop pool entries for positions >= lens[b] (speculative-decode
     rollback: rejected draft positions will be re-written with different
-    content, so stale pool rows must not survive)."""
+    content, so stale pool rows must not survive).
+
+    Ordering contract (speculative rollback): call this **after** the
+    verify step's :func:`admit` + :func:`tick`.  A Q>1 verify step's
+    flattened lookup may legitimately admit rows *at draft positions*
+    (query ``q`` requests positions appended by queries ``< q``); those
+    entries must exist when they are invalidated, otherwise a stale
+    ``slot_of`` link would survive the rollback and a later occupant of
+    the position would take a hit on the rejected draft's latent.  The
+    clear is total for the forward map *and* the inverse map — ``ids`` /
+    ``last_use`` keyed by resident position, ``slot_of`` keyed by
+    position — so it is idempotent and safe to apply to an already-clean
+    slot (a frozen ``slot_mask`` row passes its unchanged ``lens``).
+    """
     stale = pool.ids >= lens[:, None]                            # [B,P]
     ids = jnp.where(stale, -1, pool.ids)
     last_use = jnp.where(stale, -1, pool.last_use)
     pos = jnp.arange(pool.slot_of.shape[1])[None, :]
     slot_of = jnp.where(pos >= lens[:, None], -1, pool.slot_of)
     return pool._replace(ids=ids, last_use=last_use, slot_of=slot_of)
+
+
+def check_consistent(pool: PoolState) -> bool:
+    """Host-side invariant check (tests / debugging): the forward map
+    (``ids``) and inverse map (``slot_of``) must mirror each other exactly
+    — every resident id points back at its slot and vice versa, with no
+    dangling links after admit/evict/invalidate interleavings."""
+    import numpy as np
+    ids = np.asarray(pool.ids)
+    slot_of = np.asarray(pool.slot_of)
+    last_use = np.asarray(pool.last_use)
+    B, P = ids.shape
+    for b in range(B):
+        res = ids[b][ids[b] >= 0]
+        if len(res) != len(set(res.tolist())):
+            return False                     # duplicate resident position
+        for s in range(P):
+            if ids[b, s] >= 0 and slot_of[b, ids[b, s]] != s:
+                return False                 # forward without inverse
+            if ids[b, s] < 0 and last_use[b, s] >= 0:
+                return False                 # empty slot with live stamp
+        for pos_ in range(slot_of.shape[1]):
+            if slot_of[b, pos_] >= 0 and ids[b, slot_of[b, pos_]] != pos_:
+                return False                 # inverse without forward
+    return True
 
 
 def gather_resident(pool: PoolState, slot: jax.Array, hit: jax.Array

@@ -16,7 +16,11 @@ hide it.  The three strategies lower to three different dependence graphs:
   of half-1's fetch and hides it even at long context where Attn0 is tiny.
 
 All shapes fixed; Q>1 (MTP drafts) supported by flattening per-query top-k
-requests into the pool lookup.
+requests into the pool lookup.  ``lens`` may be per-query ``[B,Q]`` so a
+draft-verification step stays causal *within* the Q window: query ``q``
+only selects (and attends to) positions ``< lens[b,q]`` — without the
+per-query mask every draft could attend to entries appended by later
+drafts, breaking parity with sequential single-token steps.
 """
 
 from __future__ import annotations
@@ -82,7 +86,9 @@ def ess_sparse_attention(mla_p: dict, idx_p: dict, cfg: ArchConfig,
 
     x_norm [B,Q,d] (post-ln1 hidden of the new tokens), positions [B,Q],
     idx_keys [B,S,Di] device-resident Indexer-Cache *already containing the
-    new tokens' keys*, lens [B] = cache length *after* appending new tokens.
+    new tokens' keys*, lens [B] = cache length *after* appending new tokens
+    — or per-query ``[B,Q]`` (causal within the Q window: query ``q`` sees
+    positions ``< lens[b,q]``; a slot-masked row passes 0).
     ``state.host_latent`` must already contain the new latent rows (the
     engine performs the D2H writeback — Figure 3's small D2H — before
     calling attention so drafts can attend to themselves).
@@ -94,6 +100,19 @@ def ess_sparse_attention(mla_p: dict, idx_p: dict, cfg: ArchConfig,
                        lens, overlap, use_kernel)
 
 
+def _fetch_valid(lk, B: int, Q: int, K: int, M_env: int) -> jax.Array:
+    """[B,Q,M_env] bool — which fetched rows each query actually requested.
+
+    At Q=1 this is exactly ``miss_ids >= 0``; at Q>1 it keeps the verify
+    step per-query causal: without it every draft attends the *union* of
+    all drafts' missed rows (and rows it already hit double-count)."""
+    bi = jnp.arange(B)[:, None]
+    qidx = jnp.broadcast_to((jnp.arange(Q * K) // K)[None], (B, Q * K))
+    scat = jnp.minimum(lk.miss_rank, M_env)          # non-miss rank is big
+    return jnp.zeros((B, Q, M_env + 1), bool).at[
+        bi, qidx, scat].set(True, mode="drop")[:, :, :M_env]
+
+
 def _topk_and_lookup(idx_p, cfg, x_norm, state, idx_keys, lens):
     B, Q, _ = x_norm.shape
     S = idx_keys.shape[1]
@@ -102,13 +121,17 @@ def _topk_and_lookup(idx_p, cfg, x_norm, state, idx_keys, lens):
 
     iq = M.indexer_query(idx_p, x_norm)
     sc = M.indexer_scores(iq, idx_keys)                          # [B,Q,S]
-    valid_s = jnp.arange(S)[None, :] < lens[:, None]
-    ids = M.topk_ids(sc, K, valid_s[:, None])                    # [B,Q,K]
-    req_valid = jnp.take_along_axis(
-        jnp.broadcast_to(valid_s[:, None], (B, Q, S)), ids, axis=2)
+    qlens = lens[:, None] if lens.ndim == 1 else lens            # [B,Q]
+    valid_s = jnp.arange(S)[None, None, :] < qlens[:, :, None]   # [B,Q,S]
+    valid_s = jnp.broadcast_to(valid_s, (B, Q, S))
+    ids = M.topk_ids(sc, K, valid_s)                             # [B,Q,K]
+    req_valid = jnp.take_along_axis(valid_s, ids, axis=2)
     flat_ids = ids.reshape(B, Q * K)
     flat_valid = req_valid.reshape(B, Q * K)
-    pool, lk, stats = LP.lookup(state.pool, flat_ids, flat_valid, M_env)
+    # one query's top-k is duplicate-free; only the Q>1 flattening can
+    # request the same position twice (skip the O(K^2) dedup at Q=1)
+    pool, lk, stats = LP.lookup(state.pool, flat_ids, flat_valid, M_env,
+                                dedup=Q > 1)
     return pool, lk, stats, ids, req_valid, K, M_env
 
 
@@ -147,12 +170,15 @@ def _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
         p0 = _attend_rows(q_comb, rows0.reshape(B, Q, K, -1),
                           hit & req_valid.reshape(B, Q, K).astype(bool),
                           cfg, use_kernel)
-        # Attn1: fetched rows (waits on the H2D copy)
+        # Attn1: fetched rows (waits on the H2D copy); at Q>1 each query
+        # attends only the rows it requested (at Q=1 that set is exactly
+        # the whole miss buffer — skip the scatter)
         mvalid = (lk.miss_ids >= 0)
+        fvalid = _fetch_valid(lk, B, Q, K, M_env) & mvalid[:, None] \
+            if Q > 1 else jnp.broadcast_to(mvalid[:, None], (B, Q, M_env))
         p1 = _attend_rows(q_comb, fetched[:, None].repeat(Q, 1)
                           if Q > 1 else fetched[:, None],
-                          jnp.broadcast_to(mvalid[:, None], (B, Q, M_env)),
-                          cfg, use_kernel)
+                          fvalid, cfg, use_kernel)
         part = M.merge_partials(p0, p1)
 
     out_lat = M.finalize_partial(part, x_norm.dtype)
@@ -226,10 +252,11 @@ def _finish_half(mla_p, cfg, x_norm, positions, pool, lk, ids, req_valid,
     p0 = _attend_rows(q_comb, rows0.reshape(B, Q, K, -1),
                       hit & req_valid.astype(bool), cfg, use_kernel)
     mvalid = lk.miss_ids >= 0
+    fvalid = _fetch_valid(lk, B, Q, K, M_env) & mvalid[:, None] \
+        if Q > 1 else jnp.broadcast_to(mvalid[:, None], (B, Q, M_env))
     p1 = _attend_rows(q_comb, fetched[:, None].repeat(Q, 1) if Q > 1
                       else fetched[:, None],
-                      jnp.broadcast_to(mvalid[:, None], (B, Q, M_env)),
-                      cfg, use_kernel)
+                      fvalid, cfg, use_kernel)
     part = M.merge_partials(p0, p1)
     out = M.output_proj(mla_p, cfg, M.finalize_partial(part, x_norm.dtype))
     pool = LP.admit(pool, lk.miss_ids, fetched)

@@ -43,7 +43,8 @@ def lru_warmup(pool: LP.PoolState, host_latent: jax.Array,
 
     def body(p, wi):
         ids, vw = wi                                     # [B,K]
-        p, lk, _ = LP.lookup(p, ids, vw, K)              # envelope = K (exact)
+        p, lk, _ = LP.lookup(p, ids, vw, K,              # envelope = K (exact)
+                             dedup=False)                # per-window top-k
         rows = offload.host_gather_rows(host_latent, lk.miss_ids,
                                         layer=layer, batch_offset=batch_offset,
                                         block_table=block_table)

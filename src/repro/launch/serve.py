@@ -50,21 +50,25 @@ def main(argv=None) -> int:
           f"windows): {time.time()-t0:.2f}s")
 
     tok = greedy(logits[:, -1])
-    produced = [np.array(tok)]
     hidden = None
     t0 = time.time()
     n_out = 0
     while n_out < args.new_tokens:
         if args.use_mtp and cfg.mtp_depth and hidden is not None:
-            def dec_fn(p_, c_, q_toks, q_pos, caches_):
-                return E.ess_decode(p_, c_, q_toks, q_pos, caches_)
             spec = MTP.speculative_step(
                 lambda p_, c_, t_, po_, ca_: E.ess_decode(p_, c_, t_, po_, ca_),
                 params, cfg, caches, tok, hidden)
             caches = spec.caches
-            tok = spec.tokens[:, -1]
+            # continue from the last *emitted* token (accepted prefix +
+            # bonus), not position depth — tokens beyond n_accepted were
+            # rolled back; re-seed the next draft from the verify hidden
+            tok = jnp.take_along_axis(spec.tokens,
+                                      spec.n_accepted[:, None] - 1,
+                                      axis=1)[:, 0]
+            hidden = spec.hidden
             n_out += int(spec.n_accepted.min())
-            produced.append(np.array(spec.tokens))
+            print(f"spec round: accepted+bonus/seq "
+                  f"{np.array(spec.n_accepted)}")
         else:
             out = E.ess_decode(params, cfg, tok[:, None],
                                caches.lens[:, None], caches)
@@ -72,7 +76,6 @@ def main(argv=None) -> int:
             tok = greedy(out.logits[:, -1])
             hidden = out.stats["hidden"][:, -1]
             n_out += 1
-            produced.append(np.array(tok))
             print(f"step {n_out}: misses/seq "
                   f"{np.array(out.stats['misses'])} "
                   f"hits {np.array(out.stats['hits'])}")

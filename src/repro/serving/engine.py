@@ -27,6 +27,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.cache import latent_cache as LC
 from repro.configs.base import ArchConfig
@@ -39,7 +40,9 @@ from repro.models import layers as L
 from repro.models import mla as M
 from repro.models import moe as MoE
 from repro.models import transformer as T
-from repro.serving.sampling import greedy
+from repro.serving import mtp as MTP
+from repro.serving import tbo as TBO
+from repro.serving.sampling import greedy, request_key, sample
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -111,8 +114,11 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
     bi = jnp.arange(B)[:, None]
     widx = jnp.where(live[:, None],
                      lens[:, None] + jnp.arange(Q)[None, :], -1)  # [B,Q]
-    # masked slots contribute no valid cache entries to attention either
-    attn_lens = jnp.where(live, new_lens, 0)
+    # per-query attention horizon: draft q sees positions <= its own (the
+    # Q window stays causal — without this every draft would attend to
+    # entries appended by later drafts, breaking parity with sequential
+    # Q=1 steps); masked slots contribute no valid entries at all
+    attn_lens = widx + 1                                          # [B,Q]
 
     host_latent = caches.host_latent
     ikeys_all = caches.ikeys
@@ -170,7 +176,8 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
                       caches: LC.ESSCaches, *, slot: int | None = None,
                       want_logits: bool = True, collect_tail: int = 0,
                       use_kernel: bool = False
-                      ) -> tuple[Optional[jax.Array], LC.ESSCaches, tuple]:
+                      ) -> tuple[Optional[jax.Array], LC.ESSCaches, tuple,
+                                 Optional[jax.Array]]:
     """One chunked-prefill step: ``tokens [B,C]`` continue the sequence(s)
     at ``caches.lens`` and their latents/indexer keys land **directly in
     the already-mapped host pages** — no donor cache, no graft.
@@ -189,9 +196,12 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
       gather / attend stages), so any ``prefill_chunk`` is bit-identical
       to the one-shot path.
 
-    Returns ``(logits|None, caches, tails)`` where ``tails`` holds each
-    layer's post-ln1 hidden states for the last ``collect_tail`` chunk
-    positions (LRU-Warmup replay input).
+    Returns ``(logits|None, caches, tails, hidden_last)`` where ``tails``
+    holds each layer's post-ln1 hidden states for the last
+    ``collect_tail`` chunk positions (LRU-Warmup replay input) and
+    ``hidden_last`` is the post-final-norm hidden at the chunk's last
+    position (``None`` unless ``want_logits`` — the MTP draft seed when
+    a slot promotes from prefill to speculative decode).
     """
     if slot is None:
         b0, Bc = 0, tokens.shape[0]
@@ -275,13 +285,15 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
     new_lens = jax.lax.dynamic_update_slice(
         caches.lens, start + jnp.int32(C), (b0,))
     logits = None
+    hidden_last = None
     if want_logits:
         xf = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = L.unembed(params.get("unembed", params.get("embed")), xf,
                            cap=cfg.logit_softcap)
+        hidden_last = xf[:, -1]                              # [Bc, d]
     caches = caches._replace(lens=new_lens, host_latent=host,
                              ikeys=ikeys_all)
-    return logits, caches, tuple(tails)
+    return logits, caches, tuple(tails), hidden_last
 
 
 def ess_prefill(params, cfg: ArchConfig, tokens, positions, max_seq: int,
@@ -311,7 +323,7 @@ def ess_prefill(params, cfg: ArchConfig, tokens, positions, max_seq: int,
     parts = []
     for c0 in range(0, Sp, C):
         ck = min(C, Sp - c0)
-        lg, caches, _ = ess_prefill_chunk(
+        lg, caches, _, _ = ess_prefill_chunk(
             params, cfg, tokens[:, c0:c0 + ck], positions[:, c0:c0 + ck],
             caches, use_kernel=use_kernel)
         parts.append(lg)
@@ -357,10 +369,31 @@ class ServeReport:
     ttft_rounds: dict = dataclasses.field(default_factory=dict)
     ttft_s: dict = dataclasses.field(default_factory=dict)
     events: list = dataclasses.field(default_factory=list)
+    # MTP speculative accounting.  With mtp_depth > 0 each round emits a
+    # *variable* 1..depth+1 tokens per live slot (accepted drafts + the
+    # bonus token), so decode_tokens counts **accepted** tokens —
+    # `tokens_per_s` is accepted-tokens/s, while `rounds_per_s` tracks
+    # verify-step cadence; the two are equal only at Q=1.
+    spec_rounds: int = 0                # rounds run as draft+verify
+    drafted_tokens: int = 0             # greedy-slot drafts scored
+    accepted_tokens: int = 0            # drafts accepted (excl. bonus)
 
     @property
     def tokens_per_s(self) -> float:
         return self.decode_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    # alias making the MTP semantics explicit at call sites
+    accepted_tokens_per_s = tokens_per_s
+
+    @property
+    def rounds_per_s(self) -> float:
+        return self.rounds / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def accept_rate(self) -> float:
+        """Accepted drafts / drafted tokens (greedy speculative slots)."""
+        return self.accepted_tokens / self.drafted_tokens \
+            if self.drafted_tokens else 0.0
 
     @property
     def mean_ttft_s(self) -> float:
@@ -403,13 +436,27 @@ class ServeSession:
       occupant's latents.  Decode steps gate inactive slots *in-step*
       (``slot_mask``), so a freed or mid-prefill slot can never scatter a
       phantom latent row or pollute its pool between admissions.
+    * ``mtp_depth > 0`` runs each decode round as an **MTP speculative
+      round** over the live batch: draft ``mtp_depth`` tokens per slot
+      from the carried backbone hidden (``mtp_draft``), verify all drafts
+      with one ``ess_decode`` call at ``Q = depth+1``, emit the accepted
+      prefix + bonus token, and roll back lens/pools for rejected drafts
+      (frozen slots gated — see ``speculative_step``).  Greedy output is
+      bit-identical to the Q=1 baseline; sampling requests degrade to
+      exact Q=1 emission inside the round.
+    * ``tbo=True`` composes Two-Batch Overlap: every decode/verify step
+      splits the batch into two half-batches (``split_caches``), steps
+      them as independent programs so half-A's H2D pool fetches overlap
+      half-B's compute, and reconciles the shared paged host tier by page
+      ownership (``merge_caches``).
     """
 
     def __init__(self, params, cfg: ArchConfig, *, num_slots: int,
                  max_seq: int, num_host_pages: Optional[int] = None,
                  prompt_fn: Optional[Callable[[Request], jax.Array]] = None,
                  do_warmup: bool = False, use_kernel: bool = False,
-                 prefill_chunk: int = 64):
+                 prefill_chunk: int = 64, mtp_depth: int = 0,
+                 tbo: bool = False):
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -417,6 +464,11 @@ class ServeSession:
         self.do_warmup = do_warmup
         self.use_kernel = use_kernel
         self.prefill_chunk = max(1, prefill_chunk)
+        if mtp_depth > 0 and mtp_depth > cfg.mtp_depth:
+            raise ValueError(f"mtp_depth {mtp_depth} > cfg.mtp_depth "
+                             f"{cfg.mtp_depth} stacked draft modules")
+        self.mtp_depth = max(0, mtp_depth)
+        self.tbo = tbo and num_slots >= 2
         self.paged = LC.uses_paged_host(cfg)
         blocks_per_slot = LC.num_blocks(cfg, max_seq) if cfg.ess.enabled \
             else 0
@@ -436,6 +488,13 @@ class ServeSession:
                                admission_gate=self._admission_gate,
                                release_hook=self._release_slot)
         self.tok = jnp.zeros((num_slots,), jnp.int32)
+        # backbone post-final-norm hidden at each slot's last accepted
+        # position — the MTP draft seed, carried across rounds and across
+        # the prefill -> decode promotion
+        self.hidden = jnp.zeros((num_slots, cfg.d_model), cfg.param_dtype)
+        # per-request emitted token stream (prefill first-token + decode
+        # emissions, truncated to max_new_tokens); reset on re-admission
+        self.outputs: dict[int, list[int]] = {}
         self.report = ServeReport(num_pages=self.num_pages)
         self._prompt_fn = prompt_fn or self._default_prompt
         # resources promised to earlier admissions of the same admit batch
@@ -534,6 +593,8 @@ class ServeSession:
             self._sample_pages()
             self.free_pool_entries -= self.pool_entries_per_slot
             self._prefill[slot] = _PrefillTask(req, self._prompt_fn(req))
+            # a preempted re-admission regenerates its full stream
+            self.outputs[req.rid] = []
             self.report.events.append(
                 f"round {self._round}: rid={req.rid} -> slot {slot} "
                 f"(prefill {req.prompt_len} toks, "
@@ -558,7 +619,7 @@ class ServeSession:
             if self.do_warmup else 0
         toks = task.tokens[:, c0:c0 + ck]
         pos = jnp.arange(c0, c0 + ck, dtype=jnp.int32)[None]
-        lg, self.caches, tails = ess_prefill_chunk(
+        lg, self.caches, tails, hid_last = ess_prefill_chunk(
             self.params, self.cfg, toks, pos, self.caches, slot=slot,
             want_logits=last, collect_tail=min(W, ck),
             use_kernel=self.use_kernel)
@@ -577,7 +638,14 @@ class ServeSession:
         if last:
             if W > 0:
                 self._warmup_slot(slot, tuple(task.tails), n)
-            self.tok = self.tok.at[slot].set(greedy(lg[:, -1])[0])
+            req = task.req
+            if req.sampling:
+                t0 = self._draw(req, lg[0, -1], 0)
+            else:
+                t0 = greedy(lg[:, -1])[0]
+            self.tok = self.tok.at[slot].set(t0)
+            self.hidden = self.hidden.at[slot].set(hid_last[0])
+            self.outputs[req.rid] = [int(t0)]
             self.sched.promote(slot)
             del self._prefill[slot]
             rid = task.req.rid
@@ -615,26 +683,136 @@ class ServeSession:
             pools.append(LC.graft_pool_into(full, one, slot))
         self.caches = self.caches._replace(pools=tuple(pools))
 
+    # -- decode stepping -----------------------------------------------------
+
+    def _ess_step(self, params, cfg, tokens, positions, caches, *,
+                  slot_mask=None) -> DecodeOut:
+        return ess_decode(params, cfg, tokens, positions, caches,
+                          use_kernel=self.use_kernel, slot_mask=slot_mask)
+
+    def _raw_step(self, tokens, positions, caches, mask) -> DecodeOut:
+        """One (possibly TBO-split) model step over the full slot batch."""
+        if self.tbo:
+            h = self.num_slots // 2
+            ca, cb = TBO.split_caches(caches, h)
+            logits, ca2, cb2, stats = TBO.two_batch_step(
+                self._ess_step, self.params, self.cfg, tokens, positions,
+                ca, cb, slot_mask=mask)
+            return DecodeOut(logits, TBO.merge_caches(ca2, cb2), stats)
+        return self._ess_step(self.params, self.cfg, tokens, positions,
+                              caches, slot_mask=mask)
+
+    def _slot_req(self, slot: int) -> Request:
+        return self.sched.running[self.sched.slots[slot].rid]
+
+    def _draw(self, req: Request, logits: jax.Array, index: int):
+        """Sample one token for a sampling request.  ``index`` is the
+        chain position (0 = prefill first token, ``generated + 1`` in
+        decode rounds) — the single key-derivation point that keeps
+        sampled streams identical across Q=1 and speculative modes."""
+        return sample(request_key(req.sample_seed, index), logits,
+                      req.temperature, req.top_k, req.top_p)
+
+    def _emit(self, slot: int, req: Request, tokens: list[int]) -> int:
+        """Deliver a round's emitted tokens for one slot: extend the
+        request's output stream (truncated to ``max_new_tokens``, counting
+        the prefill first-token) and return the generated-budget charge
+        (clamped so a verify round never over-runs the budget).  The
+        stream extension is also clamped by the scheduler's remaining
+        headroom: admission screens ``prompt + max_new <= max_seq`` so
+        the max_seq clamp is normally slack, but tokens verified past the
+        cache horizon must never be delivered."""
+        out = self.outputs.setdefault(req.rid, [])
+        remaining = self.sched.remaining(slot)
+        room = min(req.max_new_tokens - len(out), remaining)
+        out.extend(tokens[:max(0, room)])
+        return min(len(tokens), remaining)
+
     def decode_round(self) -> list[Request]:
         """One decode step over the running slots; returns newly finished.
 
         Inactive and mid-prefill slots are masked *inside* the step
         (``slot_mask``): their host pages, pool state and ``lens`` are
-        untouched — no post-hoc fixups."""
+        untouched — no post-hoc fixups.  With ``mtp_depth > 0`` the round
+        is a speculative draft+verify (``_spec_decode_round``)."""
         self._sample_pages()
         active = self.sched.active_slots()
         if not active:
             return []
         mask = jnp.zeros((self.num_slots,), bool) \
             .at[jnp.asarray(active)].set(True)
-        out = ess_decode(self.params, self.cfg, self.tok[:, None],
-                         self.caches.lens[:, None], self.caches,
-                         use_kernel=self.use_kernel, slot_mask=mask)
+        if self.mtp_depth > 0:
+            return self._spec_decode_round(active, mask)
+        out = self._raw_step(self.tok[:, None], self.caches.lens[:, None],
+                             self.caches, mask)
         self.caches = out.caches
-        self.tok = jnp.where(mask, greedy(out.logits[:, -1]), self.tok)
-        done = self.sched.record_tokens({i: 1 for i in active})
+        self.hidden = jnp.where(mask[:, None], out.stats["hidden"][:, -1],
+                                self.hidden)
+        logits_last = out.logits[:, -1]
+        greedy_tok = greedy(logits_last)
+        new_tok = self.tok
+        slot_tokens = {}
+        for i in active:
+            req = self._slot_req(i)
+            if req.sampling:
+                t = self._draw(req, logits_last[i], req.generated + 1)
+            else:
+                t = greedy_tok[i]
+            new_tok = new_tok.at[i].set(t)
+            slot_tokens[i] = self._emit(i, req, [int(t)])
+        self.tok = new_tok
+        done = self.sched.record_tokens(slot_tokens)
         self.report.rounds += 1
-        self.report.decode_tokens += len(active)
+        self.report.decode_tokens += sum(slot_tokens.values())
+        return done
+
+    def _spec_decode_round(self, active: list[int],
+                           mask: jax.Array) -> list[Request]:
+        """One MTP speculative round over the live continuous batch:
+        draft ``mtp_depth`` tokens per slot from the carried hidden,
+        verify them all with a single Q=depth+1 step (TBO-split when
+        enabled), emit each live slot's accepted prefix + bonus token and
+        let ``speculative_step`` roll back lens/pools for the rejected
+        tail.  Sampling slots force-reject their drafts and draw from the
+        verify step's position-0 logits — exactly the Q=1 distribution,
+        with the same PRNG key the Q=1 path would use."""
+        depth = self.mtp_depth
+        sampling = np.zeros((self.num_slots,), bool)
+        for i in active:
+            sampling[i] = self._slot_req(i).sampling
+        sample_mask = jnp.asarray(sampling)
+
+        def dec_fn(params, cfg, q_toks, q_pos, caches):
+            return self._raw_step(q_toks, q_pos, caches, mask)
+
+        spec = MTP.speculative_step(
+            dec_fn, self.params, self.cfg, self.caches, self.tok,
+            self.hidden, slot_mask=mask, sample_mask=sample_mask,
+            depth=depth)
+        self.caches = spec.caches
+        self.hidden = jnp.where(mask[:, None], spec.hidden, self.hidden)
+        n_emit = np.asarray(spec.n_accepted)          # [B] accepted + bonus
+        toks = np.asarray(spec.tokens)                # [B, depth+1]
+        new_tok = self.tok
+        slot_tokens = {}
+        for i in active:
+            req = self._slot_req(i)
+            if sampling[i]:
+                t = self._draw(req, spec.logits[i, 0], req.generated + 1)
+                new_tok = new_tok.at[i].set(t)
+                slot_tokens[i] = self._emit(i, req, [int(t)])
+            else:
+                n = int(n_emit[i])
+                emit = [int(t) for t in toks[i, :n]]
+                new_tok = new_tok.at[i].set(emit[-1])
+                slot_tokens[i] = self._emit(i, req, emit)
+                self.report.drafted_tokens += depth
+                self.report.accepted_tokens += n - 1
+        self.tok = new_tok
+        done = self.sched.record_tokens(slot_tokens)
+        self.report.rounds += 1
+        self.report.spec_rounds += 1
+        self.report.decode_tokens += sum(slot_tokens.values())
         return done
 
     def step(self) -> list[Request]:

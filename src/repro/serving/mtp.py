@@ -30,15 +30,22 @@ from repro.serving.sampling import greedy
 
 
 def mtp_draft(params: dict, cfg: ArchConfig, hidden_last: jax.Array,
-              first_tok: jax.Array) -> jax.Array:
+              first_tok: jax.Array, *, depth: int | None = None
+              ) -> jax.Array:
     """hidden_last [B,d] (post-final-norm at the last accepted position),
-    first_tok [B] (the token just sampled) -> drafts [B, mtp_depth]."""
+    first_tok [B] (the token just sampled) -> drafts [B, depth]
+    (``depth`` defaults to ``cfg.mtp_depth`` and may be lowered at serve
+    time — the paper's MTP=2 vs MTP=4 deployment knob)."""
+    depth = cfg.mtp_depth if depth is None else depth
+    if depth > cfg.mtp_depth:
+        raise ValueError(f"draft depth {depth} > cfg.mtp_depth "
+                         f"{cfg.mtp_depth} stacked MTP modules")
     emb_w = params["embed"]
     head_w = params.get("unembed", params.get("embed"))
     h = hidden_last
     tok = first_tok
     drafts = []
-    for k in range(cfg.mtp_depth):
+    for k in range(depth):
         mp = jax.tree.map(lambda a: a[k], params["mtp"])
         e = L.embed(emb_w, tok).astype(h.dtype)
         z = jnp.concatenate([L.rmsnorm(mp["ln_h"], h, cfg.norm_eps),
@@ -65,19 +72,37 @@ class SpecOut(NamedTuple):
     n_accepted: jax.Array # [B] tokens actually emitted (1..depth+1)
     caches: object
     hidden: jax.Array     # [B, d] hidden at the last accepted position
+    logits: jax.Array | None = None   # [B, depth+1, V] verify logits
 
 
 def speculative_step(decode_fn: Callable, params: dict, cfg: ArchConfig,
-                     caches, prev_tok: jax.Array, prev_hidden: jax.Array
-                     ) -> SpecOut:
+                     caches, prev_tok: jax.Array, prev_hidden: jax.Array,
+                     *, slot_mask: jax.Array | None = None,
+                     sample_mask: jax.Array | None = None,
+                     depth: int | None = None) -> SpecOut:
     """One MTP speculative round.
 
     decode_fn(params, cfg, tokens [B,Q], positions [B,Q], caches)
       -> DecodeOut with stats["hidden"] [B,Q,d].
+
+    ``slot_mask`` [B] bool marks the live decode slots of a continuous
+    batch (the decode_fn is expected to gate the same mask *inside* the
+    step).  The rollback is gated on it: a frozen slot's step appended
+    nothing, so ``lens_after == lens`` and the unconditional correction
+    would *shrink* the frozen slot by ``depth - n_acc`` and drop its live
+    pool entries.
+
+    ``sample_mask`` [B] bool marks slots emitting with stochastic
+    sampling: their greedy drafts are force-rejected (``n_acc = 0``) so
+    the round degrades to an exact single-token step for them — the
+    caller samples their next token from ``SpecOut.logits[:, 0]``, which
+    is exactly the Q=1 distribution.  Greedy slots keep full
+    greedy-consistent acceptance.
     """
     B = prev_tok.shape[0]
-    depth = cfg.mtp_depth
-    drafts = mtp_draft(params, cfg, prev_hidden, prev_tok)       # [B,depth]
+    depth = cfg.mtp_depth if depth is None else depth
+    drafts = mtp_draft(params, cfg, prev_hidden, prev_tok,
+                       depth=depth)                              # [B,depth]
     q_tokens = jnp.concatenate([prev_tok[:, None], drafts], axis=1)
     positions = caches.lens[:, None] + jnp.arange(depth + 1)[None, :]
 
@@ -88,17 +113,26 @@ def speculative_step(decode_fn: Callable, params: dict, cfg: ArchConfig,
     # slot i (greedy spec-decode); emitted tokens = model_next[:, :n+1]
     match = (drafts == model_next[:, :depth])
     n_acc = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)  # [B]
-    emitted = depth + 1  # fixed-width output; valid prefix = n_acc + 1
+    if sample_mask is not None:
+        n_acc = jnp.where(sample_mask, 0, n_acc)
 
-    # rollback: the decode pass appended depth+1 entries; keep the accepted
-    # prefix + the bonus token (spec-decode emits n_acc+1 tokens per round)
+    # rollback: a live slot's decode pass appended depth+1 entries; keep
+    # the accepted prefix + the bonus token (spec-decode emits n_acc+1
+    # tokens per round).  Frozen slots (slot_mask False: freed or
+    # mid-prefill) appended nothing and keep their lens verbatim.
+    live = jnp.ones((B,), bool) if slot_mask is None else slot_mask
     new_caches = out.caches
     lens_after = new_caches.lens if hasattr(new_caches, "lens") else \
         new_caches["lens"]
-    corrected = lens_after - (depth + 1) + (n_acc + 1)
+    corrected = jnp.where(live,
+                          lens_after - (depth + 1) + (n_acc + 1),
+                          lens_after)
     if hasattr(new_caches, "_replace"):
         new_caches = new_caches._replace(lens=corrected)
         if hasattr(new_caches, "pools"):
+            # after the step's admit+tick (see LP.invalidate_beyond's
+            # ordering contract): drop pool entries the flattened Q>1
+            # lookup admitted at now-rejected draft positions
             inv = tuple(LP.invalidate_beyond(p_, corrected)
                         for p_ in new_caches.pools)
             new_caches = new_caches._replace(pools=inv)
@@ -109,4 +143,4 @@ def speculative_step(decode_fn: Callable, params: dict, cfg: ArchConfig,
     hid = out.stats["hidden"]                                    # [B,Q,d]
     last_idx = jnp.clip(n_acc, 0, depth)
     hidden = jnp.take_along_axis(hid, last_idx[:, None, None], axis=1)[:, 0]
-    return SpecOut(model_next, n_acc + 1, new_caches, hidden)
+    return SpecOut(model_next, n_acc + 1, new_caches, hidden, out.logits)

@@ -10,6 +10,15 @@ def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def request_key(seed: int, index: int) -> jax.Array:
+    """Per-emission PRNG key for one request: deterministic in
+    ``(seed, emission index)``, so a preempted request's re-run replays
+    the identical sampled stream (continuous-batching determinism) and
+    MTP-speculative vs Q=1 serve modes draw the same tokens (both draw
+    once per chain position)."""
+    return jax.random.fold_in(jax.random.key(seed), index)
+
+
 def sample(key: jax.Array, logits: jax.Array, temperature: float = 1.0,
            top_k: int | None = None, top_p: float | None = None) -> jax.Array:
     if temperature <= 0.0:

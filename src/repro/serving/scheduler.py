@@ -28,6 +28,22 @@ class Request:
     slot: Optional[int] = None
     finished: bool = False
     preempted_count: int = 0
+    # per-request sampling: temperature == 0.0 -> greedy (the default);
+    # > 0 draws from the (temperature, top_k, top_p)-shaped distribution
+    # with a PRNG keyed on (seed, emission index) — see
+    # repro.serving.sampling.request_key.  seed=None derives from rid.
+    temperature: float = 0.0
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+    seed: Optional[int] = None
+
+    @property
+    def sampling(self) -> bool:
+        return self.temperature > 0.0
+
+    @property
+    def sample_seed(self) -> int:
+        return self.rid if self.seed is None else self.seed
 
 
 @dataclasses.dataclass
@@ -121,8 +137,26 @@ class Scheduler:
         if s.active and s.phase == "prefill":
             s.phase = "decode"
 
+    def remaining(self, slot: int) -> int:
+        """Tokens slot ``slot``'s request may still emit before finishing
+        (budget *and* max_seq headroom).  An MTP speculative round clamps
+        its accepted+bonus emission to this, so a request never over-runs
+        ``max_new_tokens`` just because a round verified more drafts than
+        it had budget left."""
+        s = self.slots[slot]
+        if not s.active:
+            return 0
+        req = self.running[s.rid]
+        return max(0, min(req.max_new_tokens - req.generated,
+                          self.max_seq - s.len))
+
     def record_tokens(self, slot_tokens: dict[int, int]) -> list[Request]:
-        """slot -> n tokens emitted this step; returns newly finished."""
+        """slot -> n tokens emitted this step; returns newly finished.
+
+        ``n`` may vary per slot and per round (Q>1 speculative decode
+        emits ``n_accepted + 1`` tokens a round); ``s.len`` advances by
+        exactly ``n`` so the scheduler's length view tracks the engine's
+        rolled-back cache ``lens``."""
         done = []
         for i, n in slot_tokens.items():
             s = self.slots[i]

@@ -6,7 +6,12 @@ all-to-all / host fetches overlap half-B's compute under the XLA scheduler
 (the TPU equivalent of SGLang's TBO dual-stream schedule).
 
 For the ESS engine, DBA overlap (repro.core.overlap) already splits the
-*indexer* within a half; TBO composes with it at the step level.
+*indexer* within a half; TBO composes with it at the step level.  The
+engine composes ``split_caches -> two_batch_step -> merge_caches``; with
+the paged host tier the merge is a *page-ownership select*, not a concat —
+both halves carry the whole global page pool, so keeping either half's
+``host_latent`` verbatim would silently drop the other half's D2H writes
+(the page-merge bug this module's merge fixes).
 """
 
 from __future__ import annotations
@@ -16,17 +21,39 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.cache import latent_cache as LC
+from repro.core import lru_pool as LP
 
-def two_batch_step(step_fn: Callable, params, cfg, tokens, positions, caches_a,
-                   caches_b):
-    """tokens/positions [B,Q] split evenly; caches pre-split by the engine.
-    Returns (logits [B,Q,V], caches_a', caches_b')."""
+
+def two_batch_step(step_fn: Callable, params, cfg, tokens, positions,
+                   caches_a, caches_b, *,
+                   slot_mask: jax.Array | None = None):
+    """tokens/positions [B,Q] split at ``B // 2``; caches pre-split by the
+    engine (:func:`split_caches`).  ``slot_mask`` [B] (continuous-batching
+    live mask) is split alongside and forwarded to ``step_fn`` as a
+    keyword, so freed / mid-prefill slots stay gated inside each half.
+
+    Returns ``(logits [B,Q,V], caches_a', caches_b', stats)`` where
+    ``stats`` is the per-key batch concatenation of the halves' step stats
+    (hits/misses/overflow [B], hidden [B,Q,d]).  Reconcile the halves with
+    :func:`merge_caches` — with a paged host tier neither half's
+    ``host_latent`` alone contains both halves' writes.
+    """
     B = tokens.shape[0]
     h = B // 2
-    out_a = step_fn(params, cfg, tokens[:h], positions[:h], caches_a)
-    out_b = step_fn(params, cfg, tokens[h:], positions[h:], caches_b)
+    kw_a, kw_b = {}, {}
+    if slot_mask is not None:
+        kw_a["slot_mask"] = slot_mask[:h]
+        kw_b["slot_mask"] = slot_mask[h:]
+    out_a = step_fn(params, cfg, tokens[:h], positions[:h], caches_a, **kw_a)
+    out_b = step_fn(params, cfg, tokens[h:], positions[h:], caches_b, **kw_b)
     logits = jnp.concatenate([out_a.logits, out_b.logits], axis=0)
-    return logits, out_a.caches, out_b.caches
+    stats = {}
+    for k in out_a.stats:
+        va, vb = out_a.stats[k], out_b.stats[k]
+        stats[k] = jnp.concatenate([va, vb], axis=0) \
+            if getattr(va, "ndim", 0) > 0 else va
+    return logits, out_a.caches, out_b.caches, stats
 
 
 def split_caches(caches, half: int):
@@ -61,3 +88,51 @@ def split_caches(caches, half: int):
             return a[:, lo:hi]
         return jax.tree.map(one, caches)
     return cut(0, half), cut(half, None)
+
+
+def merge_caches(caches_a, caches_b):
+    """Reconcile the two halves of a TBO step back into one full-batch
+    :class:`~repro.cache.latent_cache.ESSCaches`.
+
+    Batch-dim leaves (lens, ikeys, pool rows, block tables) concatenate.
+    The host tier needs layout-aware reconciliation:
+
+    * **paged** — both halves stepped against the *same* global page pool
+      and wrote disjoint physical pages (each slot scatters only through
+      its own block-table rows).  Select half-B's writes out of half-A's
+      copy by page ownership (:func:`LC.pages_owned_mask` over half-B's
+      block tables); pages mapped by neither half (free pages) come from
+      half-A verbatim — no half wrote them.
+    * **dense** — each half carried its own ``[L, B/2, S, D]`` slice;
+      concatenate on the batch axis.
+
+    Pool ``step`` clocks advanced in lockstep (one tick per step per
+    half), so half-A's scalar is kept.
+    """
+    a_paged = getattr(caches_a, "block_tables", None) is not None
+    b_paged = getattr(caches_b, "block_tables", None) is not None
+    if a_paged != b_paged:
+        raise ValueError("cannot merge paged and dense cache halves")
+    if a_paged:
+        NP = caches_a.host_latent.shape[1]
+        owned_b = LC.pages_owned_mask(caches_b.block_tables, NP)
+        host = jnp.where(owned_b[None, :, None, None],
+                         caches_b.host_latent, caches_a.host_latent)
+        bt = jnp.concatenate([caches_a.block_tables,
+                              caches_b.block_tables], axis=0)
+    else:
+        host = jnp.concatenate([caches_a.host_latent,
+                                caches_b.host_latent], axis=1)
+        bt = None
+    pools = tuple(
+        LP.PoolState(*(jnp.concatenate([la, lb], axis=0)
+                       if la.ndim > 0 else la
+                       for la, lb in zip(pa, pb)))
+        for pa, pb in zip(caches_a.pools, caches_b.pools))
+    return caches_a._replace(
+        lens=jnp.concatenate([caches_a.lens, caches_b.lens], axis=0),
+        host_latent=host,
+        ikeys=tuple(jnp.concatenate([ia, ib], axis=0)
+                    for ia, ib in zip(caches_a.ikeys, caches_b.ikeys)),
+        pools=pools,
+        block_tables=bt)

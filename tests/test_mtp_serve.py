@@ -1,0 +1,279 @@
+"""MTP speculative decode + TBO wired into the continuous-batching serve
+loop.
+
+Covers this PR's tentpole and satellites:
+
+* Q>1 ``ess_decode`` parity: one Q=3 verify step == three sequential Q=1
+  steps, bit-identical on lens / indexer caches / host pages (dense *and*
+  paged) — requires per-query causal masking, per-query fetch validity
+  and duplicate-miss dedup in the flattened pool lookup;
+* pool-map invariants after flattened Q>1 lookup + admit + rollback;
+* MTP-enabled ``ServeSession`` (depth 2, greedy) emits token streams
+  bit-identical to the Q=1 baseline, solo and composed with TBO;
+* full-acceptance arithmetic (zero params -> every draft accepted),
+  including the budget clamp when a verify round out-emits the request;
+* a slot finishing mid-spec-round leaves the freed slot's pages and pool
+  untouched;
+* per-request sampling: deterministic keyed streams, identical between
+  Q=1 and speculative serve modes (sampling slots force-reject drafts).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import latent_cache as LC
+from repro.configs import get_config
+from repro.core import lru_pool as LP
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving import engine as E
+from repro.serving.scheduler import Request
+
+
+def smoke_cfg(mtp_depth=None, **ess_overrides):
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    if ess_overrides:
+        cfg = dataclasses.replace(
+            cfg, ess=dataclasses.replace(cfg.ess, **ess_overrides))
+    if mtp_depth is not None:
+        cfg = dataclasses.replace(cfg, mtp_depth=mtp_depth)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Q>1 decode parity (the verify step the speculative round relies on)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_q3_decode_matches_three_q1_steps(paged):
+    """A single Q=3 step must leave lens / indexer caches / host pages
+    bit-identical to three sequential Q=1 steps.  ``overlap='none'``
+    keeps the attention partition-invariant (one softmax over the union),
+    so only the per-query causal mask and miss dedup are on trial."""
+    cfg = smoke_cfg(max_miss_ratio=1.0, overlap="none", paged_host=paged)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    B, S, Smax, Q = 2, 14, 40, 3
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    _, caches = E.ess_prefill(params, cfg, toks, pos, Smax, do_warmup=False)
+    assert caches.paged == paged
+    nxt = jax.random.randint(jax.random.key(2), (B, Q), 0, cfg.vocab_size)
+
+    flat = E.ess_decode(params, cfg, nxt,
+                        caches.lens[:, None] + jnp.arange(Q)[None], caches)
+
+    c = caches
+    seq_logits = []
+    for q in range(Q):
+        o = E.ess_decode(params, cfg, nxt[:, q:q + 1], c.lens[:, None], c)
+        seq_logits.append(o.logits[:, 0])
+        c = o.caches
+
+    np.testing.assert_array_equal(np.array(flat.caches.lens),
+                                  np.array(c.lens))
+    for l in range(cfg.num_layers):
+        np.testing.assert_array_equal(np.array(flat.caches.ikeys[l]),
+                                      np.array(c.ikeys[l]))
+    np.testing.assert_array_equal(np.array(flat.caches.host_latent),
+                                  np.array(c.host_latent))
+    # logits agree per position (same attended sets and values; fp-exact
+    # here because the union attention is partition-invariant)
+    for q in range(Q):
+        np.testing.assert_allclose(np.array(flat.logits[:, q]),
+                                   np.array(seq_logits[q]), atol=2e-2)
+        np.testing.assert_array_equal(
+            np.argmax(np.array(flat.logits[:, q]), -1),
+            np.argmax(np.array(seq_logits[q]), -1))
+    # the flattened lookup+admit left every pool map mirror-consistent
+    for p in flat.caches.pools:
+        assert LP.check_consistent(p)
+
+
+def test_duplicate_miss_requests_admit_once():
+    """Q>1 flattened lookups repeat positions across drafts.  Duplicate
+    misses must share one miss-buffer rank (one fetch, one admit): a
+    duplicate admit left a zombie forward entry whose eventual eviction
+    clobbered the live duplicate's inverse link."""
+    pool = LP.init_pool(1, 8, 32, 4, jnp.float32)
+    ids = jnp.array([[5, 9, 5, 9, 2]], jnp.int32)    # 3 unique, 2 dups
+    pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=5)
+    assert int(stats.misses[0]) == 3                 # unique fetch rows
+    np.testing.assert_array_equal(np.array(lk.miss_ids[0]),
+                                  [5, 9, 2, -1, -1])
+    # duplicate requests point at the first occurrence's rank
+    np.testing.assert_array_equal(np.array(lk.miss_rank[0, :5]),
+                                  [0, 1, 0, 1, 2])
+    pool = LP.admit(pool, lk.miss_ids,
+                    jnp.arange(5 * 4, dtype=jnp.float32).reshape(1, 5, 4))
+    pool = LP.tick(pool)
+    assert LP.check_consistent(pool)
+    pids = np.array(pool.ids[0])
+    assert (pids == 5).sum() == 1 and (pids == 9).sum() == 1
+
+
+def test_invalidate_beyond_after_admit_consistent():
+    """Rollback ordering contract: the verify step admits rows at draft
+    positions, then ``invalidate_beyond`` drops everything >= the
+    corrected lens — maps stay mirror-consistent and dropped positions
+    MISS on re-lookup."""
+    pool = LP.init_pool(1, 8, 32, 4, jnp.float32)
+    ids = jnp.array([[3, 11, 12]], jnp.int32)        # 11, 12 = draft rows
+    pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=3)
+    pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 3, 4)))
+    pool = LP.tick(pool)
+    pool = LP.invalidate_beyond(pool, jnp.array([11]))   # 1 draft accepted
+    assert LP.check_consistent(pool)
+    pool, lk2, st2 = LP.lookup(pool, ids, ids >= 0, max_misses=3)
+    np.testing.assert_array_equal(np.array(lk2.hit[0]),
+                                  [True, False, False])
+    assert int(st2.misses[0]) == 2
+
+
+# ---------------------------------------------------------------------------
+# Serve-loop stream parity: MTP (and TBO) vs the Q=1 baseline
+# ---------------------------------------------------------------------------
+
+def _requests():
+    return [Request(rid=0, prompt_len=10, max_new_tokens=5),
+            Request(rid=1, prompt_len=8, max_new_tokens=3),
+            Request(rid=2, prompt_len=12, max_new_tokens=6),
+            Request(rid=3, prompt_len=9, max_new_tokens=4)]
+
+
+def _run(params, cfg, reqs, **kw):
+    session = E.ServeSession(params, cfg, num_slots=2, max_seq=32, **kw)
+    report = session.run(reqs, max_rounds=100)
+    assert sorted(report.finished_rids) == sorted(r.rid for r in reqs)
+    return session, report
+
+
+def test_serve_mtp_stream_parity_greedy():
+    """Acceptance criterion: an MTP-enabled ServeSession.run (depth 2,
+    greedy) emits token streams bit-identical to the Q=1 baseline for
+    every request."""
+    cfg = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    base, rb = _run(params, cfg, _requests())
+    spec, rs = _run(params, cfg, _requests(), mtp_depth=2)
+    assert base.outputs == spec.outputs
+    assert all(len(v) == r.max_new_tokens
+               for v, r in zip((base.outputs[i] for i in range(4)),
+                               _requests()))
+    assert rs.spec_rounds == rs.rounds > 0
+    assert rs.drafted_tokens > 0
+    assert rs.decode_tokens == rb.decode_tokens
+    assert rs.rounds <= rb.rounds          # >= 1 token per verify round
+
+
+def test_serve_mtp_tbo_stream_parity():
+    """TBO composes with the speculative rounds: half-A's pool fetches
+    overlap half-B's verify compute, page merge keeps both halves' D2H
+    writes, and the emitted streams stay bit-identical."""
+    cfg = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    base, _ = _run(params, cfg, _requests())
+    tbo_q1, _ = _run(params, cfg, _requests(), tbo=True)
+    tbo_spec, rt = _run(params, cfg, _requests(), mtp_depth=2, tbo=True)
+    assert base.outputs == tbo_q1.outputs
+    assert base.outputs == tbo_spec.outputs
+    assert rt.spec_rounds > 0
+
+
+def test_serve_mtp_full_acceptance_and_budget_clamp():
+    """Zero params make every draft match the model (all-argmax-0), so
+    depth 2 emits exactly 3 tokens per live slot per round: rounds shrink
+    ~3x, accept_rate is 1.0, and a request whose budget is not a multiple
+    of 3 is clamped mid-round instead of over-running max_new_tokens."""
+    cfg = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0)
+    params = jax.tree.map(jnp.zeros_like,
+                          init_params(jax.random.key(0), T.model_def(cfg)))
+    reqs = [Request(rid=0, prompt_len=8, max_new_tokens=4),
+            Request(rid=1, prompt_len=8, max_new_tokens=7)]
+    base, rb = _run(params, cfg, [dataclasses.replace(r) for r in reqs])
+    spec, rs = _run(params, cfg, [dataclasses.replace(r) for r in reqs],
+                    mtp_depth=2)
+    assert rs.accept_rate == 1.0
+    assert rs.rounds < rb.rounds
+    assert base.outputs == spec.outputs
+    for r in reqs:
+        assert len(spec.outputs[r.rid]) == r.max_new_tokens
+    # the scheduler's generated counters never over-ran the budget
+    assert all(req.generated == req.max_new_tokens
+               for req in spec.sched.finished)
+
+
+def test_spec_round_mid_finish_leaves_freed_slot_untouched():
+    """A slot finishing during a speculative round frees its pages and
+    pool; subsequent spec rounds over the surviving slot must leave the
+    freed slot's state and its released pages bit-untouched."""
+    cfg = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    session = E.ServeSession(params, cfg, num_slots=2, max_seq=32,
+                             mtp_depth=2)
+    reqs = [Request(rid=0, prompt_len=8, max_new_tokens=2),
+            Request(rid=1, prompt_len=8, max_new_tokens=12)]
+    for r in reqs:
+        session.submit(r)
+    for _ in range(30):
+        session.step()
+        if 0 in session.report.finished_rids or \
+                any(rq.rid == 0 for rq in session.sched.finished):
+            break
+    assert any(rq.rid == 0 for rq in session.sched.finished)
+    assert session.sched.running                  # rid=1 still decoding
+    slot1 = session.sched.finished[0].slot        # may be None; find freed
+    freed = [i for i, s in enumerate(session.sched.slots) if not s.active]
+    assert len(freed) == 1
+    f = freed[0]
+    live = 1 - f
+    host_before = np.array(session.caches.host_latent)
+    live_pages = np.array(session.caches.block_tables[live])
+    live_pages = set(live_pages[live_pages >= 0].tolist())
+    for _ in range(3):                            # more spec rounds
+        session.step()
+    assert int(session.caches.lens[f]) == 0
+    for p in session.caches.pools:
+        assert (np.array(p.ids[f]) == -1).all()
+    assert (np.array(session.caches.block_tables[f]) == -1).all()
+    host_after = np.array(session.caches.host_latent)
+    NP = host_after.shape[1]
+    for pg in range(NP):
+        if pg not in live_pages:                  # freed/released pages
+            np.testing.assert_array_equal(host_after[:, pg],
+                                          host_before[:, pg],
+                                          err_msg=f"page {pg} touched")
+
+
+# ---------------------------------------------------------------------------
+# Per-request sampling through the serve loop
+# ---------------------------------------------------------------------------
+
+def test_serve_sampling_deterministic_and_mode_invariant():
+    """temperature/top_k/top_p + a per-slot PRNG key thread through
+    Request/ServeSession: streams are deterministic in the request seed,
+    and identical between Q=1 and speculative modes (sampling slots
+    force-reject drafts and draw from the exact Q=1 distribution with the
+    same key)."""
+    cfg = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+
+    def reqs():
+        return [Request(rid=0, prompt_len=10, max_new_tokens=5),
+                Request(rid=1, prompt_len=8, max_new_tokens=6,
+                        temperature=0.8, top_k=64, seed=123)]
+
+    a, ra = _run(params, cfg, reqs())
+    b, _ = _run(params, cfg, reqs())
+    assert a.outputs == b.outputs                 # keyed determinism
+    spec, rs = _run(params, cfg, reqs(), mtp_depth=2)
+    assert spec.outputs == a.outputs              # mode-invariant sampling
+    assert rs.spec_rounds > 0
+    greedy_all, _ = _run(params, cfg, [
+        Request(rid=0, prompt_len=10, max_new_tokens=5),
+        Request(rid=1, prompt_len=8, max_new_tokens=6)])
+    assert greedy_all.outputs[0] == a.outputs[0]  # greedy slot unaffected
+    assert greedy_all.outputs[1] != a.outputs[1]  # sampling engaged

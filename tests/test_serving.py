@@ -114,8 +114,56 @@ def test_sampling_greedy_and_temperature():
     assert int(t[0]) in (0, 1)
 
 
+def test_mtp_spec_rollback_gated_on_slot_mask():
+    """Regression (frozen-slot rollback): a slot frozen by ``slot_mask``
+    (freed or mid-prefill) appends nothing during the verify step, so
+    ``lens_after == lens``.  The old unconditional correction
+    ``lens_after - (depth+1) + (n_acc+1)`` *shrank* the frozen slot's lens
+    by ``depth - n_acc`` and ``invalidate_beyond`` then dropped its live
+    pool entries."""
+    from repro.core import lru_pool as LP
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    cfg = dataclasses.replace(
+        cfg, ess=dataclasses.replace(cfg.ess, max_miss_ratio=1.0))
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    B, S, Smax = 2, 16, 48
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    logits, caches = E.ess_prefill(params, cfg, toks, pos, Smax,
+                                   do_warmup=False)
+    tok = greedy(logits[:, -1])
+    # one live decode step populates both slots' pools + hidden
+    out = E.ess_decode(params, cfg, tok[:, None], caches.lens[:, None],
+                       caches)
+    caches, hidden, tok = out.caches, out.stats["hidden"][:, -1], \
+        greedy(out.logits[:, -1])
+    lens_before = np.array(caches.lens)
+    ids_before = [np.array(p.ids[1]) for p in caches.pools]
+    assert any((i >= 0).any() for i in ids_before)   # slot 1 has live entries
+
+    mask = jnp.asarray([True, False])
+
+    def dec_fn(p_, c_, t_, po_, ca_):
+        return E.ess_decode(p_, c_, t_, po_, ca_, slot_mask=mask)
+
+    spec = MTP.speculative_step(dec_fn, params, cfg, caches, tok, hidden,
+                                slot_mask=mask)
+    lens_after = np.array(spec.caches.lens)
+    # live slot advanced by its accepted+bonus count; frozen slot untouched
+    assert lens_after[0] == lens_before[0] + int(spec.n_accepted[0])
+    assert lens_after[1] == lens_before[1]
+    for p, before in zip(spec.caches.pools, ids_before):
+        np.testing.assert_array_equal(np.array(p.ids[1]), before)
+        assert LP.check_consistent(p)
+    # the ungated formula would have shrunk the frozen slot:
+    depth = cfg.mtp_depth
+    assert lens_before[1] - (depth + 1) + int(spec.n_accepted[1]) \
+        < lens_before[1]
+
+
 def test_two_batch_overlap_split_merge():
-    from repro.serving.tbo import split_caches, two_batch_step
+    from repro.cache import latent_cache as LC
+    from repro.serving.tbo import merge_caches, split_caches, two_batch_step
     cfg = get_config("deepseek-v32-exp-ess-smoke")
     cfg = dataclasses.replace(
         cfg, ess=dataclasses.replace(cfg.ess, max_miss_ratio=1.0))
@@ -130,10 +178,44 @@ def test_two_batch_overlap_split_merge():
 
     ca, cb = split_caches(caches, 1)
 
-    def step_fn(p_, c_, t_, po_, ch_):
-        return E.ess_decode(p_, c_, t_, po_, ch_)
+    def step_fn(p_, c_, t_, po_, ch_, slot_mask=None):
+        return E.ess_decode(p_, c_, t_, po_, ch_, slot_mask=slot_mask)
 
-    logits, ca2, cb2 = two_batch_step(step_fn, params, cfg, nxt,
-                                      caches.lens[:, None], ca, cb)
+    logits, ca2, cb2, stats = two_batch_step(step_fn, params, cfg, nxt,
+                                             caches.lens[:, None], ca, cb)
     np.testing.assert_allclose(np.array(logits), np.array(ref.logits),
                                atol=2e-2)
+    assert stats["hidden"].shape[0] == B     # per-half stats concatenated
+
+    # ---- page-merge regression: keeping either half's host_latent loses
+    # the other half's D2H appends (both halves share the global pool) ----
+    merged = merge_caches(ca2, cb2)
+    np.testing.assert_array_equal(np.array(merged.lens),
+                                  np.array(ref.caches.lens))
+    np.testing.assert_array_equal(np.array(merged.block_tables),
+                                  np.array(caches.block_tables))
+    # slot 0's append survives from half A, slot 1's from half B (each
+    # half holds its slot at batch row 0 of its own view)
+    row0 = LC.slot_latents(merged, 0)[:, S]
+    row1 = LC.slot_latents(merged, 1)[:, S]
+    np.testing.assert_array_equal(np.array(row0),
+                                  np.array(LC.slot_latents(ca2, 0)[:, S]))
+    np.testing.assert_array_equal(np.array(row1),
+                                  np.array(LC.slot_latents(cb2, 0)[:, S]))
+    assert np.abs(np.array(row0)).sum() > 0
+    assert np.abs(np.array(row1)).sum() > 0
+    # the bug this fixes: half-A's host alone has a ZERO row where half-B
+    # appended slot 1's latent
+    from repro.core import offload
+    lost = offload.host_gather_rows(
+        ca2.host_latent, jnp.full((1, 1), S, jnp.int32), layer=0,
+        batch_offset=0, block_table=merged.block_tables[1:])
+    assert np.abs(np.array(lost)).sum() == 0
+
+    # masked halves stay untouched through the TBO path
+    mask = jnp.zeros((B,), bool)
+    _, ca3, cb3, _ = two_batch_step(step_fn, params, cfg, nxt,
+                                    caches.lens[:, None], ca, cb,
+                                    slot_mask=mask)
+    np.testing.assert_array_equal(np.array(merge_caches(ca3, cb3).lens),
+                                  np.array(caches.lens))
