@@ -14,10 +14,13 @@ Emits ``BENCH_serve.json`` with tokens/s vs. batch:
 * ``smoke_trajectory`` (``--smoke``) — appends one 2-slot/5-request
   interleaved-prefill tokens/s point per run, so the perf trajectory
   accumulates across CI runs instead of being overwritten.  Each point
-  now carries an ``mtp`` sub-point: Q=1 tokens/s vs MTP depth-2
-  accepted-tokens/s on the same config and params (zero-init, so every
+  now carries an ``mtp`` sub-point (Q=1 tokens/s vs MTP depth-2
+  accepted-tokens/s on the same config and params; zero-init, so every
   draft matches the model's argmax — ideal acceptance isolates the
-  engine's round mechanics and keeps the point deterministic).
+  engine's round mechanics and keeps the point deterministic) and a
+  ``dispatch`` sub-point (compiled StepProgram vs eager op-by-op
+  ``rounds_per_s`` on the same workload; asserts compiled >= eager and
+  that the two modes' streams match).
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--out BENCH_serve.json]
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke
@@ -122,19 +125,24 @@ def smoke_point(prefill_chunk: int = 8) -> dict:
 
     cfg = get_config("deepseek-v32-exp-ess-smoke")
     params = init_params(jax.random.key(0), T.model_def(cfg))
-    reqs = [Request(rid=0, prompt_len=40, max_new_tokens=6),   # long prompt
-            Request(rid=1, prompt_len=8, max_new_tokens=8),
-            Request(rid=2, prompt_len=8, max_new_tokens=8),
-            Request(rid=3, prompt_len=12, max_new_tokens=6),
-            Request(rid=4, prompt_len=12, max_new_tokens=6)]
-    session = E.ServeSession(params, cfg, num_slots=2, max_seq=64,
-                             prefill_chunk=prefill_chunk)
-    report = session.run(reqs, max_rounds=120)
-    assert sorted(report.finished_rids) == [r.rid for r in reqs]
-    assert report.prefill_chunks > len(reqs)       # chunking engaged
+    def reqs():
+        return [Request(rid=0, prompt_len=40, max_new_tokens=6),  # long
+                Request(rid=1, prompt_len=8, max_new_tokens=8),
+                Request(rid=2, prompt_len=8, max_new_tokens=8),
+                Request(rid=3, prompt_len=12, max_new_tokens=6),
+                Request(rid=4, prompt_len=12, max_new_tokens=6)]
+
+    # first pass warms the StepProgram caches (a cold session is
+    # compile-dominated); the second measures the steady state
+    for _ in range(2):
+        session = E.ServeSession(params, cfg, num_slots=2, max_seq=64,
+                                 prefill_chunk=prefill_chunk)
+        report = session.run(reqs(), max_rounds=120)
+        assert sorted(report.finished_rids) == [r.rid for r in reqs()]
+    assert report.prefill_chunks > len(reqs())     # chunking engaged
     return {
         "slots": 2,
-        "requests": len(reqs),
+        "requests": len(reqs()),
         "prefill_chunk": prefill_chunk,
         "rounds": report.rounds,
         "decode_tokens": report.decode_tokens,
@@ -203,6 +211,54 @@ def mtp_smoke_point(depth: int = 2) -> dict:
     return point
 
 
+def dispatch_smoke_point() -> dict:
+    """Compiled vs eager ``rounds_per_s`` on the same workload — the
+    per-round dispatch-overhead comparison the donated StepPrograms
+    exist for.  Both modes run the identical round functions (jitted vs
+    op-by-op), so the streams must match and compiled must win: each
+    eager round re-dispatches the whole unrolled layer stack op by op,
+    the compiled round is one executable launch + one packed fetch."""
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.serving import engine as E
+    from repro.serving.scheduler import Request
+
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+
+    def reqs():
+        return [Request(rid=i, prompt_len=8, max_new_tokens=12)
+                for i in range(4)]
+
+    def run(compiled):
+        best = 0.0
+        s = r = None
+        for _ in range(2):     # first pass warms the jit/dispatch caches
+            s = E.ServeSession(params, cfg, num_slots=2, max_seq=32,
+                               compiled=compiled)
+            r = s.run(reqs(), max_rounds=200)
+            assert sorted(r.finished_rids) == [0, 1, 2, 3]
+            best = max(best, r.rounds_per_s)
+        return s, r, best
+
+    sc, rc, comp = run(True)
+    se, _, eag = run(False)
+    assert sc.outputs == se.outputs      # mode parity on the bench workload
+    point = {
+        "compiled_rounds_per_s": round(comp, 2),
+        "eager_rounds_per_s": round(eag, 2),
+        "speedup": round(comp / eag, 2) if eag else None,
+        "rounds": rc.rounds,
+        "note": "same params/workload, best-of-2 (first run warms the jit "
+                "cache); compiled = donated StepPrograms + one fetch/round, "
+                "eager = op-by-op debugging path",
+    }
+    assert point["compiled_rounds_per_s"] >= point["eager_rounds_per_s"], \
+        point
+    return point
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -217,6 +273,7 @@ def main(argv=None) -> int:
         t0 = time.time()
         point = smoke_point()
         point["mtp"] = mtp_smoke_point()
+        point["dispatch"] = dispatch_smoke_point()
         prev = {}
         if os.path.exists(args.out):
             try:
@@ -228,6 +285,7 @@ def main(argv=None) -> int:
         with open(args.out, "w") as f:
             json.dump(prev, f, indent=2)
         m = point["mtp"]
+        d = point["dispatch"]
         print(f"appended smoke point #{len(prev['smoke_trajectory'])} to "
               f"{args.out} ({round(time.time() - t0, 1)}s): "
               f"{point['tokens_per_s']} tok/s, "
@@ -235,7 +293,10 @@ def main(argv=None) -> int:
               f"{point['prefill_chunks']} prefill chunks; "
               f"mtp{m['mtp_depth']} {m['accepted_tokens_per_s']} "
               f"accepted-tok/s vs {m['q1_tokens_per_s']} q1-tok/s "
-              f"(accept rate {m['accept_rate']})")
+              f"(accept rate {m['accept_rate']}); "
+              f"dispatch: compiled {d['compiled_rounds_per_s']} vs eager "
+              f"{d['eager_rounds_per_s']} rounds/s "
+              f"({d['speedup']}x)")
         return 0
 
     t0 = time.time()

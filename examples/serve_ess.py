@@ -19,6 +19,12 @@ drafts with one Q=3 step split into two overlapped half-batches, and
 emits 1–3 accepted tokens per slot; rid=3 samples (temperature 0.8) and
 transparently degrades to exact Q=1 emission inside the same rounds.
 
+Every round runs as a **donated compiled StepProgram** over the
+device-resident engine state (draft + verify + accept/rollback + token
+selection fused under one jit, one packed host fetch per round) — pass
+``compiled=False`` to ``ServeSession`` for the op-by-op debugging path;
+the emitted streams are identical either way.
+
     PYTHONPATH=src python examples/serve_ess.py
 """
 

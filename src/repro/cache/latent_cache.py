@@ -290,6 +290,31 @@ def graft_slot(caches: ESSCaches, slot: int, donor: ESSCaches,
                     for fp, op in zip(caches.pools, donor.pools)))
 
 
+def buffers_distinct(tree) -> bool:
+    """True iff no two array leaves of ``tree`` share a device buffer.
+
+    Donation-safety invariant for the compiled serve round: the
+    StepPrograms donate the whole :class:`EngineState` pytree (caches
+    included), and XLA can only alias each donated buffer into the
+    output once — a buffer appearing under two leaves would silently
+    fall back to a copy of the multi-GB host tier.  ``init_ess_caches``
+    and the per-slot lifecycle updates keep every leaf distinct; tests
+    assert it through this helper."""
+    seen = set()
+    for leaf in jax.tree.leaves(tree):
+        ptr = getattr(leaf, "unsafe_buffer_pointer", None)
+        if ptr is None:
+            continue
+        try:
+            p = ptr()
+        except Exception:       # deleted/donated or non-addressable leaf
+            continue
+        if p in seen:
+            return False
+        seen.add(p)
+    return True
+
+
 def abstract_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
                         dtype=jnp.bfloat16) -> ESSCaches:
     """ShapeDtypeStruct tree with host/device shardings (dry-run)."""

@@ -19,6 +19,13 @@ score order, so when misses overflow M the *lowest-scoring* entries are the
 ones dropped (masked out of attention, softmax renormalizes exactly over
 the attended set).  ``stats.overflow`` counts them; sizing M per the paper's
 miss profiles (16–605/batch at ratio 0.2) makes overflow rare.
+
+Jit contract: every state transition here (``lookup`` / ``admit`` /
+``tick`` / ``invalidate_beyond``) is fixed-shape and host-sync-free, so
+the whole per-round sequence — including the speculative rollback —
+traces into the serve loop's donated StepProgram
+(:mod:`repro.serving.step`); only ``check_consistent`` is host-side
+(tests/debugging).
 """
 
 from __future__ import annotations

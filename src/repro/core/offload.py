@@ -67,16 +67,18 @@ def to_device(x: jax.Array, *axes) -> jax.Array:
 
 
 def _paged_phys(ids: jax.Array, block_table: jax.Array, page_rows: int,
-                num_pages: int, batch_offset: int
+                num_pages: int, batch_offset
                 ) -> tuple[jax.Array, jax.Array]:
     """Translate sequence positions -> physical pool rows via block tables.
 
     ids [B,M] (sequence positions, -1 padding), block_table [B_total, NB].
+    ``batch_offset`` may be a Python int or a traced i32 scalar (the
+    compiled serve-round programs pass the admitting slot dynamically so
+    one program serves every slot without retracing).
     Returns (phys [B,M] rows into the flat [NP*R, D] pool view,
     valid [B,M] — in-range *and* mapped)."""
     B = ids.shape[0]
-    bt = jax.lax.slice_in_dim(block_table, batch_offset, batch_offset + B,
-                              axis=0)
+    bt = jax.lax.dynamic_slice_in_dim(block_table, batch_offset, B, axis=0)
     cap = bt.shape[1] * page_rows
     safe = jnp.clip(ids, 0, cap - 1)
     page = jnp.take_along_axis(bt, safe // page_rows, axis=1)      # [B,M]
@@ -142,7 +144,7 @@ def host_gather_rows(host_cache: jax.Array, ids: jax.Array, *,
     safe = jnp.clip(ids, 0, S - 1)
     if ctx is None or ctx.mesh is None:
         cl = host_cache[layer] if host_cache.ndim == 4 else host_cache
-        cl = jax.lax.slice_in_dim(cl, batch_offset, batch_offset + B, axis=0)
+        cl = jax.lax.dynamic_slice_in_dim(cl, batch_offset, B, axis=0)
         rows = jnp.take_along_axis(cl, safe[..., None], axis=1)
         return jnp.where((ids >= 0)[..., None], rows, 0)
 
@@ -226,8 +228,7 @@ def host_scatter_rows(host_cache: jax.Array, ids: jax.Array,
     safe = jnp.clip(ids, 0, S - 1)
     if ctx is None or ctx.mesh is None:
         cl = host_cache[layer] if host_cache.ndim == 4 else host_cache
-        cl_s = jax.lax.slice_in_dim(cl, batch_offset, batch_offset + B,
-                                    axis=0)
+        cl_s = jax.lax.dynamic_slice_in_dim(cl, batch_offset, B, axis=0)
         cur = jnp.take_along_axis(cl_s, safe[..., None], axis=1)
         r2 = jnp.where(valid[..., None], rows.astype(cl.dtype), cur)
         bi = jnp.arange(B)[:, None]

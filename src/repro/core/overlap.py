@@ -43,7 +43,11 @@ class ESSLayerState(NamedTuple):
     host_latent: jax.Array     # dense [B,S,D] / [L,B,S,D] or paged page
                                # pool [NP,R,D] / [L,NP,R,D] (pinned_host)
     layer: int = 0             # layer index when host_latent is stacked [L,...]
-    batch_offset: int = 0      # DBA half-batch offset into the host cache
+    # DBA half-batch offset into the host cache.  May be a traced i32
+    # scalar: the compiled serve round's prefill program indexes the
+    # admitting slot dynamically (offload routes it through
+    # dynamic_slice), so no Python-int shape leaks force a retrace.
+    batch_offset: int | jax.Array = 0
     block_table: jax.Array | None = None   # [B_total, NB] paged indirection
 
 

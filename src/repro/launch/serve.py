@@ -1,87 +1,78 @@
-"""Serving launcher: ESS decode loop with continuous batching.
+"""Serving launcher: the compiled continuous-batching ESS serve loop.
 
-Laptop-scale demo of the full pipeline: prefill (+LRU-Warmup) → MTP
-speculative decode rounds through the offload-centric engine, with
-hit/miss statistics per step — the live counterpart of the simulator's
-Figure-4/5 numbers.
+Laptop-scale demo of the full pipeline — chunked decode-interleaved
+prefill, MTP speculative rounds, TBO, paged host tier — driven through
+``ServeSession``'s donated StepPrograms (``--eager`` switches to the
+op-by-op debugging path; the streams are identical, the rounds/s are
+not).
 
   PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v32-exp-ess-smoke \
-      --batch 2 --prompt-len 48 --new-tokens 16
+      --requests 4 --prompt-len 48 --new-tokens 16 --mtp-depth 2 --tbo
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.models.params import init_params
 from repro.serving import engine as E
-from repro.serving import mtp as MTP
-from repro.serving.sampling import greedy
+from repro.serving.scheduler import Request
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-v32-exp-ess-smoke")
-    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--use-mtp", action="store_true")
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--mtp-depth", type=int, default=0)
+    ap.add_argument("--tbo", action="store_true")
+    ap.add_argument("--eager", action="store_true",
+                    help="op-by-op debugging path (compiled=False)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     assert cfg.ess.enabled, "serve.py demonstrates the ESS path"
+    if args.mtp_depth > cfg.mtp_depth:
+        cfg = dataclasses.replace(cfg, mtp_depth=args.mtp_depth)
     params = init_params(jax.random.key(args.seed), T.model_def(cfg))
-    B, S = args.batch, args.prompt_len
-    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab_size)
-    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    session = E.ServeSession(
+        params, cfg, num_slots=args.slots, max_seq=args.max_seq,
+        prefill_chunk=args.prefill_chunk, mtp_depth=args.mtp_depth,
+        tbo=args.tbo, compiled=not args.eager)
+    reqs = [Request(rid=i, prompt_len=args.prompt_len,
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
 
     t0 = time.time()
-    logits, caches = E.ess_prefill(params, cfg, toks, pos, args.max_seq)
-    print(f"prefill {S} tokens (+LRU-Warmup {cfg.ess.warmup_windows} "
-          f"windows): {time.time()-t0:.2f}s")
-
-    tok = greedy(logits[:, -1])
-    hidden = None
-    t0 = time.time()
-    n_out = 0
-    while n_out < args.new_tokens:
-        if args.use_mtp and cfg.mtp_depth and hidden is not None:
-            spec = MTP.speculative_step(
-                lambda p_, c_, t_, po_, ca_: E.ess_decode(p_, c_, t_, po_, ca_),
-                params, cfg, caches, tok, hidden)
-            caches = spec.caches
-            # continue from the last *emitted* token (accepted prefix +
-            # bonus), not position depth — tokens beyond n_accepted were
-            # rolled back; re-seed the next draft from the verify hidden
-            tok = jnp.take_along_axis(spec.tokens,
-                                      spec.n_accepted[:, None] - 1,
-                                      axis=1)[:, 0]
-            hidden = spec.hidden
-            n_out += int(spec.n_accepted.min())
-            print(f"spec round: accepted+bonus/seq "
-                  f"{np.array(spec.n_accepted)}")
-        else:
-            out = E.ess_decode(params, cfg, tok[:, None],
-                               caches.lens[:, None], caches)
-            caches = out.caches
-            tok = greedy(out.logits[:, -1])
-            hidden = out.stats["hidden"][:, -1]
-            n_out += 1
-            print(f"step {n_out}: misses/seq "
-                  f"{np.array(out.stats['misses'])} "
-                  f"hits {np.array(out.stats['hits'])}")
+    report = session.run(reqs, max_rounds=4 * (args.new_tokens
+                                               + args.prompt_len))
     dt = time.time() - t0
-    print(f"decode {n_out} tokens x {B} seqs in {dt:.2f}s "
-          f"({B * n_out / dt:.1f} tok/s)")
+    mode = "eager" if args.eager else "compiled"
+    print(f"[{mode}] {len(report.finished_rids)}/{len(reqs)} requests in "
+          f"{report.rounds} decode rounds ({report.spec_rounds} "
+          f"speculative), {dt:.2f}s wall")
+    print(f"  {report.tokens_per_s:.1f} accepted-tok/s, "
+          f"{report.rounds_per_s:.1f} rounds/s, "
+          f"accept rate {report.accept_rate:.2f}; "
+          f"prefill {report.prefill_tokens} toks in "
+          f"{report.prefill_chunks} chunks, "
+          f"mean ttft {report.mean_ttft_s:.3f}s")
+    for rid in sorted(session.outputs):
+        stream = session.outputs[rid]
+        print(f"  rid{rid}: {len(stream)} tokens  {stream[:8]}"
+              f"{'...' if len(stream) > 8 else ''}")
     return 0
 
 

@@ -16,18 +16,27 @@ Two decode paths:
 
 Prefill runs the chunked DSA path, scatters the latents to the host tier
 (the PD-disaggregation "Load" arrow in Figure 3) and applies LRU-Warmup.
+
+The serving stack is split across three modules:
+
+* this one — the model step functions (``ess_decode`` /
+  ``ess_prefill_chunk``) and the host-side :class:`ServeSession` loop
+  (scheduler bookkeeping, page allocation, stream emission);
+* :mod:`repro.serving.state` — the device-resident ``EngineState``
+  pytree a round consumes and produces;
+* :mod:`repro.serving.step` — the ``StepProgram`` builder that compiles
+  each round kind (decode / MTP draft+verify / prefill chunk) into one
+  donated jit program with in-device token selection.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.cache import latent_cache as LC
 from repro.configs.base import ArchConfig
@@ -40,8 +49,8 @@ from repro.models import layers as L
 from repro.models import mla as M
 from repro.models import moe as MoE
 from repro.models import transformer as T
-from repro.serving import mtp as MTP
-from repro.serving import tbo as TBO
+from repro.serving import state as ES
+from repro.serving import step as SP
 from repro.serving.sampling import greedy, request_key, sample
 from repro.serving.scheduler import Request, Scheduler
 
@@ -173,9 +182,10 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
 
 
 def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
-                      caches: LC.ESSCaches, *, slot: int | None = None,
+                      caches: LC.ESSCaches, *, slot=None,
                       want_logits: bool = True, collect_tail: int = 0,
-                      use_kernel: bool = False
+                      use_kernel: bool = False,
+                      n_valid: jax.Array | int | None = None
                       ) -> tuple[Optional[jax.Array], LC.ESSCaches, tuple,
                                  Optional[jax.Array]]:
     """One chunked-prefill step: ``tokens [B,C]`` continue the sequence(s)
@@ -184,7 +194,21 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
 
     * ``slot`` restricts the step to one decode slot of a shared
       continuous-batching cache (``None`` = all ``B`` rows, the compat
-      :func:`ess_prefill` path).
+      :func:`ess_prefill` path).  It may be a traced i32 scalar: the
+      compiled serve round passes the admitting slot dynamically so one
+      program covers every slot.
+    * ``n_valid`` (scalar, may be traced) marks the first ``n_valid``
+      chunk positions as real; the rest are padding that a shape-bucketed
+      ragged final chunk carries.  Pad positions write nothing (host
+      scatter and indexer-cache appends dropped, ``lens`` advance by
+      ``n_valid``), are never attended by valid queries (their ``widx``
+      is ``-1``, so the causal mask excludes them), and their own
+      outputs are finite garbage that is discarded.  Because pad tokens
+      sit *after* every valid token, the MoE capacity cumsum assigns
+      valid tokens the same expert slots as an unpadded run — valid
+      positions are bit-identical to the unpadded chunk (as long as no
+      token hits the capacity clip, the same assumption the chunked ==
+      one-shot parity already rests on).
     * Attention is the exact causal DSA selection: per-query Top-K over the
       slot's indexer cache, prior-context rows fetched from the host tier,
       intra-chunk rows served from the chunk itself (they are D2H'd once,
@@ -208,11 +232,14 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
     else:
         b0, Bc = slot, 1
     C = tokens.shape[1]
-    start = jax.lax.slice_in_dim(caches.lens, b0, b0 + Bc)       # [Bc]
+    start = jax.lax.dynamic_slice_in_dim(caches.lens, b0, Bc)    # [Bc]
     x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
     x = shard(x, "batch", None, "embed_act")
     bi = jnp.arange(Bc)[:, None]
-    widx = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # [Bc,C]
+    nv = jnp.asarray(C if n_valid is None else n_valid, jnp.int32)
+    cpos = jnp.arange(C, dtype=jnp.int32)
+    widx = jnp.where(cpos[None, :] < nv,
+                     start[:, None] + cpos[None, :], -1)         # [Bc,C]
 
     host = caches.host_latent
     ikeys_all = caches.ikeys
@@ -230,9 +257,9 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
 
         # --- append indexer keys (device) + chunk latents (deferred D2H) --
         ik_full = ikeys_all[layer]
-        ik_slot = jax.lax.slice_in_dim(ik_full, b0, b0 + Bc, axis=0)
+        ik_slot = jax.lax.dynamic_slice_in_dim(ik_full, b0, Bc, axis=0)
         new_ik = M.indexer_keys(lp["indexer"], h)                # [Bc,C,Di]
-        ik_slot = ik_slot.at[bi, widx].set(
+        ik_slot = ik_slot.at[bi, jnp.where(widx >= 0, widx, S)].set(
             new_ik.astype(ik_slot.dtype), mode="drop")
         ik_full = jax.lax.dynamic_update_slice_in_dim(ik_full, ik_slot, b0,
                                                       axis=0)
@@ -278,19 +305,20 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
             f = L.mlp(lp["ffn"], h2, cfg.act)
         x = x + f
 
-    # one stacked D2H scatter for the whole chunk (all layers, same rows)
+    # one stacked D2H scatter for the whole chunk (all layers, same rows;
+    # pad rows carry widx == -1 and are dropped)
     host = offload.host_scatter_rows_stacked(
         host, widx, jnp.stack(lat_stack), batch_offset=b0,
         block_table=caches.block_tables)
     new_lens = jax.lax.dynamic_update_slice(
-        caches.lens, start + jnp.int32(C), (b0,))
+        caches.lens, start + nv, (b0,))
     logits = None
     hidden_last = None
     if want_logits:
         xf = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
         logits = L.unembed(params.get("unembed", params.get("embed")), xf,
                            cap=cfg.logit_softcap)
-        hidden_last = xf[:, -1]                              # [Bc, d]
+        hidden_last = xf[:, jnp.maximum(nv - 1, 0)]          # [Bc, d]
     caches = caches._replace(lens=new_lens, host_latent=host,
                              ikeys=ikeys_all)
     return logits, caches, tuple(tails), hidden_last
@@ -449,6 +477,20 @@ class ServeSession:
       them as independent programs so half-A's H2D pool fetches overlap
       half-B's compute, and reconciles the shared paged host tier by page
       ownership (``merge_caches``).
+    * ``compiled=True`` (the default) runs every round as a **donated
+      jitted StepProgram** (:mod:`repro.serving.step`) over the
+      device-resident :class:`~repro.serving.state.EngineState`: token
+      selection (greedy *and* per-slot temperature/top-k/top-p sampling)
+      happens in-device and the host fetches exactly one packed
+      ``(tokens [B,Q], n_emit [B])`` struct per decode round.  Host code
+      keeps only scheduler bookkeeping, page allocation and stream
+      emission.  ``compiled=False`` (the debugging path) executes the
+      *same* round functions with the glue op-by-op but the same jitted
+      floating-point units (model step, speculative core, samplers), so
+      both modes emit bit-identical streams — see
+      :mod:`repro.serving.step`.  ``do_warmup=True`` prefill chunks take
+      the legacy eager path (the LRU-warmup replay is host-driven);
+      decode rounds still compile.
     """
 
     def __init__(self, params, cfg: ArchConfig, *, num_slots: int,
@@ -456,13 +498,14 @@ class ServeSession:
                  prompt_fn: Optional[Callable[[Request], jax.Array]] = None,
                  do_warmup: bool = False, use_kernel: bool = False,
                  prefill_chunk: int = 64, mtp_depth: int = 0,
-                 tbo: bool = False):
+                 tbo: bool = False, compiled: bool = True):
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.do_warmup = do_warmup
         self.use_kernel = use_kernel
+        self.compiled = compiled
         self.prefill_chunk = max(1, prefill_chunk)
         if mtp_depth > 0 and mtp_depth > cfg.mtp_depth:
             raise ValueError(f"mtp_depth {mtp_depth} > cfg.mtp_depth "
@@ -478,20 +521,23 @@ class ServeSession:
             self.num_pages = (num_host_pages if num_host_pages is not None
                               else num_slots * blocks_per_slot)
             self.allocator = LC.HostPageAllocator(self.num_pages)
-        self.caches = LC.init_ess_caches(
+        caches = LC.init_ess_caches(
             cfg, num_slots, max_seq, cfg.param_dtype,
             num_pages=self.num_pages if self.paged else None,
             map_slots=not self.paged)
+        # the device-resident round state: caches + tok/hidden carries +
+        # per-slot sampling knobs + live/sampling masks.  The compiled
+        # StepPrograms donate it every round; host code touches it only
+        # at slot-lifecycle edges with .at[slot] updates.
+        self.state = ES.init_engine_state(cfg, caches, num_slots)
+        self._programs = SP.get_programs(cfg, num_slots, max_seq,
+                                         use_kernel, self.tbo,
+                                         self.mtp_depth)
         self.pool_entries_per_slot = LC.pool_entries(cfg, max_seq)
         self.free_pool_entries = num_slots * self.pool_entries_per_slot
         self.sched = Scheduler(num_slots, max_seq,
                                admission_gate=self._admission_gate,
                                release_hook=self._release_slot)
-        self.tok = jnp.zeros((num_slots,), jnp.int32)
-        # backbone post-final-norm hidden at each slot's last accepted
-        # position — the MTP draft seed, carried across rounds and across
-        # the prefill -> decode promotion
-        self.hidden = jnp.zeros((num_slots, cfg.d_model), cfg.param_dtype)
         # per-request emitted token stream (prefill first-token + decode
         # emissions, truncated to max_new_tokens); reset on re-admission
         self.outputs: dict[int, list[int]] = {}
@@ -507,6 +553,28 @@ class ServeSession:
         self._round = 0
         self._submit_round: dict[int, int] = {}
         self._submit_time: dict[int, float] = {}
+
+    # -- device-state views (compat accessors over EngineState) --------------
+
+    @property
+    def caches(self) -> LC.ESSCaches:
+        return self.state.caches
+
+    @caches.setter
+    def caches(self, value: LC.ESSCaches) -> None:
+        self.state = self.state._replace(caches=value)
+
+    @property
+    def tok(self) -> jax.Array:
+        """[B] next input token per slot (device-resident)."""
+        return self.state.tok
+
+    @property
+    def hidden(self) -> jax.Array:
+        """[B,d] post-final-norm hidden at each slot's last accepted
+        position — the MTP draft seed, carried across rounds and across
+        the prefill -> decode promotion (device-resident)."""
+        return self.state.hidden
 
     # -- resource accounting -------------------------------------------------
 
@@ -546,6 +614,7 @@ class ServeSession:
             self.allocator.release(slot)
             self.caches = LC.unmap_slot(self.caches, slot)
         self.caches = LC.reset_slot(self.caches, slot)
+        self.state = ES.release_slot(self.state, slot)
         self.free_pool_entries += self.pool_entries_per_slot
 
     def _sample_pages(self) -> None:
@@ -568,8 +637,11 @@ class ServeSession:
                 f"rejected rid={req.rid}: needs {self.pages_needed(req)} "
                 f"pages, pool has {self.num_pages}")
             return
-        self._submit_round.setdefault(req.rid, self._round)
-        self._submit_time.setdefault(req.rid, time.perf_counter())
+        # unconditional stamps: a missing rid must surface as a KeyError
+        # at delivery, never as a silently ~0 TTFT (the old defaulted
+        # lookup reported perf_counter() - perf_counter() for it)
+        self._submit_round[req.rid] = self._round
+        self._submit_time[req.rid] = time.perf_counter()
         self.sched.submit(req)
 
     def preempt(self, slot: int) -> None:
@@ -593,6 +665,9 @@ class ServeSession:
             self._sample_pages()
             self.free_pool_entries -= self.pool_entries_per_slot
             self._prefill[slot] = _PrefillTask(req, self._prompt_fn(req))
+            # install the request's sampling knobs into the device state
+            # (the slot itself stays frozen until the last prefill chunk)
+            self.state = ES.admit_slot(self.state, slot, req)
             # a preempted re-admission regenerates its full stream
             self.outputs[req.rid] = []
             self.report.events.append(
@@ -605,8 +680,13 @@ class ServeSession:
         """Run one prefill chunk for the oldest admitting slot (if any).
 
         The chunk's latents and indexer keys scatter directly into the
-        slot's mapped host pages; after the last chunk the slot's LRU
-        warmup is replayed and the slot joins the decode batch."""
+        slot's mapped host pages.  Without warmup the chunk runs as a
+        shape-bucketed StepProgram (ragged final chunks zero-padded to
+        the bucket, masked via ``n_valid`` — no retrace, bit-identical
+        valid rows) that also selects the first token in-device and
+        promotes the slot inside the program; with ``do_warmup`` the
+        legacy eager chunk collects the per-layer warmup tails and the
+        LRU replay runs after the last chunk."""
         if not self._prefill:
             return False
         slot = next(iter(self._prefill))         # FIFO by insertion order
@@ -615,8 +695,34 @@ class ServeSession:
         c0 = task.cursor
         ck = min(self.prefill_chunk, n - c0)
         last = c0 + ck >= n
-        W = max(0, min(self.cfg.ess.warmup_windows, n - 1)) \
-            if self.do_warmup else 0
+        if self.do_warmup:
+            t0 = self._prefill_chunk_warmup(slot, task, c0, ck, n, last)
+        else:
+            C = SP.chunk_bucket(ck, self.prefill_chunk)
+            toks = task.tokens[:, c0:c0 + ck]
+            if C > ck:
+                toks = jnp.pad(toks, ((0, 0), (0, C - ck)))
+            fn = self._programs.prefill(C, last, self.compiled)
+            self.state, t0_dev = fn(self.params, self.state, toks,
+                                    jnp.asarray(slot, jnp.int32),
+                                    jnp.asarray(ck, jnp.int32))
+            t0 = int(jax.device_get(t0_dev)) if last else None
+        task.cursor += ck
+        self.report.prefill_chunks += 1
+        self.report.prefill_tokens += ck
+        self.report.events.append(
+            f"round {self._round}: rid={task.req.rid} prefill chunk "
+            f"[{c0}:{c0 + ck})/{n} (slot {slot})")
+        if last:
+            self._finish_prefill(slot, task, t0)
+        return True
+
+    def _prefill_chunk_warmup(self, slot: int, task: _PrefillTask, c0: int,
+                              ck: int, n: int, last: bool) -> Optional[int]:
+        """Legacy eager prefill chunk for ``do_warmup`` sessions: ragged
+        chunk shapes, per-layer tail collection across chunks, LRU-warmup
+        replay after the last chunk, host-side first-token draw."""
+        W = max(0, min(self.cfg.ess.warmup_windows, n - 1))
         toks = task.tokens[:, c0:c0 + ck]
         pos = jnp.arange(c0, c0 + ck, dtype=jnp.int32)[None]
         lg, self.caches, tails, hid_last = ess_prefill_chunk(
@@ -629,37 +735,40 @@ class ServeSession:
             else:
                 task.tails = [jnp.concatenate([a, b], axis=1)[:, -W:]
                               for a, b in zip(task.tails, tails)]
-        task.cursor += ck
-        self.report.prefill_chunks += 1
-        self.report.prefill_tokens += ck
+        if not last:
+            return None
+        if W > 0:
+            self._warmup_slot(slot, tuple(task.tails), n)
+        req = task.req
+        if req.sampling:
+            t0 = int(self._draw(req, lg[0, -1], 0))
+        else:
+            t0 = int(greedy(lg[:, -1])[0])
+        self.state = ES.promote_slot(self.state, slot, t0, hid_last[0])
+        return t0
+
+    def _finish_prefill(self, slot: int, task: _PrefillTask,
+                        t0: int) -> None:
+        """Promotion bookkeeping after the last prefill chunk: deliver the
+        first token, promote the slot into the decode batch, record TTFT.
+        A ``max_new_tokens == 1`` request's budget is spent by the first
+        token — it finishes right here, before any decode round."""
+        req = task.req
+        self.outputs[req.rid] = [t0]
+        self.sched.promote(slot)
+        del self._prefill[slot]
+        rid = req.rid
+        ttft = self._round - self._submit_round[rid]
+        # a preempted request's first token was already delivered by its
+        # first attempt: keep that TTFT
+        self.report.ttft_rounds.setdefault(rid, ttft)
+        self.report.ttft_s.setdefault(
+            rid, time.perf_counter() - self._submit_time[rid])
         self.report.events.append(
-            f"round {self._round}: rid={task.req.rid} prefill chunk "
-            f"[{c0}:{c0 + ck})/{n} (slot {slot})")
-        if last:
-            if W > 0:
-                self._warmup_slot(slot, tuple(task.tails), n)
-            req = task.req
-            if req.sampling:
-                t0 = self._draw(req, lg[0, -1], 0)
-            else:
-                t0 = greedy(lg[:, -1])[0]
-            self.tok = self.tok.at[slot].set(t0)
-            self.hidden = self.hidden.at[slot].set(hid_last[0])
-            self.outputs[req.rid] = [int(t0)]
-            self.sched.promote(slot)
-            del self._prefill[slot]
-            rid = task.req.rid
-            ttft = self._round - self._submit_round.get(rid, self._round)
-            # a preempted request's first token was already delivered by
-            # its first attempt: keep that TTFT
-            self.report.ttft_rounds.setdefault(rid, ttft)
-            self.report.ttft_s.setdefault(
-                rid, time.perf_counter()
-                - self._submit_time.get(rid, time.perf_counter()))
-            self.report.events.append(
-                f"round {self._round}: rid={rid} first token ready "
-                f"(ttft {ttft} rounds)")
-        return True
+            f"round {self._round}: rid={rid} first token ready "
+            f"(ttft {ttft} rounds)")
+        if self.sched.budget_left(slot) == 0:
+            self._handle_done(self.sched.record_tokens({slot: 0}))
 
     def _warmup_slot(self, slot: int, tails: tuple, prompt_len: int) -> None:
         """LRU-Warmup replay for one freshly prefilled slot (paper §3.2):
@@ -685,23 +794,6 @@ class ServeSession:
 
     # -- decode stepping -----------------------------------------------------
 
-    def _ess_step(self, params, cfg, tokens, positions, caches, *,
-                  slot_mask=None) -> DecodeOut:
-        return ess_decode(params, cfg, tokens, positions, caches,
-                          use_kernel=self.use_kernel, slot_mask=slot_mask)
-
-    def _raw_step(self, tokens, positions, caches, mask) -> DecodeOut:
-        """One (possibly TBO-split) model step over the full slot batch."""
-        if self.tbo:
-            h = self.num_slots // 2
-            ca, cb = TBO.split_caches(caches, h)
-            logits, ca2, cb2, stats = TBO.two_batch_step(
-                self._ess_step, self.params, self.cfg, tokens, positions,
-                ca, cb, slot_mask=mask)
-            return DecodeOut(logits, TBO.merge_caches(ca2, cb2), stats)
-        return self._ess_step(self.params, self.cfg, tokens, positions,
-                              caches, slot_mask=mask)
-
     def _slot_req(self, slot: int) -> Request:
         return self.sched.running[self.sched.slots[slot].rid]
 
@@ -715,105 +807,65 @@ class ServeSession:
 
     def _emit(self, slot: int, req: Request, tokens: list[int]) -> int:
         """Deliver a round's emitted tokens for one slot: extend the
-        request's output stream (truncated to ``max_new_tokens``, counting
-        the prefill first-token) and return the generated-budget charge
-        (clamped so a verify round never over-runs the budget).  The
-        stream extension is also clamped by the scheduler's remaining
-        headroom: admission screens ``prompt + max_new <= max_seq`` so
-        the max_seq clamp is normally slack, but tokens verified past the
-        cache horizon must never be delivered."""
+        request's output stream and return the generated-budget charge.
+        Charge == delivery, always: both are clamped by the *same*
+        ``remaining`` headroom (budget and max_seq), so the scheduler
+        never records a token that was not appended to the stream —
+        ``len(outputs[rid]) == generated + 1`` holds at finish (the old
+        code charged ``min(len(tokens), remaining)`` while delivering
+        under an additional ``max_new - len(out)`` clamp, so a verify
+        round at the budget edge recorded ghost tokens)."""
         out = self.outputs.setdefault(req.rid, [])
-        remaining = self.sched.remaining(slot)
-        room = min(req.max_new_tokens - len(out), remaining)
-        out.extend(tokens[:max(0, room)])
-        return min(len(tokens), remaining)
+        delivered = tokens[:max(0, self.sched.remaining(slot))]
+        out.extend(delivered)
+        return len(delivered)
 
     def decode_round(self) -> list[Request]:
-        """One decode step over the running slots; returns newly finished.
+        """One decode round over the running slots; returns newly
+        finished.
 
-        Inactive and mid-prefill slots are masked *inside* the step
-        (``slot_mask``): their host pages, pool state and ``lens`` are
-        untouched — no post-hoc fixups.  With ``mtp_depth > 0`` the round
-        is a speculative draft+verify (``_spec_decode_round``)."""
+        The whole round — model step (Q=1, or the fused MTP draft+verify
+        when ``mtp_depth > 0``, TBO halves included), greedy/sampled
+        token selection, ``tok``/``hidden`` carries — runs as one
+        StepProgram over the donated device state; inactive and
+        mid-prefill slots are masked *inside* the step (``slot_mask``):
+        their host pages, pool state and ``lens`` are untouched.  The
+        host fetches exactly one packed ``(tokens, n_emit)`` struct and
+        does scheduler bookkeeping + stream emission with it."""
         self._sample_pages()
         active = self.sched.active_slots()
         if not active:
             return []
-        mask = jnp.zeros((self.num_slots,), bool) \
-            .at[jnp.asarray(active)].set(True)
-        if self.mtp_depth > 0:
-            return self._spec_decode_round(active, mask)
-        out = self._raw_step(self.tok[:, None], self.caches.lens[:, None],
-                             self.caches, mask)
-        self.caches = out.caches
-        self.hidden = jnp.where(mask[:, None], out.stats["hidden"][:, -1],
-                                self.hidden)
-        logits_last = out.logits[:, -1]
-        greedy_tok = greedy(logits_last)
-        new_tok = self.tok
+        spec = self.mtp_depth > 0
+        fn = self._programs.spec(self.compiled) if spec \
+            else self._programs.decode(self.compiled)
+        self.state, out = fn(self.params, self.state)
+        toks, n_emit = jax.device_get((out.tokens, out.n_emit))
         slot_tokens = {}
         for i in active:
             req = self._slot_req(i)
-            if req.sampling:
-                t = self._draw(req, logits_last[i], req.generated + 1)
-            else:
-                t = greedy_tok[i]
-            new_tok = new_tok.at[i].set(t)
-            slot_tokens[i] = self._emit(i, req, [int(t)])
-        self.tok = new_tok
-        done = self.sched.record_tokens(slot_tokens)
-        self.report.rounds += 1
-        self.report.decode_tokens += sum(slot_tokens.values())
-        return done
-
-    def _spec_decode_round(self, active: list[int],
-                           mask: jax.Array) -> list[Request]:
-        """One MTP speculative round over the live continuous batch:
-        draft ``mtp_depth`` tokens per slot from the carried hidden,
-        verify them all with a single Q=depth+1 step (TBO-split when
-        enabled), emit each live slot's accepted prefix + bonus token and
-        let ``speculative_step`` roll back lens/pools for the rejected
-        tail.  Sampling slots force-reject their drafts and draw from the
-        verify step's position-0 logits — exactly the Q=1 distribution,
-        with the same PRNG key the Q=1 path would use."""
-        depth = self.mtp_depth
-        sampling = np.zeros((self.num_slots,), bool)
-        for i in active:
-            sampling[i] = self._slot_req(i).sampling
-        sample_mask = jnp.asarray(sampling)
-
-        def dec_fn(params, cfg, q_toks, q_pos, caches):
-            return self._raw_step(q_toks, q_pos, caches, mask)
-
-        spec = MTP.speculative_step(
-            dec_fn, self.params, self.cfg, self.caches, self.tok,
-            self.hidden, slot_mask=mask, sample_mask=sample_mask,
-            depth=depth)
-        self.caches = spec.caches
-        self.hidden = jnp.where(mask[:, None], spec.hidden, self.hidden)
-        n_emit = np.asarray(spec.n_accepted)          # [B] accepted + bonus
-        toks = np.asarray(spec.tokens)                # [B, depth+1]
-        new_tok = self.tok
-        slot_tokens = {}
-        for i in active:
-            req = self._slot_req(i)
-            if sampling[i]:
-                t = self._draw(req, spec.logits[i, 0], req.generated + 1)
-                new_tok = new_tok.at[i].set(t)
-                slot_tokens[i] = self._emit(i, req, [int(t)])
-            else:
-                n = int(n_emit[i])
-                emit = [int(t) for t in toks[i, :n]]
-                new_tok = new_tok.at[i].set(emit[-1])
-                slot_tokens[i] = self._emit(i, req, emit)
-                self.report.drafted_tokens += depth
+            n = int(n_emit[i])
+            slot_tokens[i] = self._emit(i, req, [int(t) for t in
+                                                 toks[i, :n]])
+            if spec and not req.sampling:
+                self.report.drafted_tokens += self.mtp_depth
                 self.report.accepted_tokens += n - 1
-        self.tok = new_tok
         done = self.sched.record_tokens(slot_tokens)
         self.report.rounds += 1
-        self.report.spec_rounds += 1
+        if spec:
+            self.report.spec_rounds += 1
         self.report.decode_tokens += sum(slot_tokens.values())
         return done
+
+    def _handle_done(self, done: list[Request]) -> None:
+        for req in done:
+            out = self.outputs.get(req.rid, [])
+            assert len(out) == req.generated + 1, \
+                (f"rid={req.rid}: delivered {len(out)} != "
+                 f"generated {req.generated} + first token")
+            self.report.events.append(
+                f"round {self._round}: rid={req.rid} finished "
+                f"({len(out)} tokens)")
 
     def step(self) -> list[Request]:
         """One serve round: admissions, then one prefill chunk for at most
@@ -821,10 +873,7 @@ class ServeSession:
         self.admit()
         self.prefill_round()
         done = self.decode_round()
-        for req in done:
-            self.report.events.append(
-                f"round {self._round}: rid={req.rid} finished "
-                f"({req.generated} tokens)")
+        self._handle_done(done)
         self._round += 1
         return done
 

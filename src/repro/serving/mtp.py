@@ -68,6 +68,11 @@ def mtp_draft(params: dict, cfg: ArchConfig, hidden_last: jax.Array,
 
 
 class SpecOut(NamedTuple):
+    """Result of one speculative round.  Pure arrays end to end: the
+    serve loop's spec StepProgram traces :func:`speculative_step` —
+    draft, verify, acceptance, rollback — into one donated jit program
+    and packs (tokens, n_accepted) into its single per-round host fetch.
+    """
     tokens: jax.Array     # [B, depth+1] verified output tokens
     n_accepted: jax.Array # [B] tokens actually emitted (1..depth+1)
     caches: object

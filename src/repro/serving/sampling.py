@@ -1,4 +1,20 @@
-"""Token sampling: greedy / temperature / top-k / top-p (fp32 logits)."""
+"""Token sampling: greedy / temperature / top-k / top-p (fp32 logits).
+
+Two entry points with identical semantics:
+
+* :func:`sample` — host-driven: one row of logits, Python-typed knobs
+  (``top_k`` static, ``lax.top_k`` under the hood).  The eager serve
+  path and prefill first-token draws use this.
+* :func:`sample_batch` — device-resident: per-slot parameter *arrays*
+  (``temperature/top_k/top_p/seed/emit_index [B]``) so the whole draw —
+  key fold, truncation, categorical — traces into the compiled serve
+  round.  Sentinels replace ``None``: ``top_k <= 0`` and ``top_p >= 1``
+  disable the respective truncation.  The k-th-largest threshold comes
+  from a full descending sort instead of ``lax.top_k`` (whose k must be
+  static); both select the same value, and the masks compare against
+  the value, so the two entry points emit bit-identical tokens for the
+  same ``(seed, index, logits, knobs)``.
+"""
 
 from __future__ import annotations
 
@@ -35,3 +51,41 @@ def sample(key: jax.Array, logits: jax.Array, temperature: float = 1.0,
         cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def sample_one(seed: jax.Array, index: jax.Array, logits: jax.Array,
+               temperature: jax.Array, top_k: jax.Array,
+               top_p: jax.Array) -> jax.Array:
+    """One fully-traced draw: logits [V], scalar knobs (sentinels for
+    "off": ``top_k <= 0`` / ``top_p >= 1``).  Emits the same token as
+    :func:`sample` with ``request_key(seed, index)`` and the equivalent
+    Python knobs; callers mask out the result for greedy slots
+    (``temperature == 0``) rather than branching."""
+    V = logits.shape[-1]
+    key = jax.random.fold_in(jax.random.key(seed), index)
+    lg = logits.astype(jnp.float32) / jnp.where(temperature > 0.0,
+                                                temperature, 1.0)
+    # top-k: threshold at the k-th largest value (== lax.top_k(...)[-1])
+    use_k = (top_k >= 1) & (top_k < V)
+    srt = jnp.sort(lg, axis=-1)[::-1]
+    kth = srt[jnp.clip(top_k, 1, V) - 1]
+    lg = jnp.where(use_k & (lg < kth), -jnp.inf, lg)
+    # top-p over the (possibly top-k-masked) logits, exactly as sample()
+    use_p = top_p < 1.0
+    sorted_logits = jnp.sort(lg, axis=-1)[::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    cutoff_idx = jnp.sum(cum < top_p, axis=-1)
+    cutoff = sorted_logits[jnp.clip(cutoff_idx, 0, V - 1)]
+    lg = jnp.where(use_p & (lg < cutoff), -jnp.inf, lg)
+    return jax.random.categorical(key, lg).astype(jnp.int32)
+
+
+def sample_batch(seed: jax.Array, index: jax.Array, logits: jax.Array,
+                 temperature: jax.Array, top_k: jax.Array,
+                 top_p: jax.Array) -> jax.Array:
+    """Per-slot in-device sampling: logits [B,V], all knobs [B] arrays.
+    Returns [B] i32 draws; rows with ``temperature == 0`` return an
+    arbitrary draw the caller must replace with the greedy token."""
+    return jax.vmap(sample_one)(seed, index, logits, temperature,
+                                top_k, top_p)

@@ -52,6 +52,11 @@ class SlotState:
     active: bool = False
     len: int = 0
     phase: str = "idle"      # idle | prefill | decode
+    # the engine delivered the prefill's first token at promotion: it
+    # consumes one unit of the request's max_new_tokens budget, so the
+    # decode-round budget is max_new_tokens - 1 and at finish
+    # len(outputs) == generated + 1 (first token + decode deliveries)
+    first_emitted: bool = False
 
 
 class Scheduler:
@@ -132,31 +137,46 @@ class Scheduler:
                 if s.active and s.phase == "prefill"]
 
     def promote(self, slot: int) -> None:
-        """Prefill finished: the slot joins the decode batch."""
+        """Prefill finished: the slot joins the decode batch.  Promotion
+        is the moment the engine delivers the prefill's first token, so
+        it charges one unit of the ``max_new_tokens`` budget
+        (``first_emitted``); callers must check :meth:`remaining` — a
+        ``max_new_tokens == 1`` request is already done."""
         s = self.slots[slot]
         if s.active and s.phase == "prefill":
             s.phase = "decode"
+            s.first_emitted = True
 
-    def remaining(self, slot: int) -> int:
-        """Tokens slot ``slot``'s request may still emit before finishing
-        (budget *and* max_seq headroom).  An MTP speculative round clamps
-        its accepted+bonus emission to this, so a request never over-runs
-        ``max_new_tokens`` just because a round verified more drafts than
-        it had budget left."""
+    def budget_left(self, slot: int) -> int:
+        """max_new_tokens budget still open for decode deliveries (the
+        prefill first token consumes one unit once promoted)."""
         s = self.slots[slot]
         if not s.active:
             return 0
         req = self.running[s.rid]
-        return max(0, min(req.max_new_tokens - req.generated,
-                          self.max_seq - s.len))
+        return max(0, req.max_new_tokens - req.generated
+                   - (1 if s.first_emitted else 0))
+
+    def remaining(self, slot: int) -> int:
+        """Tokens slot ``slot``'s request may still emit before finishing
+        (budget *and* max_seq headroom).  ``_emit`` clamps every round's
+        delivery to this, so a request never over-runs ``max_new_tokens``
+        just because a verify round accepted more drafts than it had
+        budget left."""
+        s = self.slots[slot]
+        if not s.active:
+            return 0
+        return max(0, min(self.budget_left(slot), self.max_seq - s.len))
 
     def record_tokens(self, slot_tokens: dict[int, int]) -> list[Request]:
-        """slot -> n tokens emitted this step; returns newly finished.
+        """slot -> n tokens *delivered* this step; returns newly finished.
 
         ``n`` may vary per slot and per round (Q>1 speculative decode
         emits ``n_accepted + 1`` tokens a round); ``s.len`` advances by
         exactly ``n`` so the scheduler's length view tracks the engine's
-        rolled-back cache ``lens``."""
+        rolled-back cache ``lens``.  The charge equals what the engine
+        actually appended to the output stream (see ``ServeSession._emit``),
+        so at finish ``len(outputs) == generated + first_emitted``."""
         done = []
         for i, n in slot_tokens.items():
             s = self.slots[i]
@@ -165,7 +185,8 @@ class Scheduler:
             req = self.running[s.rid]
             req.generated += n
             s.len += n
-            if req.generated >= req.max_new_tokens or s.len >= self.max_seq:
+            limit = req.max_new_tokens - (1 if s.first_emitted else 0)
+            if req.generated >= limit or s.len >= self.max_seq:
                 req.finished = True
                 done.append(req)
                 self._release(i)
@@ -189,6 +210,7 @@ class Scheduler:
         req.generated = 0
         self.queue.appendleft(req)
         s.rid, s.active, s.len, s.phase = -1, False, 0, "idle"
+        s.first_emitted = False
         if self.release_hook is not None:
             self.release_hook(slot)
 
@@ -198,6 +220,7 @@ class Scheduler:
         if req is not None:
             self.finished.append(req)
         s.rid, s.active, s.len, s.phase = -1, False, 0, "idle"
+        s.first_emitted = False
         if self.release_hook is not None:
             self.release_hook(slot)
 

@@ -1,0 +1,111 @@
+"""Device-resident engine state for the compiled serve round.
+
+:class:`EngineState` is the single pytree a serve round consumes and
+produces: the ESS caches plus everything the round loop used to keep in
+per-slot Python variables — the next input token, the carried MTP draft
+hidden, the per-slot sampling knobs, and the live/sampling slot masks.
+Holding them as ``[B]`` arrays lets the whole round (decode or MTP
+draft+verify, token selection included) compile into one donated XLA
+program (:mod:`repro.serving.step`); the host touches the state only at
+slot-lifecycle edges (admission, promotion, release) with tiny
+``.at[slot]`` updates.
+
+Sentinel conventions (``None`` is not a dtype):
+
+* ``top_k <= 0``  — top-k truncation off,
+* ``top_p >= 1``  — top-p truncation off,
+* ``temperature == 0`` — greedy (``sample_mask`` False).
+
+:class:`RoundOut` is the packed per-round result — the *only* thing the
+host fetches per decode round (one ``jax.device_get``): the emitted
+tokens ``[B, Q]`` and per-slot emission counts ``[B]``.  Everything else
+(caches, tok, hidden, masks) stays on device inside the donated state.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import latent_cache as LC
+from repro.configs.base import ArchConfig
+from repro.serving.scheduler import Request
+
+
+class EngineState(NamedTuple):
+    caches: LC.ESSCaches
+    tok: jax.Array          # [B] i32  next input token per slot
+    hidden: jax.Array       # [B,d]    post-final-norm hidden (MTP draft seed)
+    temperature: jax.Array  # [B] f32  0 = greedy
+    top_k: jax.Array        # [B] i32  <= 0 = off
+    top_p: jax.Array        # [B] f32  >= 1 = off
+    seed: jax.Array         # [B] i32  per-request PRNG seed
+    emit_index: jax.Array   # [B] i32  next sampling chain position
+    slot_mask: jax.Array    # [B] bool live decode slots
+    sample_mask: jax.Array  # [B] bool slots emitting stochastically
+
+
+class RoundOut(NamedTuple):
+    """Packed per-round emission — the single host fetch of a round."""
+    tokens: jax.Array       # [B,Q] emitted tokens; cols [0, n_emit) valid
+    n_emit: jax.Array       # [B] i32 tokens emitted (0 for frozen slots)
+
+
+def init_engine_state(cfg: ArchConfig, caches: LC.ESSCaches,
+                      num_slots: int) -> EngineState:
+    return EngineState(
+        caches=caches,
+        tok=jnp.zeros((num_slots,), jnp.int32),
+        hidden=jnp.zeros((num_slots, cfg.d_model), cfg.param_dtype),
+        temperature=jnp.zeros((num_slots,), jnp.float32),
+        top_k=jnp.zeros((num_slots,), jnp.int32),
+        top_p=jnp.ones((num_slots,), jnp.float32),
+        seed=jnp.zeros((num_slots,), jnp.int32),
+        emit_index=jnp.zeros((num_slots,), jnp.int32),
+        slot_mask=jnp.zeros((num_slots,), bool),
+        sample_mask=jnp.zeros((num_slots,), bool),
+    )
+
+
+def admit_slot(state: EngineState, slot: int, req: Request) -> EngineState:
+    """Install a request's sampling knobs into its slot (host-side edge;
+    the slot stays frozen — ``slot_mask`` flips in the last prefill
+    chunk's program, together with ``tok``/``hidden``/``emit_index``)."""
+    return state._replace(
+        temperature=state.temperature.at[slot].set(float(req.temperature)),
+        top_k=state.top_k.at[slot].set(
+            0 if req.top_k is None else int(req.top_k)),
+        top_p=state.top_p.at[slot].set(
+            1.0 if req.top_p is None else float(req.top_p)),
+        seed=state.seed.at[slot].set(int(req.sample_seed)),
+        emit_index=state.emit_index.at[slot].set(0),
+        sample_mask=state.sample_mask.at[slot].set(bool(req.sampling)),
+    )
+
+
+def promote_slot(state: EngineState, slot, tok, hidden) -> EngineState:
+    """Flip a freshly prefilled slot into the decode batch: install the
+    first token + draft-seed hidden, arm the sampling chain at emission
+    index 1 (the first token drew at index 0), and unfreeze the slot.
+    Used traced (inside the last prefill chunk's StepProgram, ``slot``
+    dynamic) and host-side (the legacy ``do_warmup`` path) alike."""
+    return state._replace(
+        tok=state.tok.at[slot].set(tok),
+        hidden=state.hidden.at[slot].set(hidden),
+        emit_index=state.emit_index.at[slot].set(1),
+        slot_mask=state.slot_mask.at[slot].set(True),
+    )
+
+
+def release_slot(state: EngineState, slot: int) -> EngineState:
+    """Freeze a finished/preempted slot (host-side edge).  Cache-tier
+    cleanup (pages, pools, lens) happens separately via
+    :func:`repro.cache.latent_cache.reset_slot` / ``unmap_slot``."""
+    return state._replace(
+        slot_mask=state.slot_mask.at[slot].set(False),
+        sample_mask=state.sample_mask.at[slot].set(False),
+        temperature=state.temperature.at[slot].set(0.0),
+        emit_index=state.emit_index.at[slot].set(0),
+    )

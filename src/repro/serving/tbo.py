@@ -25,6 +25,24 @@ from repro.cache import latent_cache as LC
 from repro.core import lru_pool as LP
 
 
+def tbo_step(step_fn: Callable, params, cfg, tokens, positions, caches, *,
+             slot_mask: jax.Array | None = None):
+    """Full split → two-half step → page-ownership merge composition over
+    an un-split cache: the step-level TBO building block the serve round
+    uses (``repro.serving.step`` traces it — split, both halves and the
+    merge — into one donated jit program, which is what actually lets the
+    XLA scheduler interleave half-A's H2D fetches with half-B's compute).
+
+    Returns ``(logits [B,Q,V], merged_caches, stats)``.
+    """
+    B = tokens.shape[0]
+    ca, cb = split_caches(caches, B // 2)
+    logits, ca2, cb2, stats = two_batch_step(
+        step_fn, params, cfg, tokens, positions, ca, cb,
+        slot_mask=slot_mask)
+    return logits, merge_caches(ca2, cb2), stats
+
+
 def two_batch_step(step_fn: Callable, params, cfg, tokens, positions,
                    caches_a, caches_b, *,
                    slot_mask: jax.Array | None = None):

@@ -1,0 +1,300 @@
+"""Compiled serve round: donated StepPrograms over device-resident state.
+
+Covers this PR's tentpole and satellites:
+
+* **mode parity (the backbone)** — compiled and eager serve rounds emit
+  bit-identical output streams: greedy and sampled, Q=1 and
+  ``mtp_depth=2``, TBO on/off, paged and dense host tier;
+* **in-device sampling** — ``sample_batch`` / ``sample_one`` (per-slot
+  knob arrays, device-folded keys) draw the same tokens as the
+  host-driven ``sample`` with static knobs;
+* **one-fetch contract** — a compiled decode round performs exactly one
+  ``jax.device_get`` (the packed ``RoundOut``);
+* **recompile-count guard** — a mixed workload (admissions, preemption,
+  ragged final prefill chunks, mtp on/off) traces each StepProgram
+  exactly once per shape bucket;
+* **donation** — the step consumes its input state: the previous round's
+  ``host_latent`` buffer is deleted (no second copy retained) and no
+  "donated buffers were not usable" warning fires;
+* **charge/delivery alignment** — ``len(outputs[rid]) == generated + 1``
+  at finish, including verify rounds clamped at the budget edge, and a
+  ``max_new_tokens == 1`` request finishes at promotion.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving import engine as E
+from repro.serving import step as SP
+from repro.serving.sampling import request_key, sample, sample_batch
+from repro.serving.scheduler import Request
+
+
+def smoke_cfg(mtp_depth=None, **ess_overrides):
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    if ess_overrides:
+        cfg = dataclasses.replace(
+            cfg, ess=dataclasses.replace(cfg.ess, **ess_overrides))
+    if mtp_depth is not None:
+        cfg = dataclasses.replace(cfg, mtp_depth=mtp_depth)
+    return cfg
+
+
+def _requests():
+    return [Request(rid=0, prompt_len=10, max_new_tokens=5),
+            Request(rid=1, prompt_len=8, max_new_tokens=3),
+            Request(rid=2, prompt_len=13, max_new_tokens=6),
+            Request(rid=3, prompt_len=9, max_new_tokens=4,
+                    temperature=0.8, top_k=64, top_p=0.95, seed=123)]
+
+
+def _run(params, cfg, reqs, **kw):
+    session = E.ServeSession(params, cfg, num_slots=2, max_seq=32, **kw)
+    report = session.run(reqs, max_rounds=120)
+    assert sorted(report.finished_rids) == sorted(r.rid for r in reqs)
+    return session, report
+
+
+# ---------------------------------------------------------------------------
+# Mode parity: compiled == eager, bit for bit (the refactor's backbone)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mtp_depth,tbo", [(0, False), (2, False),
+                                           (0, True), (2, True)])
+def test_compiled_eager_stream_parity(mtp_depth, tbo):
+    """Greedy + sampled streams identical between compiled and eager
+    modes at Q=1 and depth-2 speculative, TBO off and on (paged host
+    tier); cache lens agree afterwards."""
+    cfg = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    c, rc = _run(params, cfg, _requests(), compiled=True,
+                 mtp_depth=mtp_depth, tbo=tbo)
+    e, re_ = _run(params, cfg, _requests(), compiled=False,
+                  mtp_depth=mtp_depth, tbo=tbo)
+    assert c.outputs == e.outputs
+    assert rc.rounds == re_.rounds
+    assert rc.decode_tokens == re_.decode_tokens
+    np.testing.assert_array_equal(np.array(c.caches.lens),
+                                  np.array(e.caches.lens))
+
+
+def test_compiled_eager_parity_dense_host_tier():
+    cfg = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0, paged_host=False)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    c, _ = _run(params, cfg, _requests(), compiled=True, mtp_depth=2)
+    e, _ = _run(params, cfg, _requests(), compiled=False, mtp_depth=2)
+    assert not c.caches.paged
+    assert c.outputs == e.outputs
+
+
+def test_compiled_spec_equals_q1_baseline():
+    """The fused speculative program preserves the PR-3 invariant:
+    greedy + sampled streams are mode-invariant vs the Q=1 program."""
+    cfg = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    q1, _ = _run(params, cfg, _requests(), compiled=True)
+    spec, rs = _run(params, cfg, _requests(), compiled=True, mtp_depth=2)
+    assert q1.outputs == spec.outputs
+    assert rs.spec_rounds == rs.rounds > 0
+
+
+# ---------------------------------------------------------------------------
+# In-device sampling == host-driven sampling
+# ---------------------------------------------------------------------------
+
+def test_sample_batch_matches_host_sample():
+    logits = jax.random.normal(jax.random.key(0), (4, 64), jnp.float32)
+    temps = [0.7, 1.3, 0.9, 1.0]
+    ks = [8, None, 64, 3]            # 64 == V: no-op, like None
+    ps = [None, 0.9, 0.6, None]
+    seeds = [3, 11, 7, 5]
+    idxs = [0, 4, 2, 9]
+    ref = [int(sample(request_key(s, i), logits[r], t, k, p))
+           for r, (s, i, t, k, p) in enumerate(zip(seeds, idxs, temps,
+                                                   ks, ps))]
+    got = sample_batch(
+        jnp.asarray(seeds, jnp.int32), jnp.asarray(idxs, jnp.int32), logits,
+        jnp.asarray(temps, jnp.float32),
+        jnp.asarray([0 if k is None else k for k in ks], jnp.int32),
+        jnp.asarray([1.0 if p is None else p for p in ps], jnp.float32))
+    assert ref == [int(t) for t in got]
+    # and identically under jit (the compiled round's actual context)
+    got_j = jax.jit(sample_batch)(
+        jnp.asarray(seeds, jnp.int32), jnp.asarray(idxs, jnp.int32), logits,
+        jnp.asarray(temps, jnp.float32),
+        jnp.asarray([0 if k is None else k for k in ks], jnp.int32),
+        jnp.asarray([1.0 if p is None else p for p in ps], jnp.float32))
+    assert ref == [int(t) for t in got_j]
+
+
+# ---------------------------------------------------------------------------
+# One fetch per round
+# ---------------------------------------------------------------------------
+
+def test_compiled_decode_round_single_device_get(monkeypatch):
+    cfg = smoke_cfg(max_miss_ratio=1.0)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    session = E.ServeSession(params, cfg, num_slots=2, max_seq=32,
+                             compiled=True)
+    for r in [Request(rid=0, prompt_len=8, max_new_tokens=8),
+              Request(rid=1, prompt_len=8, max_new_tokens=8)]:
+        session.submit(r)
+    session.step()                    # admit + prefill rid=0 (+1 fetch)
+    session.step()                    # prefill rid=1 + first decode
+    calls = []
+    real = jax.device_get
+    monkeypatch.setattr(jax, "device_get",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    for _ in range(3):                # steady-state decode-only rounds
+        session.decode_round()
+    assert len(calls) == 3            # exactly one packed fetch per round
+
+
+# ---------------------------------------------------------------------------
+# Recompile-count guard
+# ---------------------------------------------------------------------------
+
+def test_step_programs_compile_once_per_shape_bucket():
+    """Mixed workload — admissions, a preemption, ragged final prefill
+    chunks, mtp off and on — must trace each StepProgram exactly once
+    per shape bucket.  Uses a max_seq unique to this test so the
+    process-wide program cache starts cold for every key."""
+    cfg = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    MAXSEQ = 31                       # unique shape family for this test
+    reqs = [Request(rid=0, prompt_len=11, max_new_tokens=5),  # ragged 3->C4
+            Request(rid=1, prompt_len=8, max_new_tokens=4),   # exact bucket
+            Request(rid=2, prompt_len=9, max_new_tokens=3,    # ragged 1->C1
+                    temperature=0.9, seed=5),
+            Request(rid=3, prompt_len=10, max_new_tokens=4)]  # ragged 2->C2
+    SP.TRACE_COUNTS.clear()
+
+    def drive(mtp_depth):
+        s = E.ServeSession(params, cfg, num_slots=2, max_seq=MAXSEQ,
+                           prefill_chunk=8, compiled=True,
+                           mtp_depth=mtp_depth)
+        for r in reqs:
+            s.submit(dataclasses.replace(r))
+        s.step(); s.step(); s.step()
+        s.preempt(0)                  # mid-run preemption -> re-prefill
+        rep = s.run(max_rounds=100)
+        assert sorted(rep.finished_rids) == [0, 1, 2, 3]
+        return s
+
+    drive(0)
+    drive(2)                          # same shapes, spec program added
+    drive(0)                          # second Q=1 session: all cache hits
+    sig = f"B2s{MAXSEQ}tbo0"
+    mine = {k: v for k, v in SP.TRACE_COUNTS.items() if sig in k}
+    assert mine, SP.TRACE_COUNTS
+    assert all(v == 1 for v in mine.values()), mine
+    # every round kind the workload exercised is present
+    kinds = {k.split("/")[0] for k in mine}
+    assert kinds == {"decode", "spec", "prefill"}
+    # ragged chunks bucketed: prompt lens 11/8/9/12 at chunk 8 touch
+    # buckets 8 (non-last and last) and the pow2 pads 1, 2, 4
+    pre = {k for k in mine if k.startswith("prefill/")}
+    assert any(f"prefill/C8last0/{sig}d0k0" in k for k in pre), pre
+    for c in (1, 2, 4, 8):
+        assert any(k.startswith(f"prefill/C{c}last1/") for k in pre), \
+            (c, pre)
+
+
+# ---------------------------------------------------------------------------
+# Donation: the step consumes its input state
+# ---------------------------------------------------------------------------
+
+def _donation_supported() -> bool:
+    a = jnp.arange(4.0)
+    jax.jit(lambda x: x + 1, donate_argnums=0)(a)
+    return a.is_deleted()
+
+
+def test_step_donates_state_no_second_host_latent():
+    if not _donation_supported():
+        pytest.skip("backend does not support buffer donation")
+    cfg = smoke_cfg(max_miss_ratio=1.0)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    session = E.ServeSession(params, cfg, num_slots=2, max_seq=32,
+                             compiled=True)
+    for r in [Request(rid=0, prompt_len=8, max_new_tokens=6),
+              Request(rid=1, prompt_len=8, max_new_tokens=6)]:
+        session.submit(r)
+    session.step(); session.step()
+    prev = session.state
+    # donation-safe layout: no two state leaves share a device buffer
+    from repro.cache import latent_cache as LC
+    assert LC.buffers_distinct(prev)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        session.decode_round()
+    # the donated input buffers are gone — XLA aliased the host tier in
+    # place instead of keeping a second copy...
+    assert prev.caches.host_latent.is_deleted()
+    assert prev.tok.is_deleted()
+    # ...and every donated leaf was actually usable (an unusable donation
+    # would fall back to a copy and warn)
+    assert not [x for x in w if "donated" in str(x.message).lower()], \
+        [str(x.message) for x in w]
+    # the session's live state is the program's output, not the donated input
+    assert not session.state.caches.host_latent.is_deleted()
+
+
+# ---------------------------------------------------------------------------
+# Charge/delivery alignment at the budget edge
+# ---------------------------------------------------------------------------
+
+def test_emit_charge_equals_delivery_at_budget_edge():
+    """Full-acceptance depth-2 rounds emit 3 tokens/round; a budget not
+    ≡ 0 (mod 3) forces a clamped final round.  Every recorded token must
+    be in the stream: len(outputs) == generated + 1 at finish."""
+    cfg = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0)
+    params = jax.tree.map(jnp.zeros_like,
+                          init_params(jax.random.key(0), T.model_def(cfg)))
+    reqs = [Request(rid=0, prompt_len=8, max_new_tokens=6),   # 5 = 3+2 clamp
+            Request(rid=1, prompt_len=8, max_new_tokens=8)]   # 7 = 3+3+1
+    spec, _ = _run(params, cfg, reqs, compiled=True, mtp_depth=2)
+    for req in spec.sched.finished:
+        assert len(spec.outputs[req.rid]) == req.generated + 1
+        assert len(spec.outputs[req.rid]) == req.max_new_tokens
+
+
+def test_max_new_tokens_one_finishes_at_promotion():
+    """The prefill first token is the whole budget: the request finishes
+    at promotion without a decode round (the old accounting needed a
+    ghost decode round that delivered nothing)."""
+    cfg = smoke_cfg(max_miss_ratio=1.0)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    session = E.ServeSession(params, cfg, num_slots=1, max_seq=32,
+                             compiled=True)
+    report = session.run([Request(rid=0, prompt_len=8, max_new_tokens=1)],
+                         max_rounds=10)
+    assert report.finished_rids == [0]
+    assert session.outputs[0] and len(session.outputs[0]) == 1
+    assert report.rounds == 0         # no decode round was needed
+
+
+def test_ttft_submit_stamp_unconditional():
+    """ttft_s derives from the unconditional submit stamp — a missing
+    rid raises instead of silently reporting ~0 TTFT."""
+    cfg = smoke_cfg(max_miss_ratio=1.0)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    session = E.ServeSession(params, cfg, num_slots=1, max_seq=32)
+    session.run([Request(rid=7, prompt_len=8, max_new_tokens=2)],
+                max_rounds=20)
+    assert 7 in session._submit_time
+    assert session.report.ttft_s[7] > 0.0
+    # bypassing submit() (no stamp) must surface at delivery, not as a
+    # ~0-second TTFT
+    s2 = E.ServeSession(params, cfg, num_slots=1, max_seq=32)
+    s2.sched.submit(Request(rid=9, prompt_len=8, max_new_tokens=2))
+    with pytest.raises(KeyError):
+        s2.run(max_rounds=20)

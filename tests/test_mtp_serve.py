@@ -201,8 +201,11 @@ def test_serve_mtp_full_acceptance_and_budget_clamp():
     assert base.outputs == spec.outputs
     for r in reqs:
         assert len(spec.outputs[r.rid]) == r.max_new_tokens
-    # the scheduler's generated counters never over-ran the budget
-    assert all(req.generated == req.max_new_tokens
+    # the scheduler's generated counters never over-ran the budget, and
+    # every recorded token was actually delivered (charge == delivery):
+    # the stream = prefill first token + `generated` decode tokens
+    assert all(req.generated + 1 == req.max_new_tokens
+               == len(spec.outputs[req.rid])
                for req in spec.sched.finished)
 
 
