@@ -1,5 +1,6 @@
 # Tier-1 verify: the exact command from ROADMAP.md.
-.PHONY: test test-full bench-serve bench-smoke example-serve
+.PHONY: test test-full bench-serve bench-smoke example-serve \
+	example-stream-abort examples-smoke
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -17,3 +18,10 @@ bench-smoke:
 
 example-serve:
 	python examples/serve_ess.py
+
+# request-lifecycle front-end demo: stream()/abort()/stop tokens/priority
+example-stream-abort:
+	python examples/stream_abort.py
+
+# CI examples smoke job: both demos end to end
+examples-smoke: example-serve example-stream-abort

@@ -17,10 +17,15 @@ Emits ``BENCH_serve.json`` with tokens/s vs. batch:
   now carries an ``mtp`` sub-point (Q=1 tokens/s vs MTP depth-2
   accepted-tokens/s on the same config and params; zero-init, so every
   draft matches the model's argmax — ideal acceptance isolates the
-  engine's round mechanics and keeps the point deterministic) and a
+  engine's round mechanics and keeps the point deterministic), a
   ``dispatch`` sub-point (compiled StepProgram vs eager op-by-op
   ``rounds_per_s`` on the same workload; asserts compiled >= eager and
-  that the two modes' streams match).
+  that the two modes' streams match) and a ``latency`` sub-point
+  (p50/p95 TTFT and inter-token gap derived from ``TokenEvent``
+  timestamps through the public ``EssEngine`` API).
+
+All live rows drive the serve loop through ``EssEngine.generate``
+(``repro.serving.api``) — the same front-end real clients use.
 
     PYTHONPATH=src python benchmarks/serve_bench.py [--out BENCH_serve.json]
     PYTHONPATH=src python benchmarks/serve_bench.py --smoke
@@ -81,22 +86,22 @@ def live_smoke_trajectory(batches=(2, 4)) -> list[dict]:
     from repro.configs import get_config
     from repro.models import transformer as T
     from repro.models.params import init_params
-    from repro.serving import engine as E
-    from repro.serving.scheduler import Request
+    from repro.serving.api import EssEngine, SamplingParams
 
     cfg = get_config("deepseek-v32-exp-ess-smoke")
     params = init_params(jax.random.key(0), T.model_def(cfg))
     PROMPT, NEW, SMAX = 12, 4, 32
     rows = []
     for bs in batches:
-        reqs = [Request(rid=i, prompt_len=PROMPT, max_new_tokens=NEW)
-                for i in range(2 * bs)]        # 2x slots stream through
-        session = E.ServeSession(params, cfg, num_slots=bs, max_seq=SMAX)
-        report = session.run(reqs, max_rounds=100)
-        assert sorted(report.finished_rids) == [r.rid for r in reqs]
+        engine = EssEngine(params, cfg, num_slots=bs, max_seq=SMAX)
+        outs = engine.generate([PROMPT] * (2 * bs),     # 2x slots stream
+                               SamplingParams(max_tokens=NEW),
+                               max_rounds=100)
+        assert all(o.finish_reason == "length" for o in outs)
+        report = engine.session.report
         rows.append({
             "batch": bs,
-            "requests": len(reqs),
+            "requests": len(outs),
             "rounds": report.rounds,
             "decode_tokens": report.decode_tokens,
             "tokens_per_s": round(report.tokens_per_s, 2),
@@ -114,35 +119,36 @@ def live_smoke_trajectory(batches=(2, 4)) -> list[dict]:
     return rows
 
 
+_SMOKE_WORKLOAD = [(40, 6),   # long prompt streams in chunks...
+                   (8, 8), (8, 8), (12, 6), (12, 6)]   # ...others decode
+
+
 def smoke_point(prefill_chunk: int = 8) -> dict:
     """One 2-slot/5-request interleaved-prefill point (CI smoke): a long
-    prompt streams in chunks while short requests keep decoding."""
+    prompt streams in chunks while short requests keep decoding —
+    driven through the public ``EssEngine`` front-end."""
     from repro.configs import get_config
     from repro.models import transformer as T
     from repro.models.params import init_params
-    from repro.serving import engine as E
-    from repro.serving.scheduler import Request
+    from repro.serving.api import EssEngine, SamplingParams
 
     cfg = get_config("deepseek-v32-exp-ess-smoke")
     params = init_params(jax.random.key(0), T.model_def(cfg))
-    def reqs():
-        return [Request(rid=0, prompt_len=40, max_new_tokens=6),  # long
-                Request(rid=1, prompt_len=8, max_new_tokens=8),
-                Request(rid=2, prompt_len=8, max_new_tokens=8),
-                Request(rid=3, prompt_len=12, max_new_tokens=6),
-                Request(rid=4, prompt_len=12, max_new_tokens=6)]
+    prompts = [p for p, _ in _SMOKE_WORKLOAD]
+    sp = [SamplingParams(max_tokens=n) for _, n in _SMOKE_WORKLOAD]
 
     # first pass warms the StepProgram caches (a cold session is
     # compile-dominated); the second measures the steady state
     for _ in range(2):
-        session = E.ServeSession(params, cfg, num_slots=2, max_seq=64,
-                                 prefill_chunk=prefill_chunk)
-        report = session.run(reqs(), max_rounds=120)
-        assert sorted(report.finished_rids) == [r.rid for r in reqs()]
-    assert report.prefill_chunks > len(reqs())     # chunking engaged
+        engine = EssEngine(params, cfg, num_slots=2, max_seq=64,
+                           prefill_chunk=prefill_chunk)
+        outs = engine.generate(prompts, sp, max_rounds=120)
+        assert all(o.finish_reason == "length" for o in outs)
+        report = engine.session.report
+    assert report.prefill_chunks > len(prompts)    # chunking engaged
     return {
         "slots": 2,
-        "requests": len(reqs()),
+        "requests": len(prompts),
         "prefill_chunk": prefill_chunk,
         "rounds": report.rounds,
         "decode_tokens": report.decode_tokens,
@@ -151,6 +157,37 @@ def smoke_point(prefill_chunk: int = 8) -> dict:
         "tokens_per_s": round(report.tokens_per_s, 2),
         "mean_ttft_s": round(report.mean_ttft_s, 4),
         "wall_s": round(report.wall_s, 2),
+    }
+
+
+def latency_smoke_point(prefill_chunk: int = 8) -> dict:
+    """p50/p95 TTFT and inter-token gap from ``TokenEvent`` timestamps on
+    the standard smoke workload (warm second pass — the cold pass is
+    compile-dominated and would report multi-second TTFT)."""
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.serving.api import EssEngine, SamplingParams
+
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    prompts = [p for p, _ in _SMOKE_WORKLOAD]
+    sp = [SamplingParams(max_tokens=n) for _, n in _SMOKE_WORKLOAD]
+    for _ in range(2):
+        engine = EssEngine(params, cfg, num_slots=2, max_seq=64,
+                           prefill_chunk=prefill_chunk)
+        outs = engine.generate(prompts, sp, max_rounds=120)
+        assert all(o.finish_reason == "length" for o in outs)
+    m = engine.metrics()
+    assert m["ttft_p50_s"] > 0 and m["itl_p50_s"] >= 0
+    return {
+        "ttft_p50_s": round(m["ttft_p50_s"], 4),
+        "ttft_p95_s": round(m["ttft_p95_s"], 4),
+        "itl_p50_s": round(m["itl_p50_s"], 5),
+        "itl_p95_s": round(m["itl_p95_s"], 5),
+        "n_token_events": m["n_token_events"],
+        "note": "warm engine, 2-slot/5-request interleaved-prefill "
+                "workload; stamps from TokenEvent deliveries",
     }
 
 
@@ -171,31 +208,28 @@ def mtp_smoke_point(depth: int = 2) -> dict:
     from repro.configs import get_config
     from repro.models import transformer as T
     from repro.models.params import init_params
-    from repro.serving import engine as E
-    from repro.serving.scheduler import Request
+    from repro.serving.api import EssEngine, SamplingParams
 
     cfg = dataclasses.replace(get_config("deepseek-v32-exp-ess-smoke"),
                               mtp_depth=depth)
     params = jax.tree.map(jnp.zeros_like,
                           init_params(jax.random.key(0), T.model_def(cfg)))
 
-    def reqs():
-        return [Request(rid=i, prompt_len=8, max_new_tokens=9)
-                for i in range(4)]
-
     def run(md):
         # first pass warms the per-shape dispatch caches (the smoke model
         # is compile-dominated otherwise); the second measures steady state
         for _ in range(2):
-            s = E.ServeSession(params, cfg, num_slots=2, max_seq=32,
-                               mtp_depth=md)
-            r = s.run(reqs(), max_rounds=200)
-            assert sorted(r.finished_rids) == [0, 1, 2, 3]
-        return s, r
+            eng = EssEngine(params, cfg, num_slots=2, max_seq=32,
+                            mtp_depth=md)
+            outs = eng.generate([8] * 4, SamplingParams(max_tokens=9),
+                                max_rounds=200)
+            assert all(o.finish_reason == "length" for o in outs)
+        return outs, eng.session.report
 
-    base_s, base_r = run(0)
-    spec_s, spec_r = run(depth)
-    assert base_s.outputs == spec_s.outputs      # greedy streams identical
+    base_o, base_r = run(0)
+    spec_o, spec_r = run(depth)
+    # greedy streams identical across modes
+    assert [o.tokens for o in base_o] == [o.tokens for o in spec_o]
     point = {
         "mtp_depth": depth,
         "accept_rate": round(spec_r.accept_rate, 3),
@@ -221,30 +255,28 @@ def dispatch_smoke_point() -> dict:
     from repro.configs import get_config
     from repro.models import transformer as T
     from repro.models.params import init_params
-    from repro.serving import engine as E
-    from repro.serving.scheduler import Request
+    from repro.serving.api import EssEngine, SamplingParams
 
     cfg = get_config("deepseek-v32-exp-ess-smoke")
     params = init_params(jax.random.key(0), T.model_def(cfg))
 
-    def reqs():
-        return [Request(rid=i, prompt_len=8, max_new_tokens=12)
-                for i in range(4)]
-
     def run(compiled):
         best = 0.0
-        s = r = None
+        outs = r = None
         for _ in range(2):     # first pass warms the jit/dispatch caches
-            s = E.ServeSession(params, cfg, num_slots=2, max_seq=32,
-                               compiled=compiled)
-            r = s.run(reqs(), max_rounds=200)
-            assert sorted(r.finished_rids) == [0, 1, 2, 3]
+            eng = EssEngine(params, cfg, num_slots=2, max_seq=32,
+                            compiled=compiled)
+            outs = eng.generate([8] * 4, SamplingParams(max_tokens=12),
+                                max_rounds=200)
+            assert all(o.finish_reason == "length" for o in outs)
+            r = eng.session.report
             best = max(best, r.rounds_per_s)
-        return s, r, best
+        return outs, r, best
 
-    sc, rc, comp = run(True)
-    se, _, eag = run(False)
-    assert sc.outputs == se.outputs      # mode parity on the bench workload
+    oc, rc, comp = run(True)
+    oe, _, eag = run(False)
+    # mode parity on the bench workload
+    assert [o.tokens for o in oc] == [o.tokens for o in oe]
     point = {
         "compiled_rounds_per_s": round(comp, 2),
         "eager_rounds_per_s": round(eag, 2),
@@ -274,6 +306,7 @@ def main(argv=None) -> int:
         point = smoke_point()
         point["mtp"] = mtp_smoke_point()
         point["dispatch"] = dispatch_smoke_point()
+        point["latency"] = latency_smoke_point()
         prev = {}
         if os.path.exists(args.out):
             try:
@@ -286,6 +319,7 @@ def main(argv=None) -> int:
             json.dump(prev, f, indent=2)
         m = point["mtp"]
         d = point["dispatch"]
+        lt = point["latency"]
         print(f"appended smoke point #{len(prev['smoke_trajectory'])} to "
               f"{args.out} ({round(time.time() - t0, 1)}s): "
               f"{point['tokens_per_s']} tok/s, "
@@ -296,7 +330,10 @@ def main(argv=None) -> int:
               f"(accept rate {m['accept_rate']}); "
               f"dispatch: compiled {d['compiled_rounds_per_s']} vs eager "
               f"{d['eager_rounds_per_s']} rounds/s "
-              f"({d['speedup']}x)")
+              f"({d['speedup']}x); "
+              f"latency: ttft p50/p95 {lt['ttft_p50_s']}/"
+              f"{lt['ttft_p95_s']}s, itl p50/p95 {lt['itl_p50_s']}/"
+              f"{lt['itl_p95_s']}s")
         return 0
 
     t0 = time.time()

@@ -1,11 +1,14 @@
-"""ESS serving with continuous batching over the paged host latent-cache.
+"""ESS serving through the public `EssEngine` API with continuous
+batching over the paged host latent-cache.
 
-Drives ``repro.serving.engine.ServeSession``: more requests than decode
-slots stream through one long-lived decode batch; admission is gated on
-free host pages (the pool is provisioned *below* the dense layout's
-``slots x blocks`` pin, so the gate actually engages); a mid-run preemption
-demonstrates the recovery path — pages return to the allocator and the slot
-gets a full cache reset before its next occupant.
+Drives ``repro.serving.api.EssEngine`` — the request-lifecycle front-end
+over the re-entrant serve-round core: more requests than decode slots
+stream through one long-lived decode batch; admission is gated on free
+host pages (the pool is provisioned *below* the dense layout's
+``slots x blocks`` pin, so the gate actually engages); a mid-run
+preemption demonstrates the recovery path — pages return to the
+allocator and the slot gets a full cache reset before its next
+occupant, while the preempted request replays its identical stream.
 
 Prefill is **chunked and decode-interleaved**: each serve round runs one
 ``prefill_chunk``-token chunk for at most one admitting slot, scattered
@@ -16,14 +19,15 @@ token events.
 Decode runs **MTP speculative rounds** (depth 2) composed with
 **Two-Batch Overlap**: every round drafts 2 tokens per slot, verifies all
 drafts with one Q=3 step split into two overlapped half-batches, and
-emits 1–3 accepted tokens per slot; rid=3 samples (temperature 0.8) and
-transparently degrades to exact Q=1 emission inside the same rounds.
+emits 1–3 accepted tokens per slot; rid=3 samples (temperature 0.8) via
+``SamplingParams`` and transparently degrades to exact Q=1 emission
+inside the same rounds.
 
 Every round runs as a **donated compiled StepProgram** over the
-device-resident engine state (draft + verify + accept/rollback + token
-selection fused under one jit, one packed host fetch per round) — pass
-``compiled=False`` to ``ServeSession`` for the op-by-op debugging path;
-the emitted streams are identical either way.
+device-resident engine state — pass ``compiled=False`` to ``EssEngine``
+for the op-by-op debugging path; the emitted streams are identical
+either way.  (See ``examples/stream_abort.py`` for the incremental
+``stream()`` / ``abort()`` / stop-token side of the API.)
 
     PYTHONPATH=src python examples/serve_ess.py
 """
@@ -39,8 +43,7 @@ from repro.cache import latent_cache as LC
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.models.params import init_params
-from repro.serving import engine as E
-from repro.serving.scheduler import Request
+from repro.serving.api import EssEngine, SamplingParams
 
 
 def main() -> None:
@@ -53,36 +56,46 @@ def main() -> None:
     # later, longer requests pin 3 pages each so a freed slot has to *wait*
     # for pages — the admission gate in action.  rid=4's long prompt
     # streams through several prefill chunks while the others decode.
-    requests = [Request(rid=0, prompt_len=24, max_new_tokens=6),
-                Request(rid=1, prompt_len=24, max_new_tokens=6),
-                Request(rid=2, prompt_len=40, max_new_tokens=8),
-                Request(rid=3, prompt_len=40, max_new_tokens=8,
-                        temperature=0.8, top_k=64, seed=7),
-                Request(rid=4, prompt_len=72, max_new_tokens=8)]
+    workload = [(24, SamplingParams(max_tokens=6)),
+                (24, SamplingParams(max_tokens=6)),
+                (40, SamplingParams(max_tokens=8)),
+                (40, SamplingParams(max_tokens=8, temperature=0.8,
+                                    top_k=64, seed=7)),
+                (72, SamplingParams(max_tokens=8))]
 
     # page budget far below the dense pin (2 slots x 6 blocks = 12 pages
     # would be capacity parity at page_rows=16)
     num_pages = 7
-    per_req = [LC.pages_for_len(cfg, r.prompt_len + r.max_new_tokens)
-               for r in requests]
+    per_req = [LC.pages_for_len(cfg, plen + sp.max_tokens)
+               for plen, sp in workload]
     print(f"slots={NUM_SLOTS} pages={num_pages} (per request: {per_req}, "
           f"page_rows={cfg.ess.host_page_rows})")
 
-    session = E.ServeSession(params, cfg, num_slots=NUM_SLOTS, max_seq=SMAX,
-                             num_host_pages=num_pages, prefill_chunk=16,
-                             mtp_depth=2, tbo=True)
+    engine = EssEngine(params, cfg, num_slots=NUM_SLOTS, max_seq=SMAX,
+                       num_host_pages=num_pages, prefill_chunk=16,
+                       mtp_depth=2, tbo=True)
+    rids = [engine.submit(plen, sp) for plen, sp in workload]
 
-    def on_round(s: E.ServeSession, rnd: int) -> None:
-        if rnd == 2 and s.sched.slots[1].active:
+    # drive serve rounds by hand (generate() would do the same loop);
+    # at round 2 preempt slot 1 — a simulated node loss on the session
+    # underneath the API.  The victim requeues ahead of its priority
+    # class and replays its stream on re-admission.
+    rnd = 0
+    while engine.has_work():
+        engine.step()
+        if rnd == 2 and engine.session.sched.slots[1].active:
             print("  round 2: PREEMPTING slot 1 (simulated node loss)")
-            s.preempt(1)
+            engine.session.preempt(1)
+        rnd += 1
+        assert rnd < 300, "serve loop failed to converge"
+    outs = [engine.output(r) for r in rids]
 
-    report = session.run(requests, on_round=on_round)
+    report = engine.session.report
     for ev in report.events:
         print(f"  {ev}")
     print(f"\nall requests served in {report.rounds} decode rounds "
-          f"({report.spec_rounds} speculative); "
-          f"finished: {sorted(report.finished_rids)}")
+          f"({report.spec_rounds} speculative); finish reasons: "
+          f"{[o.finish_reason for o in outs]}")
     print(f"decode tokens: {report.decode_tokens} "
           f"({report.tokens_per_s:.1f} accepted-tok/s, "
           f"{report.rounds_per_s:.1f} rounds/s); "
@@ -90,19 +103,21 @@ def main() -> None:
           f"({report.accepted_tokens}/{report.drafted_tokens} drafts); "
           f"prefill: {report.prefill_tokens} toks in "
           f"{report.prefill_chunks} chunks; "
-          f"admissions blocked on pages: {report.admissions_blocked}; "
+          f"admissions blocked on pages: "
+          f"{engine.session.sched.blocked_admissions}; "
           f"peak pages in use: {report.peak_pages_in_use}/{report.num_pages}")
     print("ttft (serve rounds from submit to first token): "
           + ", ".join(f"rid{r}={t}" for r, t in
                       sorted(report.ttft_rounds.items())))
-    for rid in sorted(session.outputs):
-        print(f"  rid{rid} tokens: {session.outputs[rid]}")
-    assert sorted(report.finished_rids) == [r.rid for r in requests]
-    assert report.admissions_blocked > 0, "page gate never engaged"
-    assert report.prefill_chunks > len(requests), "chunking never engaged"
+    for o in outs:
+        print(f"  rid{o.rid} tokens: {o.tokens}")
+    assert all(o.finish_reason == "length" for o in outs)
+    assert engine.session.sched.blocked_admissions > 0, \
+        "page gate never engaged"
+    assert report.prefill_chunks > len(workload), "chunking never engaged"
     assert report.spec_rounds > 0, "speculative rounds never engaged"
-    assert all(len(session.outputs[r.rid]) == r.max_new_tokens
-               for r in requests)
+    assert all(o.n_generated == sp.max_tokens
+               for o, (_, sp) in zip(outs, workload))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,316 @@
+"""Public serving API: request lifecycle over the re-entrant engine core.
+
+The paper's decoupled batch-size scaling only pays off if real workloads
+can use it — chat streams, early stopping, client disconnects that
+reclaim host pages immediately.  This module is that front-end, the
+layer holistic offload-centric serving systems (KVDrive, NOSA) put above
+their step loop:
+
+* :class:`SamplingParams` — per-request generation knobs (temperature /
+  top-k / top-p / seed, ``max_tokens``, EOS + stop token sets, admission
+  ``priority``);
+* :class:`TokenEvent` — one incremental stream element: a delivered
+  token, or the request's single terminal record
+  (``finish_reason`` set);
+* :class:`RequestOutput` — the aggregate result of one finished request;
+* :class:`EssEngine` — the facade: ``submit(prompt, params) -> rid``,
+  ``step() -> [TokenEvent]``, ``stream(rid)`` generator,
+  ``generate(prompts, params)`` batch convenience, ``abort(rid)`` and
+  ``metrics()``.  Under the hood it drives
+  :meth:`repro.serving.engine.ServeSession.step_round` — the re-entrant
+  serve round (admit → one prefill chunk → one decode/verify step) that
+  requests can be submitted to and aborted from *between any two
+  rounds*.
+
+``finish_reason`` state machine (exactly one terminal event per rid):
+
+    submitted ──admit──> prefill ──promote──> decode
+        │                   │                    │
+        │ oversize          │ abort()            ├── EOS/stop token ──> "stop"
+        ├──────> "rejected" ├──────> "abort"     ├── budget/max_seq ──> "length"
+        │ abort()           │                    ├── abort() ─────────> "abort"
+        ├──────> "abort"    │                    │
+        │ run()/generate()  round budget exhausted
+        └────────────────────────────────────────┴─────────────────> "budget"
+
+A preemption is *not* terminal: the request requeues (jumping its
+priority class's line) and its re-admission regenerates the identical
+stream, so the deterministic-replay contract holds across node loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Iterator, Optional, Sequence, Union
+
+from repro.serving.scheduler import Request
+
+FINISH_REASONS = ("stop", "length", "abort", "rejected", "budget")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request generation knobs.
+
+    ``temperature == 0`` is greedy; ``top_k=None`` / ``top_p=None``
+    disable the respective truncation; ``seed=None`` derives the
+    sampling PRNG from the rid.  Emitting any token in
+    ``eos_token_ids | stop_token_ids`` ends the stream *at that
+    position* (``finish_reason="stop"``) — inside a speculative round
+    the over-accepted suffix is rolled back so the slot state matches a
+    run that never drafted past the stop.  ``priority`` orders
+    admission (higher first, stable FIFO within a class)."""
+    max_tokens: int = 16
+    temperature: float = 0.0
+    top_k: Optional[int] = None
+    top_p: Optional[float] = None
+    seed: Optional[int] = None
+    eos_token_ids: tuple = ()
+    stop_token_ids: tuple = ()
+    priority: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One element of a request's incremental result stream.
+
+    Token events carry ``token`` with ``finish_reason=None``; the single
+    terminal event carries ``finish_reason`` with ``token=None`` and
+    ``index`` = the final stream length.  ``t`` is a
+    ``time.perf_counter`` stamp at delivery (TTFT / inter-token-latency
+    accounting — see :func:`latency_stats`)."""
+    rid: int
+    token: Optional[int]
+    index: int
+    finish_reason: Optional[str] = None
+    t: float = 0.0
+
+    @property
+    def is_terminal(self) -> bool:
+        return self.finish_reason is not None
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """Aggregate result of one finished request."""
+    rid: int
+    prompt_len: int
+    tokens: list
+    finish_reason: str
+    ttft_s: Optional[float] = None
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+
+def _pctl(vals: list, q: float) -> Optional[float]:
+    if not vals:
+        return None
+    vs = sorted(vals)
+    return vs[min(len(vs) - 1, int(round(q * (len(vs) - 1))))]
+
+
+def latency_stats(events: Sequence[TokenEvent],
+                  submit_times: dict) -> dict:
+    """p50/p95 TTFT and inter-token gap from TokenEvent timestamps.
+
+    TTFT = first token event's stamp minus the rid's submit stamp;
+    inter-token gap = consecutive token-event stamp deltas per rid
+    (tokens of one speculative round share a stamp, so accepted drafts
+    correctly count as ~zero-gap emissions)."""
+    ttft, gaps = [], []
+    prev: dict[int, float] = {}
+    for ev in events:
+        if ev.token is None:
+            continue
+        if ev.index == 0:
+            sub = submit_times.get(ev.rid)
+            if sub is not None:
+                ttft.append(ev.t - sub)
+        elif ev.rid in prev:
+            gaps.append(ev.t - prev[ev.rid])
+        prev[ev.rid] = ev.t
+    return {
+        "ttft_p50_s": _pctl(ttft, 0.50),
+        "ttft_p95_s": _pctl(ttft, 0.95),
+        "itl_p50_s": _pctl(gaps, 0.50),
+        "itl_p95_s": _pctl(gaps, 0.95),
+        "n_token_events": len(ttft) + len(gaps),
+    }
+
+
+class EssEngine:
+    """Request-lifecycle facade over one :class:`ServeSession`.
+
+    Construction takes the same knobs as ``ServeSession`` (``num_slots``,
+    ``max_seq``, ``num_host_pages``, ``prefill_chunk``, ``mtp_depth``,
+    ``tbo``, ``compiled``, ...).  Prompts are either an ``int`` (a
+    synthetic prompt of that length, derived deterministically from the
+    rid — the benchmarking path) or an explicit token sequence.
+
+    The engine assigns rids, distributes every round's
+    :class:`TokenEvent` batch into per-rid buffers, and guarantees each
+    rid's stream ends with exactly one terminal event.  ``stream(rid)``
+    is single-consumer per rid; ``generate`` and manual
+    ``submit``+``step`` loops can interleave freely with it — any call
+    to :meth:`step` advances *all* in-flight requests one serve round.
+    """
+
+    def __init__(self, params, cfg, *, num_slots: int, max_seq: int,
+                 **session_kw):
+        from repro.serving import engine as E   # api is engine's import
+        self._user_prompt_fn = session_kw.pop("prompt_fn", None)
+        self.session = E.ServeSession(params, cfg, num_slots=num_slots,
+                                      max_seq=max_seq,
+                                      prompt_fn=self._prompt_for,
+                                      **session_kw)
+        self._next_rid = 0
+        self._prompts: dict[int, Any] = {}
+        self._plens: dict[int, int] = {}
+        self._buffers: dict[int, deque] = {}
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def _prompt_for(self, req: Request):
+        p = self._prompts.get(req.rid)
+        if p is not None:
+            return p
+        if self._user_prompt_fn is not None:
+            return self._user_prompt_fn(req)
+        return self.session._default_prompt(req)
+
+    def submit(self, prompt: Union[int, Sequence[int]],
+               params: Optional[SamplingParams] = None) -> int:
+        """Enqueue one request; returns its rid.  Admission happens at
+        the next :meth:`step` (between rounds, never mid-round).  An
+        unservable request (needs more host pages than the whole pool)
+        is rejected immediately — its terminal event is already buffered
+        when ``submit`` returns."""
+        params = params or SamplingParams()
+        rid = self._next_rid
+        self._next_rid += 1
+        if isinstance(prompt, int):
+            plen = prompt
+        else:
+            import jax.numpy as jnp
+            toks = jnp.asarray(prompt, jnp.int32)[None, :]
+            self._prompts[rid] = toks
+            plen = int(toks.shape[1])
+        self._plens[rid] = plen
+        self._buffers.setdefault(rid, deque())
+        self.session.submit(Request(
+            rid=rid, prompt_len=plen, max_new_tokens=params.max_tokens,
+            temperature=params.temperature, top_k=params.top_k,
+            top_p=params.top_p, seed=params.seed,
+            eos_token_ids=tuple(params.eos_token_ids),
+            stop_token_ids=tuple(params.stop_token_ids),
+            priority=params.priority))
+        self._distribute(self.session.drain_events())
+        return rid
+
+    def abort(self, rid: int) -> bool:
+        """Abort a queued or running request between rounds: host pages
+        return to the allocator immediately, the slot fully resets, and
+        the stream closes with ``finish_reason="abort"``."""
+        ok = self.session.abort(rid)
+        self._distribute(self.session.drain_events())
+        return ok
+
+    def step(self) -> list:
+        """Run one serve round; returns (and buffers) its TokenEvents."""
+        evs = self.session.step_round()
+        self._distribute(evs)
+        return evs
+
+    def _distribute(self, evs) -> None:
+        for ev in evs:
+            self._buffers.setdefault(ev.rid, deque()).append(ev)
+
+    # -- results -------------------------------------------------------------
+
+    def is_finished(self, rid: int) -> bool:
+        return rid in self.session._terminal
+
+    def finish_reason(self, rid: int) -> Optional[str]:
+        return self.session._terminal.get(rid)
+
+    def has_work(self) -> bool:
+        return bool(self.session.sched.running or self.session.sched.queue)
+
+    def stream(self, rid: int) -> Iterator[TokenEvent]:
+        """Incremental results for one rid, driving serve rounds as
+        needed; ends after yielding the terminal event.  Single-consumer
+        per rid (events are popped from the rid's buffer)."""
+        buf = self._buffers[rid]
+        while True:
+            while buf:
+                ev = buf.popleft()
+                yield ev
+                if ev.is_terminal:
+                    return
+            if self.is_finished(rid):
+                return                     # terminal already consumed
+            if not self.has_work():
+                raise RuntimeError(
+                    f"rid={rid} stream stalled: engine idle with no "
+                    f"terminal event")
+            self.step()
+
+    def output(self, rid: int) -> RequestOutput:
+        """Aggregate result; the rid must have finished."""
+        ses = self.session
+        assert rid in ses._terminal, f"rid={rid} has not finished"
+        return RequestOutput(
+            rid=rid, prompt_len=self._plens.get(rid, 0),
+            tokens=list(ses.outputs.get(rid, [])),
+            finish_reason=ses._terminal[rid],
+            ttft_s=ses.report.ttft_s.get(rid))
+
+    def generate(self, prompts: Sequence,
+                 params: Union[SamplingParams, Sequence[SamplingParams],
+                               None] = None, *,
+                 max_rounds: int = 200) -> list:
+        """Submit a batch and drive the loop until every request reaches
+        a terminal event; returns RequestOutputs in submission order.
+        Requests still unfinished after ``max_rounds`` serve rounds are
+        terminated with ``finish_reason="budget"``."""
+        if params is None or isinstance(params, SamplingParams):
+            params = [params or SamplingParams()] * len(prompts)
+        assert len(params) == len(prompts)
+        rids = [self.submit(p, sp) for p, sp in zip(prompts, params)]
+        budget = max_rounds
+        while any(not self.is_finished(r) for r in rids):
+            self.step()
+            budget -= 1
+            if budget <= 0:
+                for r in rids:
+                    if not self.is_finished(r):
+                        self.session.abort(r, reason="budget")
+                self._distribute(self.session.drain_events())
+                break
+        return [self.output(r) for r in rids]
+
+    def metrics(self) -> dict:
+        """Serving counters + latency percentiles (from TokenEvent
+        timestamps) for everything this engine has served so far."""
+        rep = self.session.report
+        m = {
+            "rounds": rep.rounds,
+            "spec_rounds": rep.spec_rounds,
+            "decode_tokens": rep.decode_tokens,
+            "prefill_tokens": rep.prefill_tokens,
+            "prefill_chunks": rep.prefill_chunks,
+            "accept_rate": rep.accept_rate,
+            "rejected": rep.rejected,
+            "aborted": rep.aborted,
+            "finish_reasons": dict(rep.finish_reasons),
+            "admissions_blocked": self.session.sched.blocked_admissions,
+            "peak_pages_in_use": rep.peak_pages_in_use,
+            "num_pages": rep.num_pages,
+        }
+        m.update(latency_stats(self.session.token_events,
+                               self.session._submit_time))
+        return m

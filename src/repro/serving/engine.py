@@ -17,11 +17,22 @@ Two decode paths:
 Prefill runs the chunked DSA path, scatters the latents to the host tier
 (the PD-disaggregation "Load" arrow in Figure 3) and applies LRU-Warmup.
 
-The serving stack is split across three modules:
+The serving stack is split across four modules:
 
 * this one — the model step functions (``ess_decode`` /
-  ``ess_prefill_chunk``) and the host-side :class:`ServeSession` loop
-  (scheduler bookkeeping, page allocation, stream emission);
+  ``ess_prefill_chunk``) and the host-side :class:`ServeSession`
+  **re-entrant engine core**: ``step_round()`` runs exactly one serve
+  round (admissions → one prefill chunk → one decode/verify step) and
+  returns the round's :class:`~repro.serving.api.TokenEvent` batch —
+  requests can be submitted and aborted between any two rounds, EOS /
+  stop tokens truncate *within* a speculative round (the over-accepted
+  suffix's lens/pool state is rolled back), and every request ends with
+  exactly one terminal event (``stop | length | abort | rejected |
+  budget``).  ``run()`` survives as a thin run-to-completion compat
+  shim over the same core, with bit-identical streams;
+* :mod:`repro.serving.api` — the public front-end (``EssEngine`` with
+  ``submit`` / ``step`` / ``stream`` / ``generate`` / ``abort`` /
+  ``metrics``, ``SamplingParams``, ``TokenEvent``, ``RequestOutput``);
 * :mod:`repro.serving.state` — the device-resident ``EngineState``
   pytree a round consumes and produces;
 * :mod:`repro.serving.step` — the ``StepProgram`` builder that compiles
@@ -51,6 +62,7 @@ from repro.models import moe as MoE
 from repro.models import transformer as T
 from repro.serving import state as ES
 from repro.serving import step as SP
+from repro.serving.api import TokenEvent
 from repro.serving.sampling import greedy, request_key, sample
 from repro.serving.scheduler import Request, Scheduler
 
@@ -405,6 +417,10 @@ class ServeReport:
     spec_rounds: int = 0                # rounds run as draft+verify
     drafted_tokens: int = 0             # greedy-slot drafts scored
     accepted_tokens: int = 0            # drafts accepted (excl. bonus)
+    # request-lifecycle accounting (public serving API)
+    rejected: int = 0                   # oversize/unservable requests
+    aborted: int = 0                    # client aborts + budget kills
+    finish_reasons: dict = dataclasses.field(default_factory=dict)
 
     @property
     def tokens_per_s(self) -> float:
@@ -537,11 +553,21 @@ class ServeSession:
         self.free_pool_entries = num_slots * self.pool_entries_per_slot
         self.sched = Scheduler(num_slots, max_seq,
                                admission_gate=self._admission_gate,
-                               release_hook=self._release_slot)
+                               release_hook=self._release_slot,
+                               reject_hook=self._reject)
         # per-request emitted token stream (prefill first-token + decode
         # emissions, truncated to max_new_tokens); reset on re-admission
         self.outputs: dict[int, list[int]] = {}
         self.report = ServeReport(num_pages=self.num_pages)
+        # request-lifecycle event stream: every delivered token and every
+        # terminal record (exactly one per rid) as TokenEvents.
+        # `token_events` is the full log (latency accounting);
+        # `_pending_events` buffers the current round for step_round()'s
+        # return / the front-end's drain.
+        self.token_events: list[TokenEvent] = []
+        self._pending_events: list[TokenEvent] = []
+        self._terminal: dict[int, str] = {}     # rid -> finish_reason
+        self._last_done: list[Request] = []
         self._prompt_fn = prompt_fn or self._default_prompt
         # resources promised to earlier admissions of the same admit batch
         # (the scheduler consults the gate before the engine allocates)
@@ -623,26 +649,86 @@ class ServeSession:
             self.report.peak_pages_in_use = max(
                 self.report.peak_pages_in_use, used)
 
+    # -- event stream --------------------------------------------------------
+
+    def _event(self, ev: TokenEvent) -> None:
+        self._pending_events.append(ev)
+        self.token_events.append(ev)
+
+    def drain_events(self) -> list[TokenEvent]:
+        """Hand the buffered TokenEvents to the front-end (also returned
+        by :meth:`step_round`; this drains out-of-round events too —
+        submit-time rejections, between-round aborts)."""
+        evs, self._pending_events = self._pending_events, []
+        return evs
+
+    def _finalize(self, req: Request) -> None:
+        """Emit the request's single terminal event.  Every request ends
+        here exactly once, whatever the path (natural completion, stop
+        token, abort, rejection, round-budget kill)."""
+        reason = req.finish_reason or "length"
+        assert req.rid not in self._terminal, \
+            f"rid={req.rid} already terminal ({self._terminal[req.rid]})"
+        self._terminal[req.rid] = reason
+        self.report.finish_reasons[req.rid] = reason
+        self._event(TokenEvent(rid=req.rid, token=None,
+                               index=len(self.outputs.get(req.rid, [])),
+                               finish_reason=reason,
+                               t=time.perf_counter()))
+
+    def _reject(self, req: Request) -> None:
+        """Scheduler reject hook: an oversize request bounced at
+        admission surfaces as a terminal ``rejected`` event + counter
+        instead of silently vanishing."""
+        self.report.rejected += 1
+        self.report.events.append(
+            f"rejected rid={req.rid}: prompt {req.prompt_len} + max_new "
+            f"{req.max_new_tokens} > max_seq {self.sched.max_seq}")
+        self._finalize(req)
+
     # -- request flow --------------------------------------------------------
 
     def submit(self, req: Request) -> None:
-        # a request needing more pages than the whole pool can never be
-        # admitted — reject up front instead of blocking the FIFO head
-        # forever (the scheduler itself only screens against max_seq)
-        if self.allocator is not None \
-                and self.pages_needed(req) > self.num_pages:
-            req.finished = True
-            self.sched.finished.append(req)
-            self.report.events.append(
-                f"rejected rid={req.rid}: needs {self.pages_needed(req)} "
-                f"pages, pool has {self.num_pages}")
-            return
         # unconditional stamps: a missing rid must surface as a KeyError
         # at delivery, never as a silently ~0 TTFT (the old defaulted
         # lookup reported perf_counter() - perf_counter() for it)
         self._submit_round[req.rid] = self._round
         self._submit_time[req.rid] = time.perf_counter()
+        # a request needing more pages than the whole pool can never be
+        # admitted — reject up front instead of blocking the queue
+        # forever (the scheduler itself only screens against max_seq)
+        if self.allocator is not None \
+                and self.pages_needed(req) > self.num_pages:
+            req.finished = True
+            req.finish_reason = "rejected"
+            self.sched.finished.append(req)
+            self.report.rejected += 1
+            self.report.events.append(
+                f"rejected rid={req.rid}: needs {self.pages_needed(req)} "
+                f"pages, pool has {self.num_pages}")
+            self._finalize(req)
+            return
         self.sched.submit(req)
+
+    def abort(self, rid: int, *, reason: str = "abort") -> bool:
+        """Abort a queued or running request between rounds.  A running
+        slot's host pages return to the allocator immediately and the
+        slot gets the full reset (pool maps + lens + engine masks) via
+        the scheduler's release hook — mid-prefill aborts also drop the
+        chunk cursor; the stream closes with one terminal event."""
+        req = self.sched.running.get(rid)
+        if req is None:
+            req = next((r for r in self.sched.queue if r.rid == rid), None)
+        if req is None or req.finished:
+            return False
+        req.finish_reason = reason
+        released = self.sched.abort(rid)
+        assert released
+        self.report.aborted += 1
+        self.report.events.append(
+            f"round {self._round}: rid={rid} aborted ({reason})")
+        self._finalize(req)
+        return True
 
     def preempt(self, slot: int) -> None:
         """Evict a running slot (node loss / rebalance); pages return and
@@ -752,9 +838,12 @@ class ServeSession:
         """Promotion bookkeeping after the last prefill chunk: deliver the
         first token, promote the slot into the decode batch, record TTFT.
         A ``max_new_tokens == 1`` request's budget is spent by the first
-        token — it finishes right here, before any decode round."""
+        token — it finishes right here, before any decode round; so does
+        a request whose first token is one of its EOS/stop tokens."""
         req = task.req
         self.outputs[req.rid] = [t0]
+        self._event(TokenEvent(rid=req.rid, token=t0, index=0,
+                               t=time.perf_counter()))
         self.sched.promote(slot)
         del self._prefill[slot]
         rid = req.rid
@@ -767,7 +856,10 @@ class ServeSession:
         self.report.events.append(
             f"round {self._round}: rid={rid} first token ready "
             f"(ttft {ttft} rounds)")
-        if self.sched.budget_left(slot) == 0:
+        if t0 in req.stop_set:
+            req.finish_reason = "stop"
+            self._handle_done([self.sched.finish(slot)])
+        elif self.sched.budget_left(slot) == 0:
             self._handle_done(self.sched.record_tokens({slot: 0}))
 
     def _warmup_slot(self, slot: int, tails: tuple, prompt_len: int) -> None:
@@ -805,20 +897,57 @@ class ServeSession:
         return sample(request_key(req.sample_seed, index), logits,
                       req.temperature, req.top_k, req.top_p)
 
-    def _emit(self, slot: int, req: Request, tokens: list[int]) -> int:
+    def _emit(self, slot: int, req: Request,
+              tokens: list[int]) -> tuple[int, bool]:
         """Deliver a round's emitted tokens for one slot: extend the
-        request's output stream and return the generated-budget charge.
+        request's output stream (as TokenEvents too) and return
+        ``(generated-budget charge, stop-token hit)``.
         Charge == delivery, always: both are clamped by the *same*
         ``remaining`` headroom (budget and max_seq), so the scheduler
         never records a token that was not appended to the stream —
         ``len(outputs[rid]) == generated + 1`` holds at finish (the old
         code charged ``min(len(tokens), remaining)`` while delivering
         under an additional ``max_new - len(out)`` clamp, so a verify
-        round at the budget edge recorded ghost tokens)."""
+        round at the budget edge recorded ghost tokens).
+
+        EOS/stop-token termination cuts *within* the round: the stream
+        ends exactly at the stop position (the stop token is the last
+        delivery) and the caller rolls back the over-accepted suffix an
+        MTP verify round may have appended past it."""
         out = self.outputs.setdefault(req.rid, [])
         delivered = tokens[:max(0, self.sched.remaining(slot))]
-        out.extend(delivered)
-        return len(delivered)
+        stops = req.stop_set
+        stopped = False
+        if stops:
+            for j, t in enumerate(delivered):
+                if t in stops:
+                    delivered = delivered[:j + 1]
+                    stopped = True
+                    break
+        now = time.perf_counter()
+        for t in delivered:
+            self._event(TokenEvent(rid=req.rid, token=t, index=len(out),
+                                   t=now))
+            out.append(t)
+        if stopped:
+            req.finish_reason = "stop"
+        return len(delivered), stopped
+
+    def _truncate_slot_tail(self, slot: int, n_drop: int) -> None:
+        """Roll back the last ``n_drop`` appended positions of one slot
+        (stop-token termination inside a speculative round): ``lens``
+        shrink and pool entries beyond are invalidated — exactly the MTP
+        rejection rollback, so the slot's lens/pool state matches a run
+        that never drafted past the stop position.  (Indexer-cache and
+        host rows beyond ``lens`` are dead by construction and reset
+        with the slot.)"""
+        if n_drop <= 0:
+            return
+        caches = self.caches
+        new_lens = caches.lens.at[slot].add(jnp.int32(-n_drop))
+        pools = tuple(LP.invalidate_beyond(p, new_lens)
+                      for p in caches.pools)
+        self.caches = caches._replace(lens=new_lens, pools=pools)
 
     def decode_round(self) -> list[Request]:
         """One decode round over the running slots; returns newly
@@ -842,15 +971,25 @@ class ServeSession:
         self.state, out = fn(self.params, self.state)
         toks, n_emit = jax.device_get((out.tokens, out.n_emit))
         slot_tokens = {}
+        stop_slots = []
         for i in active:
             req = self._slot_req(i)
             n = int(n_emit[i])
-            slot_tokens[i] = self._emit(i, req, [int(t) for t in
-                                                 toks[i, :n]])
+            charged, stopped = self._emit(i, req,
+                                          [int(t) for t in toks[i, :n]])
+            slot_tokens[i] = charged
+            if stopped:
+                # the verify round drafted past the stop: drop the
+                # over-accepted suffix from the slot's lens + pools
+                self._truncate_slot_tail(i, n - charged)
+                stop_slots.append(i)
             if spec and not req.sampling:
                 self.report.drafted_tokens += self.mtp_depth
                 self.report.accepted_tokens += n - 1
         done = self.sched.record_tokens(slot_tokens)
+        for i in stop_slots:
+            if self.sched.slots[i].active:   # not already budget-finished
+                done.append(self.sched.finish(i))
         self.report.rounds += 1
         if spec:
             self.report.spec_rounds += 1
@@ -863,38 +1002,72 @@ class ServeSession:
             assert len(out) == req.generated + 1, \
                 (f"rid={req.rid}: delivered {len(out)} != "
                  f"generated {req.generated} + first token")
+            self._finalize(req)
             self.report.events.append(
                 f"round {self._round}: rid={req.rid} finished "
-                f"({len(out)} tokens)")
+                f"({len(out)} tokens, {req.finish_reason})")
 
-    def step(self) -> list[Request]:
-        """One serve round: admissions, then one prefill chunk for at most
-        one admitting slot, then one decode step for all running slots."""
+    def step_round(self) -> list[TokenEvent]:
+        """The re-entrant engine core: one serve round — admissions, then
+        one prefill chunk for at most one admitting slot, then one decode
+        step for all running slots — returning the round's TokenEvents
+        (token deliveries + terminal records).  The front-end
+        (:class:`repro.serving.api.EssEngine`) drives this directly;
+        ``submit`` and ``abort`` may be called between any two rounds.
+        Wall time accumulates per round, so throughput metrics hold for
+        any driver (``run``, ``generate``, manual ``step`` loops)."""
+        t0 = time.perf_counter()
         self.admit()
         self.prefill_round()
         done = self.decode_round()
         self._handle_done(done)
         self._round += 1
-        return done
+        self._last_done = done
+        self.report.wall_s += time.perf_counter() - t0
+        return self.drain_events()
+
+    def step(self) -> list[Request]:
+        """Compat wrapper over :meth:`step_round` returning the round's
+        newly finished requests (events stay buffered for drain)."""
+        evs = self.step_round()
+        self._pending_events = evs + self._pending_events
+        return self._last_done
+
+    def _terminate_remaining(self, reason: str) -> None:
+        """Terminal records for every still-unfinished request (round
+        budget exhausted): running slots release their pages, queued
+        requests drop, each rid gets exactly one ``reason`` event."""
+        for rid in [r.rid for r in self.sched.queue] + \
+                list(self.sched.running):
+            self.abort(rid, reason=reason)
 
     def run(self, requests=None, *, max_rounds: int = 200,
             on_round: Optional[Callable[["ServeSession", int], None]] = None
             ) -> ServeReport:
-        """Drive the loop until every submitted request finishes."""
+        """Compat shim: drive :meth:`step_round` until every submitted
+        request reaches a terminal event (streams are bit-identical to
+        the front-end's ``generate``).  Requests still unfinished after
+        ``max_rounds`` rounds are terminated with
+        ``finish_reason="budget"`` — nothing is ever stranded without a
+        terminal record."""
         for req in (requests or []):
             self.submit(req)
-        t0 = time.perf_counter()
         budget = max_rounds            # rounds granted to THIS run() call
         while self.sched.running or self.sched.queue:
-            self.step()
+            self.step_round()          # accumulates report.wall_s
             if on_round is not None:
                 # the serve round just executed (aligned with event labels)
                 on_round(self, self._round - 1)
             budget -= 1
             if budget <= 0:
                 self.report.events.append("max_rounds reached")
+                self._terminate_remaining("budget")
                 break
-        self.report.wall_s = time.perf_counter() - t0
         self.report.finished_rids = [r.rid for r in self.sched.finished]
         self.report.admissions_blocked = self.sched.blocked_admissions
+        # lifecycle contract: every submitted rid ended with exactly one
+        # terminal event (single-emission is enforced in _finalize)
+        missing = [rid for rid in self._submit_round
+                   if rid not in self._terminal]
+        assert not missing, f"no terminal event for rids {missing}"
         return self.report

@@ -2,11 +2,25 @@
 
 Manages a fixed pool of decode slots: admission from a request queue,
 completion/eviction, preemption (e.g. elastic down-scale or straggler
-re-balance) with requeue, and the batch-size/memory accounting that the
-paper's analysis revolves around (GPU-memory-feasible batch vs ESS batch).
+re-balance) with requeue, client aborts, and the batch-size/memory
+accounting that the paper's analysis revolves around
+(GPU-memory-feasible batch vs ESS batch).
 
-Deterministic: all decisions derive from (step, queue order), so a restart
-from a checkpointed step replays identically.
+Admission is **priority-aware**: the candidate is the queued request with
+the highest ``priority``, FIFO (stable submission order) within a
+priority class.  A preempted request re-enters *ahead* of its class so a
+node-loss victim is re-served first.  Deterministic: all decisions
+derive from (step, priority, submission order), so a restart from a
+checkpointed step replays identically — the admission gate blocks on
+the selected candidate with no head-of-line bypass (a lower-priority
+request never sneaks past a resource-blocked higher-priority one).
+
+Every request ends with exactly one ``finish_reason``
+(``stop | length | abort | rejected | budget`` — see
+:mod:`repro.serving.api`); the scheduler stamps ``length`` (budget /
+max_seq exhaustion) and ``rejected`` (oversize) itself, the engine
+stamps the rest before calling :meth:`Scheduler.finish` /
+:meth:`Scheduler.abort`.
 """
 
 from __future__ import annotations
@@ -36,10 +50,24 @@ class Request:
     top_k: Optional[int] = None
     top_p: Optional[float] = None
     seed: Optional[int] = None
+    # lifecycle (public serving API, repro.serving.api): emitting any
+    # token in eos_token_ids | stop_token_ids terminates the stream at
+    # that position (finish_reason="stop"); priority orders admission
+    # (higher first, FIFO within a class); seq is the scheduler-assigned
+    # submission rank; finish_reason is stamped exactly once at the end.
+    eos_token_ids: tuple = ()
+    stop_token_ids: tuple = ()
+    priority: int = 0
+    seq: int = 0
+    finish_reason: Optional[str] = None
 
     @property
     def sampling(self) -> bool:
         return self.temperature > 0.0
+
+    @property
+    def stop_set(self) -> frozenset:
+        return frozenset(self.eos_token_ids) | frozenset(self.stop_token_ids)
 
     @property
     def sample_seed(self) -> int:
@@ -69,14 +97,19 @@ class Scheduler:
       A ``False`` verdict blocks the queue head (FIFO — no head-of-line
       bypass, so admission order stays deterministic).
     * ``release_hook(slot)`` — called whenever a slot stops serving its
-      request (completion *or* preemption); the engine returns the slot's
-      host pages and performs the full per-slot cache reset
+      request (completion, preemption *or* abort); the engine returns the
+      slot's host pages and performs the full per-slot cache reset
       (:func:`repro.cache.latent_cache.reset_slot`).
+    * ``reject_hook(req)`` — called when an oversize request
+      (``prompt_len + max_new_tokens > max_seq``) is bounced at admission
+      so the engine can surface a terminal ``finish_reason="rejected"``
+      event instead of letting the request silently vanish.
     """
 
     def __init__(self, num_slots: int, max_seq: int,
                  admission_gate: Optional[Callable[["Request"], bool]] = None,
-                 release_hook: Optional[Callable[[int], None]] = None):
+                 release_hook: Optional[Callable[[int], None]] = None,
+                 reject_hook: Optional[Callable[["Request"], None]] = None):
         self.num_slots = num_slots
         self.max_seq = max_seq
         self.slots = [SlotState() for _ in range(num_slots)]
@@ -86,13 +119,25 @@ class Scheduler:
         self.step = 0
         self.admission_gate = admission_gate
         self.release_hook = release_hook
+        self.reject_hook = reject_hook
         self.blocked_admissions = 0
+        self._seq = 0          # submission rank (FIFO within a class)
+        self._seq_front = -1   # preempted requests jump their class's line
 
     # -- admission ----------------------------------------------------------
 
     def submit(self, req: Request) -> None:
         req.arrived_step = self.step
+        req.seq = self._seq
+        self._seq += 1
         self.queue.append(req)
+
+    def _next_candidate(self) -> Optional[Request]:
+        """Highest priority first; stable FIFO (submission seq) within a
+        priority class — deterministic in (priority, submission order)."""
+        if not self.queue:
+            return None
+        return min(self.queue, key=lambda r: (-r.priority, r.seq))
 
     def admit(self) -> list[tuple[int, Request]]:
         """Fill free slots from the queue; returns [(slot, request)] needing
@@ -101,21 +146,26 @@ class Scheduler:
         for i, s in enumerate(self.slots):
             if s.active:
                 continue
-            # reject oversize heads outright (they can never be admitted)
-            while self.queue and (self.queue[0].prompt_len
-                                  + self.queue[0].max_new_tokens
-                                  > self.max_seq):
-                req = self.queue.popleft()
+            # reject oversize candidates outright (they can never be
+            # admitted) and surface them via the reject hook
+            while True:
+                req = self._next_candidate()
+                if req is None or (req.prompt_len + req.max_new_tokens
+                                   <= self.max_seq):
+                    break
+                self.queue.remove(req)
                 req.finished = True
+                req.finish_reason = "rejected"
                 self.finished.append(req)
-            if not self.queue:
+                if self.reject_hook is not None:
+                    self.reject_hook(req)
+            if req is None:
                 break
-            req = self.queue[0]
             if self.admission_gate is not None \
                     and not self.admission_gate(req):
                 self.blocked_admissions += 1
                 break                        # resources exhausted: wait
-            self.queue.popleft()
+            self.queue.remove(req)
             s.rid, s.active, s.len = req.rid, True, req.prompt_len
             s.phase = "prefill"
             req.slot = i
@@ -188,10 +238,47 @@ class Scheduler:
             limit = req.max_new_tokens - (1 if s.first_emitted else 0)
             if req.generated >= limit or s.len >= self.max_seq:
                 req.finished = True
+                if req.finish_reason is None:   # engine may have set "stop"
+                    req.finish_reason = "length"
                 done.append(req)
                 self._release(i)
         self.step += 1
         return done
+
+    def finish(self, slot: int) -> Request:
+        """Force-complete a running slot mid-budget (EOS / stop-token
+        termination): the engine stamps ``finish_reason`` first, then the
+        slot releases exactly as a natural completion."""
+        s = self.slots[slot]
+        assert s.active, f"finish() on inactive slot {slot}"
+        req = self.running[s.rid]
+        req.finished = True
+        if req.finish_reason is None:
+            req.finish_reason = "stop"
+        self._release(slot)
+        return req
+
+    def abort(self, rid: int) -> bool:
+        """Abort a queued or running request (client disconnect / budget
+        kill).  A running slot releases through the engine's hook (pages
+        return, caches reset); a queued request is simply removed.  No
+        requeue — the request is terminally finished."""
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                req.finished = True
+                if req.finish_reason is None:
+                    req.finish_reason = "abort"
+                self.finished.append(req)
+                return True
+        req = self.running.get(rid)
+        if req is None:
+            return False
+        req.finished = True
+        if req.finish_reason is None:
+            req.finish_reason = "abort"
+        self._release(req.slot)
+        return True
 
     def preempt(self, slot: int) -> None:
         """Evict a running sequence (node loss / rebalance); it re-queues and
@@ -208,6 +295,10 @@ class Scheduler:
         req.preempted_count += 1
         req.slot = None
         req.generated = 0
+        # jump the line within its priority class (the old appendleft
+        # semantics under priority-aware candidate selection)
+        req.seq = self._seq_front
+        self._seq_front -= 1
         self.queue.appendleft(req)
         s.rid, s.active, s.len, s.phase = -1, False, 0, "idle"
         s.first_emitted = False

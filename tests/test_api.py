@@ -1,0 +1,413 @@
+"""Public serving API: `EssEngine` front-end over the re-entrant engine
+core.
+
+Covers this PR's tentpole and satellites:
+
+* **stream parity** — ``generate()`` over the PR-4 parity workload
+  matrix (greedy + sampled requests, Q=1 and mtp2, TBO off/on, paged and
+  dense host tier, compiled and eager) emits streams bit-identical to
+  the compat ``ServeSession.run`` shim;
+* **abort lifecycle** — abort mid-prefill and mid-decode (greedy and
+  mtp2, paged) restores the allocator's free-page count and the
+  pool-entry count to pre-admission values, and the recycled slot
+  replays a fresh identical request bit-identically to a fresh engine;
+* **stop-token truncation** — a stop inside a speculative round cuts
+  the stream exactly at the stop position and rolls back the
+  over-accepted suffix: the slot's lens/pool state at release equals a
+  Q=1 run that never drafted past the stop (deterministic full
+  acceptance via permutation-structured params);
+* **rejected / budget terminals** — oversize and page-unservable
+  requests surface as ``finish_reason="rejected"`` events + a
+  ServeReport counter; ``run(max_rounds=...)`` exhaustion emits
+  ``finish_reason="budget"`` for every stranded rid, and every
+  submitted rid ends with exactly one terminal event;
+* **priority admission** — higher priority admitted first, stable FIFO
+  within a class, preempted requests re-enter ahead of their class;
+* **stream() generator + metrics()** — incremental consumption ends at
+  the terminal event; TokenEvent timestamps yield TTFT / inter-token
+  percentiles.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving import engine as E
+from repro.serving.api import EssEngine, SamplingParams, latency_stats
+from repro.serving.scheduler import Request, Scheduler
+
+
+def smoke_cfg(mtp_depth=None, **ess_overrides):
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    if ess_overrides:
+        cfg = dataclasses.replace(
+            cfg, ess=dataclasses.replace(cfg.ess, **ess_overrides))
+    if mtp_depth is not None:
+        cfg = dataclasses.replace(cfg, mtp_depth=mtp_depth)
+    return cfg
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_cfg(mtp_depth=2, max_miss_ratio=1.0)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(jax.random.key(0), T.model_def(cfg))
+
+
+# the PR-4 parity workload: 3 greedy + 1 sampled request
+_WORKLOAD = [(10, dict(max_tokens=5)),
+             (8, dict(max_tokens=3)),
+             (13, dict(max_tokens=6)),
+             (9, dict(max_tokens=4, temperature=0.8, top_k=64,
+                      top_p=0.95, seed=123))]
+
+
+def _api_workload():
+    return ([p for p, _ in _WORKLOAD],
+            [SamplingParams(**kw) for _, kw in _WORKLOAD])
+
+
+def _legacy_requests():
+    return [Request(rid=i, prompt_len=p, max_new_tokens=kw["max_tokens"],
+                    temperature=kw.get("temperature", 0.0),
+                    top_k=kw.get("top_k"), top_p=kw.get("top_p"),
+                    seed=kw.get("seed"))
+            for i, (p, kw) in enumerate(_WORKLOAD)]
+
+
+# ---------------------------------------------------------------------------
+# Stream parity: generate() == ServeSession.run, bit for bit
+# ---------------------------------------------------------------------------
+
+def _check_parity(params, cfg, *, engine_kw=None, session_kw=None):
+    prompts, sps = _api_workload()
+    eng = EssEngine(params, cfg, num_slots=2, max_seq=32,
+                    **(engine_kw or {}))
+    outs = eng.generate(prompts, sps, max_rounds=120)
+    ses = E.ServeSession(params, cfg, num_slots=2, max_seq=32,
+                         **(session_kw or engine_kw or {}))
+    rep = ses.run(_legacy_requests(), max_rounds=120)
+    assert sorted(rep.finished_rids) == [0, 1, 2, 3]
+    assert [o.tokens for o in outs] == [ses.outputs[i] for i in range(4)]
+    assert [o.finish_reason for o in outs] == ["length"] * 4
+    # exactly one terminal event per rid on both paths
+    assert sorted(eng.session._terminal) == [0, 1, 2, 3]
+    assert sorted(ses._terminal) == [0, 1, 2, 3]
+    return eng, ses
+
+
+@pytest.mark.parametrize("mtp_depth,tbo", [(0, False), (2, False),
+                                           (0, True), (2, True)])
+def test_generate_stream_parity_vs_run(cfg, params, mtp_depth, tbo):
+    """Acceptance criterion: the front-end's ``generate()`` emits streams
+    bit-identical to the compat ``ServeSession.run`` across the PR-4
+    matrix cells (greedy + sampled requests in the workload)."""
+    _check_parity(params, cfg,
+                  engine_kw=dict(mtp_depth=mtp_depth, tbo=tbo))
+
+
+def test_generate_stream_parity_eager(cfg, params):
+    """Front-end over the eager (op-by-op) path vs the compiled compat
+    shim — one comparison covers both facade parity and mode parity."""
+    _check_parity(params, cfg,
+                  engine_kw=dict(mtp_depth=2, compiled=False),
+                  session_kw=dict(mtp_depth=2, compiled=True))
+
+
+def test_generate_stream_parity_dense_host_tier(params):
+    cfg_d = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0, paged_host=False)
+    eng, _ = _check_parity(params, cfg_d, engine_kw=dict(mtp_depth=2))
+    assert not eng.session.caches.paged
+
+
+# ---------------------------------------------------------------------------
+# Abort: resource restoration + bit-identical recycled-slot replay
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mtp_depth", [0, 2])
+def test_abort_restores_resources_and_recycled_slot_replays(
+        cfg, params, mtp_depth):
+    """Abort mid-prefill and mid-decode (greedy Q=1 and mtp2, paged):
+    free pages and free pool entries return to pre-admission values, the
+    aborted slot is fully unmapped/reset, and a fresh identical request
+    on the recycled slot replays bit-identically to a fresh engine."""
+    prompt_a = [int(t) for t in jax.random.randint(
+        jax.random.key(21), (16,), 0, cfg.vocab_size)]
+    prompt_b = [int(t) for t in jax.random.randint(
+        jax.random.key(22), (8,), 0, cfg.vocab_size)]
+    eng = EssEngine(params, cfg, num_slots=2, max_seq=32,
+                    mtp_depth=mtp_depth, prefill_chunk=4)
+    assert eng.session.paged
+    free0 = eng.session.allocator.free_pages
+    pool0 = eng.session.free_pool_entries
+
+    # --- mid-prefill abort -------------------------------------------------
+    r0 = eng.submit(prompt_a, SamplingParams(max_tokens=4))
+    eng.step()                        # admit + first 4-token chunk of 16
+    slot = eng.session.sched.running[r0].slot
+    task = eng.session._prefill[slot]
+    assert 0 < task.cursor < len(prompt_a)          # genuinely mid-prefill
+    assert eng.session.allocator.free_pages < free0
+    assert eng.abort(r0)
+    assert eng.session.allocator.free_pages == free0
+    assert eng.session.free_pool_entries == pool0
+    assert slot not in eng.session._prefill
+    assert (np.array(eng.session.caches.block_tables[slot]) == -1).all()
+    assert int(eng.session.caches.lens[slot]) == 0
+    assert eng.finish_reason(r0) == "abort"
+    assert eng.output(r0).tokens == []
+
+    # --- mid-decode abort --------------------------------------------------
+    r1 = eng.submit(prompt_b, SamplingParams(max_tokens=20))
+    for _ in range(40):
+        eng.step()
+        if len(eng.session.outputs.get(r1, [])) >= 3:
+            break
+    assert len(eng.session.outputs[r1]) >= 3        # decoding, mid-flight
+    slot1 = eng.session.sched.running[r1].slot
+    assert eng.abort(r1)
+    assert eng.session.allocator.free_pages == free0
+    assert eng.session.free_pool_entries == pool0
+    for p in eng.session.caches.pools:
+        assert (np.array(p.ids[slot1]) == -1).all()
+        assert (np.array(p.slot_of[slot1]) == -1).all()
+    assert eng.finish_reason(r1) == "abort"
+    assert 3 <= eng.output(r1).n_generated < 20     # cut mid-generation
+
+    # --- recycled slot replays bit-identically to a fresh engine ----------
+    r2 = eng.submit(prompt_b, SamplingParams(max_tokens=6))
+    for _ in range(60):
+        if eng.is_finished(r2):
+            break
+        eng.step()
+    fresh = EssEngine(params, cfg, num_slots=2, max_seq=32,
+                      mtp_depth=mtp_depth, prefill_chunk=4)
+    [o_fresh] = fresh.generate([prompt_b], SamplingParams(max_tokens=6),
+                               max_rounds=60)
+    assert eng.output(r2).tokens == o_fresh.tokens
+    assert eng.output(r2).finish_reason == "length"
+
+
+# ---------------------------------------------------------------------------
+# Stop-token truncation inside a speculative round
+# ---------------------------------------------------------------------------
+
+def _permutation_params(cfg):
+    """Zeroed params with a permutation head: every layer contributes
+    exactly zero (zero projection weights), so the backbone maps token
+    ``t`` to ``argmax(rmsnorm(E_t) @ U^T) = perm[t]`` — and the MTP
+    draft modules (``proj`` = select-the-embedding-half) compute the
+    *identical* function, so acceptance is deterministically full and
+    the stream is a non-constant permutation walk.  This makes an MTP
+    verify round provably draft past a chosen stop position."""
+    base = jax.tree.map(jnp.zeros_like,
+                        init_params(jax.random.key(0), T.model_def(cfg)))
+    V, d = cfg.vocab_size, cfg.d_model
+    emb = jax.random.normal(jax.random.key(1), (V, d), cfg.param_dtype)
+    perm = jax.random.permutation(jax.random.key(2), V)
+    base["embed"] = emb
+    base["unembed"] = emb[jnp.argsort(perm)]
+    proj = jnp.zeros((cfg.mtp_depth, 2 * d, d), cfg.param_dtype)
+    proj = proj.at[:, d:, :].set(jnp.eye(d, dtype=cfg.param_dtype))
+    base["mtp"]["proj"] = proj
+    return base
+
+
+def _run_with_release_snapshot(params, cfg, req, *, mtp_depth, snap):
+    """Drive one request to completion, capturing the slot's lens and
+    resident pool-id sets at the instant of release (post-truncation,
+    pre-reset)."""
+    s = E.ServeSession(params, cfg, num_slots=1, max_seq=48,
+                       mtp_depth=mtp_depth)
+    inner = s.sched.release_hook
+
+    def capture(slot):
+        snap["lens"] = int(np.array(s.caches.lens)[slot])
+        snap["ids"] = [np.sort(ids[ids >= 0])
+                       for ids in (np.array(p.ids[slot])
+                                   for p in s.caches.pools)]
+        inner(slot)
+
+    s.sched.release_hook = capture
+    r = s.run([req], max_rounds=60)
+    return s, r
+
+
+def test_stop_token_truncates_within_spec_round(cfg):
+    """Acceptance criterion: a stop-token request's output ends exactly
+    at the stop position, and its slot's lens/pool state (snapshotted at
+    release) equals a Q=1 run that never drafted past the stop."""
+    params = _permutation_params(cfg)
+    sb, rb = _run_with_release_snapshot(
+        params, cfg, Request(rid=0, prompt_len=10, max_new_tokens=9),
+        mtp_depth=2, snap={})
+    stream = sb.outputs[0]
+    assert rb.accept_rate == 1.0                 # construction holds
+    assert len(set(stream)) == len(stream)       # permutation walk
+    # stream[0] = prefill token; the first verify round emits [1], [2],
+    # [3] — stop at index 2 cuts that round after 2 of its 3 tokens
+    stop = stream[2]
+
+    snap_spec, snap_q1 = {}, {}
+    sA, _ = _run_with_release_snapshot(
+        params, cfg, Request(rid=0, prompt_len=10, max_new_tokens=9,
+                             stop_token_ids=(stop,)),
+        mtp_depth=2, snap=snap_spec)
+    assert sA.outputs[0] == stream[:3]           # ends AT the stop
+    assert sA.sched.finished[0].finish_reason == "stop"
+    assert sA._terminal == {0: "stop"}
+    term = [e for e in sA.token_events if e.is_terminal]
+    assert len(term) == 1 and term[0].index == 3
+
+    sB, _ = _run_with_release_snapshot(
+        params, cfg, Request(rid=0, prompt_len=10, max_new_tokens=9,
+                             stop_token_ids=(stop,)),
+        mtp_depth=0, snap=snap_q1)
+    assert sB.outputs[0] == stream[:3]
+    # lens/pool state at release: the truncated speculative slot ==
+    # the Q=1 slot that never drafted past the stop
+    assert snap_spec["lens"] == snap_q1["lens"] == 10 + 2
+    for a, b in zip(snap_spec["ids"], snap_q1["ids"]):
+        np.testing.assert_array_equal(a, b)
+        assert (a < snap_spec["lens"]).all()     # nothing beyond the stop
+
+    # EOS on the prefill's first token finishes at promotion
+    sE = E.ServeSession(params, cfg, num_slots=1, max_seq=48, mtp_depth=2)
+    rE = sE.run([Request(rid=0, prompt_len=10, max_new_tokens=9,
+                         eos_token_ids=(stream[0],))], max_rounds=20)
+    assert sE.outputs[0] == stream[:1]
+    assert sE._terminal == {0: "stop"}
+    assert rE.rounds == 0                        # no decode round needed
+
+
+# ---------------------------------------------------------------------------
+# Rejected + budget terminal records
+# ---------------------------------------------------------------------------
+
+def test_rejected_requests_surface_with_terminal_events(cfg, params):
+    """Oversize (vs max_seq) and page-unservable requests end with a
+    ``rejected`` terminal event and count in ServeReport.rejected —
+    instead of silently vanishing from the scheduler."""
+    eng = EssEngine(params, cfg, num_slots=1, max_seq=32, num_host_pages=1)
+    # needs 2 pages (28 rows at 16 rows/page) > 1-page pool: submit-time
+    r_pages = eng.submit(20, SamplingParams(max_tokens=8))
+    assert eng.is_finished(r_pages)
+    assert eng.finish_reason(r_pages) == "rejected"
+    # prompt + max_tokens > max_seq: rejected at admission
+    r_big = eng.submit(30, SamplingParams(max_tokens=8))
+    r_ok = eng.submit(8, SamplingParams(max_tokens=2))
+    for _ in range(40):
+        if not eng.has_work():
+            break
+        eng.step()
+    assert eng.finish_reason(r_big) == "rejected"
+    assert eng.finish_reason(r_ok) == "length"
+    assert eng.session.report.rejected == 2
+    assert eng.output(r_big).tokens == []
+    terms = [e for e in eng.session.token_events if e.is_terminal]
+    assert sorted(e.rid for e in terms) == sorted([r_pages, r_big, r_ok])
+
+
+def test_run_budget_exhaustion_emits_budget_terminals(cfg, params):
+    """``ServeSession.run`` hitting max_rounds no longer strands
+    unfinished requests: each one (running *and* still queued) gets a
+    ``budget`` terminal, resources return, and every submitted rid ends
+    with exactly one terminal event."""
+    ses = E.ServeSession(params, cfg, num_slots=1, max_seq=32)
+    reqs = [Request(rid=0, prompt_len=8, max_new_tokens=12),
+            Request(rid=1, prompt_len=8, max_new_tokens=12)]  # stays queued
+    rep = ses.run(reqs, max_rounds=4)
+    assert ses._terminal == {0: "budget", 1: "budget"}
+    assert rep.finish_reasons == {0: "budget", 1: "budget"}
+    assert rep.aborted == 2
+    assert 0 < len(ses.outputs[0]) < 12            # partial stream kept
+    terms = [e for e in ses.token_events if e.is_terminal]
+    assert sorted(e.rid for e in terms) == [0, 1]
+    assert ses.allocator.free_pages == ses.num_pages   # pages reclaimed
+    assert not ses.sched.running and not ses.sched.queue
+
+
+# ---------------------------------------------------------------------------
+# Priority-aware admission (host-only)
+# ---------------------------------------------------------------------------
+
+def _finish_running(s: Scheduler, slot: int) -> None:
+    s.promote(slot)
+    done = s.record_tokens({slot: 1})
+    assert done
+
+
+def test_priority_admission_fifo_within_class():
+    """Higher priority admitted first; stable FIFO within a class; a
+    preempted request re-enters ahead of its class (deterministic in
+    (priority, submission order))."""
+    s = Scheduler(num_slots=1, max_seq=64)
+    s.submit(Request(rid=0, prompt_len=4, max_new_tokens=2))
+    assert [r.rid for _, r in s.admit()] == [0]
+    s.submit(Request(rid=1, prompt_len=4, max_new_tokens=2))
+    s.submit(Request(rid=2, prompt_len=4, max_new_tokens=2, priority=5))
+    s.submit(Request(rid=3, prompt_len=4, max_new_tokens=2, priority=5))
+    _finish_running(s, 0)
+    assert [r.rid for _, r in s.admit()] == [2]   # highest class first
+    _finish_running(s, 0)
+    assert [r.rid for _, r in s.admit()] == [3]   # FIFO within the class
+    # a preempted request jumps its class's line
+    s.submit(Request(rid=4, prompt_len=4, max_new_tokens=2))
+    s.preempt(0)                                  # rid=3 back to the queue
+    assert [r.rid for _, r in s.admit()] == [3]
+    _finish_running(s, 0)
+    assert [r.rid for _, r in s.admit()] == [1]   # class 0, FIFO: 1 then 4
+    _finish_running(s, 0)
+    assert [r.rid for _, r in s.admit()] == [4]
+
+
+def test_scheduler_abort_queued_and_running():
+    s = Scheduler(num_slots=1, max_seq=64)
+    s.submit(Request(rid=0, prompt_len=4, max_new_tokens=4))
+    s.submit(Request(rid=1, prompt_len=4, max_new_tokens=4))
+    s.admit()
+    assert s.abort(1)                             # queued: just removed
+    assert s.abort(0)                             # running: slot released
+    assert not s.abort(7)                         # unknown rid
+    assert sorted(r.rid for r in s.finished) == [0, 1]
+    assert all(r.finish_reason == "abort" for r in s.finished)
+    assert not s.running and not s.queue
+    assert not s.slots[0].active
+
+
+# ---------------------------------------------------------------------------
+# stream() generator + metrics()
+# ---------------------------------------------------------------------------
+
+def test_stream_generator_and_latency_metrics(cfg, params):
+    eng = EssEngine(params, cfg, num_slots=2, max_seq=32)
+    r0 = eng.submit(8, SamplingParams(max_tokens=4))
+    r1 = eng.submit(8, SamplingParams(max_tokens=3))
+    evs = list(eng.stream(r0))
+    assert [e.token for e in evs[:-1]] == eng.output(r0).tokens
+    assert [e.index for e in evs] == [0, 1, 2, 3, 4]
+    assert evs[-1].is_terminal and evs[-1].finish_reason == "length"
+    assert all(a.t <= b.t for a, b in zip(evs, evs[1:]))
+    # a consumed stream yields nothing further
+    assert list(eng.stream(r0)) == []
+    for _ in range(20):
+        if not eng.has_work():
+            break
+        eng.step()
+    m = eng.metrics()
+    assert m["finish_reasons"] == {r0: "length", r1: "length"}
+    assert m["ttft_p50_s"] > 0 and m["ttft_p95_s"] >= m["ttft_p50_s"]
+    assert m["itl_p50_s"] >= 0 and m["n_token_events"] == 7
+    # latency_stats is pure over the event log
+    again = latency_stats(eng.session.token_events,
+                          eng.session._submit_time)
+    assert again == {k: m[k] for k in again}
