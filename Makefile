@@ -1,6 +1,6 @@
 # Tier-1 verify: the exact command from ROADMAP.md.
 .PHONY: test test-full bench-serve bench-smoke example-serve \
-	example-stream-abort examples-smoke
+	example-stream-abort examples-smoke lint-ess lint-ess-fast
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -25,3 +25,12 @@ example-stream-abort:
 
 # CI examples smoke job: both demos end to end
 examples-smoke: example-serve example-stream-abort
+
+# esslint: AST rules + jaxpr contract audit vs the checked-in baseline
+# (see ANALYSIS.md).  CI runs the full check; the fast variant is the
+# AST layer only (milliseconds) for pre-commit use.
+lint-ess:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m repro.analysis --check
+
+lint-ess-fast:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m repro.analysis --check --skip-audit

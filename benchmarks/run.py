@@ -208,9 +208,10 @@ def bench_lru_pool_ops() -> None:
     def step(pool, ids):
         # dedup=False pins the historical single-query lookup cost (the
         # Q>1 dedup path would add an O(K^2) compare to this row)
-        pool, lk, stats = LP.lookup(pool, ids, ids >= 0, M, dedup=False)
+        pool, lk, stats = LP.lookup(pool, ids, ids >= 0, M, slot_mask=None,
+                                    dedup=False)
         rows = jnp.zeros((B, M, 576), jnp.bfloat16)
-        pool = LP.admit(pool, lk.miss_ids, rows)
+        pool = LP.admit(pool, lk.miss_ids, rows, slot_mask=None)
         return LP.tick(pool), stats
 
     us = _timeit(step, pool, ids, n=3, warmup=1)

@@ -1,0 +1,17 @@
+"""esslint — static contract checking for the ESS serve loop.
+
+Two layers (see ANALYSIS.md for the rule catalog):
+
+* :mod:`repro.analysis.lint` — AST rules ESS001–ESS004 compiled from the
+  repo's bug history (slot-mask gating, hidden host syncs, traced-value
+  branching, undeclared donation).  Pure stdlib; runs in milliseconds.
+* :mod:`repro.analysis.jaxpr_audit` — lowers every StepProgram variant
+  and audits the donation contract, the one-fetch contract, the retrace
+  budget and dtype drift against :mod:`repro.analysis.contracts`.
+
+CLI: ``python -m repro.analysis [--check]`` (see ``--help``).
+"""
+
+from repro.analysis.findings import Finding, load_baseline, write_baseline
+
+__all__ = ["Finding", "load_baseline", "write_baseline"]

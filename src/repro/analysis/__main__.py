@@ -1,0 +1,96 @@
+"""``python -m repro.analysis`` — run esslint (AST rules + jaxpr audit)
+and compare the findings against the checked-in baseline.
+
+Exit status: 0 when no findings outside the baseline, 1 when any new
+finding (or, with ``--strict-stale``, any stale baseline entry), 2 on
+usage errors.  CI runs ``python -m repro.analysis --check``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from repro.analysis.findings import (findings_to_json, load_baseline,
+                                     split_against_baseline, write_baseline)
+
+
+def _default_root() -> pathlib.Path:
+    # src/repro/analysis/__main__.py -> repo root
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="esslint: static contract checks for the ESS serve "
+                    "loop (see ANALYSIS.md)")
+    p.add_argument("--check", action="store_true",
+                   help="alias for the default mode (explicit in CI)")
+    p.add_argument("--update-baseline", action="store_true",
+                   help="rewrite the baseline to the current findings")
+    p.add_argument("--json", metavar="PATH",
+                   help="also write all findings as JSON")
+    p.add_argument("--skip-audit", action="store_true",
+                   help="AST lint only (fast; skips jaxpr lowering)")
+    p.add_argument("--skip-workload", action="store_true",
+                   help="skip the session-driving audits (ESS102/ESS103); "
+                        "keep the structural lowering audits")
+    p.add_argument("--skip-lint", action="store_true",
+                   help="jaxpr audit only")
+    p.add_argument("--root", default=None,
+                   help="repo root (default: inferred from the package)")
+    p.add_argument("--baseline", default=None,
+                   help="baseline path (default: <root>/esslint-baseline.json)")
+    p.add_argument("--strict-stale", action="store_true",
+                   help="also fail on stale baseline entries")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.skip_audit and args.skip_lint:
+        print("nothing to do: both layers skipped", file=sys.stderr)
+        return 2
+    root = pathlib.Path(args.root) if args.root else _default_root()
+    baseline_path = (pathlib.Path(args.baseline) if args.baseline
+                     else root / "esslint-baseline.json")
+
+    findings = []
+    if not args.skip_lint:
+        from repro.analysis.lint import lint_tree
+        findings += lint_tree(root)
+    if not args.skip_audit:
+        from repro.analysis import jaxpr_audit
+        findings += jaxpr_audit.run_all(workload=not args.skip_workload)
+
+    if args.json:
+        pathlib.Path(args.json).write_text(findings_to_json(findings))
+
+    if args.update_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"baseline updated: {len(findings)} finding(s) -> "
+              f"{baseline_path}")
+        return 0
+
+    baseline = load_baseline(baseline_path)
+    new, known, stale = split_against_baseline(findings, baseline)
+    for f in sorted(new, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.format())
+    if known:
+        print(f"[{len(known)} baselined finding(s) suppressed]")
+    if stale:
+        print(f"[{len(stale)} stale baseline entr(ies) — fixed or moved; "
+              f"prune with --update-baseline]")
+    if new:
+        print(f"esslint: {len(new)} new finding(s)")
+        return 1
+    if stale and args.strict_stale:
+        return 1
+    print("esslint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,107 @@
+"""The serve loop's statically checked contracts — single source of truth.
+
+Everything the two analysis layers enforce is *declared* here so the
+checks, the docs (ANALYSIS.md) and the tests reference one table instead
+of each hard-coding its own copy.
+"""
+
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# One-fetch contract (jaxpr/runtime audit + ESS002)
+# ---------------------------------------------------------------------------
+
+# Maximum host fetches (jax.device_get) per serve round.  A round's only
+# fetch is decode_round's packed (tokens, n_emit[, t0...]) struct; prefill
+# chunks, admissions and scheduler bookkeeping perform none.
+FETCH_BUDGET_PER_ROUND = 1
+
+# The allowlisted fetch sites: "<module path>::<qualname>" of functions
+# that may call jax.device_get (ESS002).  Everything else needs an inline
+# `# esslint: disable=ESS002`.
+FETCH_SITES = {
+    "repro/serving/engine.py::ServeSession.decode_round",
+}
+
+# ---------------------------------------------------------------------------
+# Retrace budget (jaxpr audit)
+# ---------------------------------------------------------------------------
+
+# Round kinds traced by the StepPrograms; every (kind, signature) pair
+# must trace exactly once per process however the workload interleaves
+# admissions, preemptions, ragged chunks and MTP on/off.
+ROUND_KINDS = ("decode", "spec", "prefill")
+
+# Prefill shape buckets are powers of two up to prefill_chunk: at most
+# log2(chunk)+1 buckets, times two trace keys (mid/last variants).
+def max_prefill_trace_keys(prefill_chunk: int) -> int:
+    n = 1
+    b = 1
+    while b < prefill_chunk:
+        b <<= 1
+        n += 1
+    return 2 * n
+
+
+# ---------------------------------------------------------------------------
+# Donation contract (jaxpr audit)
+# ---------------------------------------------------------------------------
+
+# Every round program donates the EngineState pytree (argnum 1); lowering
+# must alias *all* of its leaves into outputs (tf.aliasing_output) and
+# emit no "donated buffers were not usable" warning.
+DONATED_ARGNUM = 1
+
+# ---------------------------------------------------------------------------
+# Dtype contract (jaxpr audit)
+# ---------------------------------------------------------------------------
+
+# Latent/indexer-key tensors stay bf16 (cfg.param_dtype) end to end: each
+# program's output state leaf dtypes equal its input leaf dtypes, and no
+# convert_element_type widens a cache-sized bf16 operand to f32.
+CACHE_DTYPE_INVARIANT = "state-out leaf dtypes == state-in leaf dtypes"
+
+# ---------------------------------------------------------------------------
+# ESS001: cache-mutating helpers require an explicit gating argument
+# ---------------------------------------------------------------------------
+
+# qualified callee -> keyword that must be passed explicitly (None is an
+# accepted *explicit* value — the rule bans relying on a default, not the
+# ungated mode itself).
+ESS001_TARGETS = {
+    "repro.core.offload.host_scatter_rows": "slot_mask",
+    "repro.core.offload.host_scatter_rows_stacked": "slot_mask",
+    "repro.core.lru_pool.lookup": "slot_mask",
+    "repro.core.lru_pool.admit": "slot_mask",
+    "repro.core.warmup.lru_warmup": "slot_mask",
+    "repro.serving.engine.ess_decode": "slot_mask",
+    "repro.serving.engine.ess_prefill_chunk": "n_valid",
+}
+
+# ---------------------------------------------------------------------------
+# ESS002 scope: serving/core/cache modules (training checkpoints etc. sync
+# legitimately and are out of scope)
+# ---------------------------------------------------------------------------
+
+ESS002_MODULE_PREFIXES = ("repro/serving/", "repro/core/", "repro/cache/")
+
+# ---------------------------------------------------------------------------
+# ESS003 scope: traced round bodies (modules fully traced into the
+# StepPrograms, plus the two traced entry points in engine.py)
+# ---------------------------------------------------------------------------
+
+# module relpath -> None (whole module traced) | set of function names
+ESS003_TRACED_SCOPES = {
+    "repro/core/lru_pool.py": None,
+    "repro/core/overlap.py": None,
+    "repro/core/warmup.py": None,
+    "repro/serving/mtp.py": None,
+    "repro/serving/tbo.py": None,
+    "repro/serving/sampling.py": None,
+    "repro/serving/step.py": None,
+    "repro/serving/engine.py": {"ess_decode", "ess_prefill_chunk"},
+}
+
+# ESS003's host-side escape hatch: check_consistent is explicitly a
+# host/debug helper inside an otherwise fully traced module
+ESS003_HOST_FUNCTIONS = {"check_consistent"}

@@ -1,0 +1,414 @@
+"""esslint layer 2 — lower every StepProgram and audit the serve
+contracts (:mod:`repro.analysis.contracts`).
+
+Four audits, each a thin driver over a pure checker (the checkers take
+plain data so tests can exercise failure paths without lowering):
+
+* **ESS101 donation** — every round program donates the EngineState
+  (argnum 1); lowering must alias *all* of its leaves into outputs
+  (``tf.aliasing_output`` in the StableHLO) and emit no "donated
+  buffers ... not usable" warning.  A missed alias doubles peak cache
+  memory silently.
+* **ESS102 one-fetch** — driving a real session over a mixed workload,
+  every serve round performs at most :data:`FETCH_BUDGET_PER_ROUND`
+  ``jax.device_get`` calls and the total equals ``report.rounds``.
+* **ESS103 retrace** — tracing a mixed workload (admissions,
+  preemption, ragged chunks, MTP on/off) twice yields exactly one trace
+  per ``(round kind, shape bucket)``; a second trace is a silent
+  recompile in production.
+* **ESS104 dtype drift** — each program's output EngineState leaf
+  dtypes equal its input leaf dtypes, and no ``convert_element_type``
+  widens a cache-tier-sized bf16 tensor to f32.
+
+Abstract lowering (ESS101/ESS104) uses ``ShapeDtypeStruct`` trees — no
+parameter memory is allocated.  The workload audits (ESS102/ESS103)
+initialize the smoke model.  Every audit draws a fresh ``max_seq`` from
+a process-wide counter so the lru-cached ``get_programs`` and the
+process-wide ``TRACE_COUNTS`` start cold for its shape family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import warnings
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import contracts as C
+from repro.analysis.findings import Finding
+
+SMOKE_CONFIG = "deepseek-v32-exp-ess-smoke"
+
+# each audit invocation claims a fresh shape family (max_seq) so
+# lru-cached programs/trace counters never alias across audits or tests
+_FRESH_SEQ = itertools.count(61)
+
+_ALIAS_ATTR = "tf.aliasing_output"
+_AUDIT_PATH = "<jaxpr>"
+
+
+def _smoke_cfg(paged: bool = True):
+    from repro.configs import get_config
+    cfg = get_config(SMOKE_CONFIG)
+    ess = dataclasses.replace(cfg.ess, max_miss_ratio=1.0,
+                              **({} if paged else {"paged_host": False}))
+    return dataclasses.replace(cfg, ess=ess, mtp_depth=2)
+
+
+def _abstract_state(cfg, num_slots: int, max_seq: int):
+    from repro.cache import latent_cache as LC
+    from repro.serving import state as ES
+
+    paged = LC.uses_paged_host(cfg)
+    num_pages = num_slots * LC.num_blocks(cfg, max_seq) if paged else None
+
+    def build():
+        caches = LC.init_ess_caches(cfg, num_slots, max_seq,
+                                    cfg.param_dtype, num_pages=num_pages,
+                                    map_slots=not paged)
+        return ES.init_engine_state(cfg, caches, num_slots)
+
+    return jax.eval_shape(build)
+
+
+def _abstract_params(cfg):
+    from repro.models import transformer as T
+    from repro.models.params import abstract_params
+    return abstract_params(T.model_def(cfg))
+
+
+@dataclasses.dataclass
+class AuditTarget:
+    kind: str                   # "decode" | "spec" | "prefill/C4last1" ...
+    fn: Callable                # donated jitted round program
+    args: tuple                 # abstract arguments (ShapeDtypeStructs)
+    state: object               # abstract EngineState (args[1])
+
+
+def build_targets(cfg=None, *, num_slots: int = 2,
+                  max_seq: Optional[int] = None, mtp_depth: int = 2,
+                  prefill_chunk: int = 8) -> list[AuditTarget]:
+    """Every round-program variant of one shape family, with abstract
+    arguments ready for ``.lower()`` / ``jax.eval_shape``."""
+    from repro.serving import step as SP
+    cfg = cfg if cfg is not None else _smoke_cfg()
+    max_seq = max_seq if max_seq is not None else next(_FRESH_SEQ)
+    params = _abstract_params(cfg)
+    state = _abstract_state(cfg, num_slots, max_seq)
+    programs = SP.get_programs(cfg, num_slots, max_seq, False, False,
+                               mtp_depth)
+    i32 = lambda shape=(): jax.ShapeDtypeStruct(shape, jnp.int32)  # noqa: E731
+    targets = [AuditTarget("decode", programs.decode(True),
+                           (params, state), state)]
+    if mtp_depth > 0:
+        targets.append(AuditTarget("spec", programs.spec(True),
+                                   (params, state), state))
+    chunk = 1
+    chunks = []
+    while chunk < prefill_chunk:
+        chunks.append(chunk)
+        chunk <<= 1
+    chunks.append(prefill_chunk)
+    for c in chunks:
+        for last in (False, True):
+            targets.append(AuditTarget(
+                f"prefill/C{c}last{int(last)}",
+                programs.prefill(c, last, True),
+                (params, state, jax.ShapeDtypeStruct((1, c), jnp.int32),
+                 i32(), i32()), state))
+    return targets
+
+
+# ---------------------------------------------------------------------------
+# ESS101: donation
+# ---------------------------------------------------------------------------
+
+def check_donation(kind: str, n_aliased: int, n_state_leaves: int,
+                   warning_msgs: list[str]) -> list[Finding]:
+    """Pure checker: aliasing attr count vs donated leaf count + any
+    donation warnings captured during lowering."""
+    out = []
+    bad = [m for m in warning_msgs if "donat" in m.lower()]
+    if bad:
+        out.append(Finding(
+            rule="ESS101", path=_AUDIT_PATH, line=0, scope=kind,
+            message=f"unusable donation while lowering {kind}: {bad[0]}"))
+    if n_aliased < n_state_leaves:
+        out.append(Finding(
+            rule="ESS101", path=_AUDIT_PATH, line=0, scope=kind,
+            message=f"{kind}: only {n_aliased}/{n_state_leaves} donated "
+                    f"EngineState leaves aliased into outputs — the rest "
+                    f"are silently copied (peak memory doubles)"))
+    return out
+
+
+def audit_donation(cfg=None, *, targets=None, **kw) -> list[Finding]:
+    findings = []
+    for t in (targets if targets is not None
+              else build_targets(cfg, **kw)):
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            text = t.fn.lower(*t.args).as_text()
+        findings += check_donation(
+            t.kind, text.count(_ALIAS_ATTR),
+            len(jax.tree.leaves(t.state)),
+            [str(x.message) for x in w])
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# ESS102: one fetch per round
+# ---------------------------------------------------------------------------
+
+def check_fetch_counts(per_round: list[int], rounds: int,
+                       budget: int = C.FETCH_BUDGET_PER_ROUND
+                       ) -> list[Finding]:
+    """Pure checker over per-serve-round device_get counts."""
+    out = []
+    for i, n in enumerate(per_round):
+        if n > budget:
+            out.append(Finding(
+                rule="ESS102", path=_AUDIT_PATH, line=0,
+                scope=f"round[{i}]",
+                message=f"{n} device->host fetches in one serve round "
+                        f"(budget {budget})"))
+    total = sum(per_round)
+    if total != rounds:
+        out.append(Finding(
+            rule="ESS102", path=_AUDIT_PATH, line=0, scope="total",
+            message=f"{total} fetches over {rounds} decode rounds — the "
+                    f"packed RoundOut fetch must be the only transfer "
+                    f"(expected exactly {rounds})"))
+    return out
+
+
+def _mixed_requests():
+    from repro.serving.scheduler import Request
+    return [Request(rid=0, prompt_len=11, max_new_tokens=5),
+            Request(rid=1, prompt_len=8, max_new_tokens=4),
+            Request(rid=2, prompt_len=9, max_new_tokens=3,
+                    temperature=0.9, seed=5),
+            Request(rid=3, prompt_len=10, max_new_tokens=4)]
+
+
+def audit_fetch_counts(cfg=None, *, session_cls=None, mtp_depth: int = 0,
+                       max_seq: Optional[int] = None) -> list[Finding]:
+    """Drive a real mixed workload counting ``jax.device_get`` per serve
+    round.  ``session_cls`` is injectable so tests can demonstrate the
+    audit catching a session that sneaks extra fetches."""
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.serving import engine as E
+    cfg = cfg if cfg is not None else _smoke_cfg()
+    session_cls = session_cls or E.ServeSession
+    max_seq = max_seq if max_seq is not None else next(_FRESH_SEQ)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    session = session_cls(params, cfg, num_slots=2, max_seq=max_seq,
+                          prefill_chunk=8, compiled=True,
+                          mtp_depth=mtp_depth)
+    for r in _mixed_requests():
+        session.submit(r)
+    counts = []
+    real = jax.device_get
+    calls = [0]
+
+    def counting(*a, **k):
+        calls[0] += 1
+        return real(*a, **k)
+
+    jax.device_get = counting
+    try:
+        guard = 100
+        while (session.sched.running or session.sched.queue) and guard:
+            before = calls[0]
+            session.step_round()
+            counts.append(calls[0] - before)
+            guard -= 1
+    finally:
+        jax.device_get = real
+    if not guard:
+        return [Finding(rule="ESS102", path=_AUDIT_PATH, line=0,
+                        scope="driver",
+                        message="workload did not finish in 100 rounds")]
+    return check_fetch_counts(counts, session.report.rounds)
+
+
+# ---------------------------------------------------------------------------
+# ESS103: retrace budget
+# ---------------------------------------------------------------------------
+
+def check_retrace(deltas: dict[str, int]) -> list[Finding]:
+    """Pure checker over per-program trace-count deltas."""
+    out = []
+    if not deltas:
+        return [Finding(rule="ESS103", path=_AUDIT_PATH, line=0,
+                        scope="driver",
+                        message="no programs traced — audit drove nothing")]
+    for key, n in sorted(deltas.items()):
+        if n != 1:
+            out.append(Finding(
+                rule="ESS103", path=_AUDIT_PATH, line=0, scope=key,
+                message=f"traced {n}x (expected once): a retrace per "
+                        f"round is a silent recompile in production"))
+    kinds = {k.split("/")[0] for k in deltas}
+    missing = set(C.ROUND_KINDS) - kinds
+    if missing:
+        out.append(Finding(
+            rule="ESS103", path=_AUDIT_PATH, line=0, scope="coverage",
+            message=f"round kinds never traced by the audit workload: "
+                    f"{sorted(missing)}"))
+    return out
+
+
+def audit_retrace(cfg=None, *, max_seq: Optional[int] = None
+                  ) -> list[Finding]:
+    """Trace a mixed workload twice (admissions, a preemption, ragged
+    final chunks, MTP off/on) in a fresh shape family; every program
+    must trace exactly once."""
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.serving import engine as E
+    from repro.serving import step as SP
+    cfg = cfg if cfg is not None else _smoke_cfg()
+    max_seq = max_seq if max_seq is not None else next(_FRESH_SEQ)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    sig = f"s{max_seq}tbo"
+    before = {k: v for k, v in SP.TRACE_COUNTS.items() if sig in k}
+
+    def drive(mtp_depth):
+        s = E.ServeSession(params, cfg, num_slots=2, max_seq=max_seq,
+                           prefill_chunk=8, compiled=True,
+                           mtp_depth=mtp_depth)
+        for r in _mixed_requests():
+            s.submit(dataclasses.replace(r))
+        s.step_round(); s.step_round(); s.step_round()
+        s.preempt(0)
+        s.run(max_rounds=100)
+
+    drive(0)
+    drive(2)          # same shape family, spec program added
+    drive(0)          # third session: pure program-cache hits
+    deltas = {k: v - before.get(k, 0)
+              for k, v in SP.TRACE_COUNTS.items()
+              if sig in k and v != before.get(k, 0)}
+    return check_retrace(deltas)
+
+
+# ---------------------------------------------------------------------------
+# ESS104: dtype drift
+# ---------------------------------------------------------------------------
+
+def check_state_dtypes(kind: str, in_dtypes: list, out_dtypes: list
+                       ) -> list[Finding]:
+    """Pure checker: per-leaf dtype round-trip through a program."""
+    out = []
+    if len(in_dtypes) != len(out_dtypes):
+        return [Finding(
+            rule="ESS104", path=_AUDIT_PATH, line=0, scope=kind,
+            message=f"{kind}: state leaf count changed "
+                    f"{len(in_dtypes)} -> {len(out_dtypes)}")]
+    for i, (a, b) in enumerate(zip(in_dtypes, out_dtypes)):
+        if a != b:
+            out.append(Finding(
+                rule="ESS104", path=_AUDIT_PATH, line=0, scope=kind,
+                message=f"{kind}: state leaf[{i}] dtype drifts "
+                        f"{a} -> {b} across the round"))
+    return out
+
+
+def _jaxpr_subfuns(params):
+    for v in params.values():
+        if isinstance(v, jax.core.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jax.core.Jaxpr):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                if isinstance(x, jax.core.ClosedJaxpr):
+                    yield x.jaxpr
+                elif isinstance(x, jax.core.Jaxpr):
+                    yield x
+
+
+def _iter_eqns(jaxpr):
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        for eqn in j.eqns:
+            yield eqn
+            stack.extend(_jaxpr_subfuns(eqn.params))
+
+
+def find_big_upcasts(closed_jaxpr, threshold: int) -> list[tuple]:
+    """(size, src_dtype, dst_dtype) for every convert_element_type that
+    widens a bf16 tensor of >= ``threshold`` elements to f32."""
+    hits = []
+    for eqn in _iter_eqns(closed_jaxpr.jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        (src,), (dst,) = eqn.invars, eqn.outvars
+        saval, daval = src.aval, dst.aval
+        if (getattr(saval, "dtype", None) == jnp.bfloat16
+                and daval.dtype == jnp.float32
+                and saval.size >= threshold):
+            hits.append((int(saval.size), str(saval.dtype),
+                         str(daval.dtype)))
+    return hits
+
+
+def audit_dtypes(cfg=None, *, targets=None, **kw) -> list[Finding]:
+    findings = []
+    for t in (targets if targets is not None
+              else build_targets(cfg, **kw)):
+        in_leaves = jax.tree.leaves(t.state)
+        out_shapes = jax.eval_shape(t.fn, *t.args)
+        out_state = out_shapes[0]       # every round fn returns (state, ...)
+        findings += check_state_dtypes(
+            t.kind, [str(x.dtype) for x in in_leaves],
+            [str(x.dtype) for x in jax.tree.leaves(out_state)])
+        # cache-tier threshold: the largest bf16 state leaf (the host
+        # latent tier).  Upcasting a tensor that big is dtype drift;
+        # per-step f32 math on small tiles is fine.
+        bf16_sizes = [x.size for x in in_leaves
+                      if x.dtype == jnp.bfloat16]
+        if not bf16_sizes:
+            continue
+        threshold = max(bf16_sizes)
+        jaxpr = jax.make_jaxpr(t.fn)(*t.args)
+        for size, sd, dd in find_big_upcasts(jaxpr, threshold):
+            findings.append(Finding(
+                rule="ESS104", path=_AUDIT_PATH, line=0, scope=t.kind,
+                message=f"{t.kind}: convert_element_type {sd}->{dd} on a "
+                        f"cache-tier-sized tensor ({size} elements) — "
+                        f"silent 2x memory/bandwidth"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# the full audit
+# ---------------------------------------------------------------------------
+
+def run_all(*, paged: bool = True, dense: bool = True,
+            workload: bool = True) -> list[Finding]:
+    """Lower + audit both host tiers; ``workload=False`` skips the
+    session-driving audits (ESS102/ESS103) for a fast structural pass."""
+    findings = []
+    tiers = ([("paged", _smoke_cfg(paged=True))] if paged else []) + \
+            ([("dense", _smoke_cfg(paged=False))] if dense else [])
+    for name, cfg in tiers:
+        targets = build_targets(cfg)
+        for f in (audit_donation(targets=targets)
+                  + audit_dtypes(targets=targets)):
+            findings.append(dataclasses.replace(
+                f, scope=f"{name}/{f.scope}"))
+    if workload:
+        cfg = _smoke_cfg()
+        for f in (audit_fetch_counts(cfg)
+                  + audit_fetch_counts(cfg, mtp_depth=2)
+                  + audit_retrace(cfg)):
+            findings.append(dataclasses.replace(
+                f, scope=f"paged/{f.scope}"))
+    return findings

@@ -1,0 +1,431 @@
+"""esslint layer 1 — AST rules compiled from the serve loop's bug history.
+
+Rules (catalog + motivation in ANALYSIS.md):
+
+* **ESS001** — cache-mutating helpers must be called with their gating
+  argument (``slot_mask=`` / ``n_valid=``) spelled explicitly, even when
+  the intended value is ``None``.  Relying on a default is how the
+  page-0 aliasing bug shipped: an ungated scatter wrote retired slots'
+  rows over live ones.
+* **ESS002** — no hidden host syncs in serving/core/cache code:
+  ``jax.device_get``, ``.item()``, and ``int()/float()/bool()`` applied
+  to a computed (device) value all block the dispatch pipeline.  The
+  one allowlisted fetch site is ``ServeSession.decode_round``'s packed
+  fetch (the one-fetch contract).
+* **ESS003** — no Python ``if``/``while`` branching on traced arrays
+  inside traced round bodies; that's a retrace (or a
+  ``TracerBoolConversionError``) per novel value.
+* **ESS004** — ``jax.jit`` applied to a function taking the engine
+  state must declare donation; forgetting it doubles peak cache memory.
+
+Suppression: ``# esslint: disable=ESS001[,ESS002...]`` on any line the
+flagged node spans.  Pre-existing findings live in the checked-in
+baseline (see :mod:`repro.analysis.findings`).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import pathlib
+import re
+import tokenize
+from typing import Iterable, Optional
+
+from repro.analysis import contracts as C
+from repro.analysis.findings import Finding
+
+ALL_RULES = ("ESS001", "ESS002", "ESS003", "ESS004")
+
+_DISABLE_RE = re.compile(r"#\s*esslint:\s*disable=([A-Z0-9,\s]+)")
+
+_HOST_CASTS = {"int", "float", "bool"}
+
+# attribute-method calls on arrays that force a host sync / concretization
+_SYNC_METHODS = {"item", "tolist"}
+
+# builtins whose results are host scalars by construction — int() over a
+# composition of only these is host math, not a device sync
+_HOST_SAFE_CALLS = {"round", "len", "min", "max", "abs", "sum", "sorted",
+                    "divmod", "ord", "pow"}
+
+# roots whose calls produce traced arrays (after alias resolution these
+# all live under jax.*)
+_TRACED_PREFIXES = ("jax.",)
+_TRACED_ROOTS = {"jax", "jnp", "lax"}
+
+# reduction-style methods whose result in a test expression means the
+# test is data-dependent
+_TRACED_TEST_METHODS = {"any", "all", "item", "sum", "max", "min"}
+
+
+@dataclasses.dataclass
+class LintConfig:
+    """Rule scoping.  ``default_config()`` wires the repo's contracts;
+    tests use ``fixture_config()`` to force every rule onto standalone
+    snippets that live outside the ``repro`` package."""
+    ess001_targets: dict = dataclasses.field(
+        default_factory=lambda: dict(C.ESS001_TARGETS))
+    ess002_prefixes: tuple = C.ESS002_MODULE_PREFIXES
+    ess003_scopes: dict = dataclasses.field(
+        default_factory=lambda: dict(C.ESS003_TRACED_SCOPES))
+    ess003_host_functions: frozenset = frozenset(C.ESS003_HOST_FUNCTIONS)
+    fetch_sites: frozenset = frozenset(C.FETCH_SITES)
+    rules: tuple = ALL_RULES
+    # fixtures: treat the whole file as in scope for ESS002/ESS003
+    force_scope: bool = False
+
+
+def default_config() -> LintConfig:
+    return LintConfig()
+
+
+def fixture_config(**overrides) -> LintConfig:
+    cfg = LintConfig(force_scope=True)
+    for k, v in overrides.items():
+        setattr(cfg, k, v)
+    return cfg
+
+
+def _repro_relpath(relpath: str) -> str:
+    """Normalize a path so lookups match the ``repro/...`` keys used in
+    :mod:`repro.analysis.contracts` (drop leading ``src/`` etc.)."""
+    parts = pathlib.PurePosixPath(relpath.replace("\\", "/")).parts
+    if "repro" in parts:
+        parts = parts[parts.index("repro"):]
+    return "/".join(parts)
+
+
+def _module_name(relpath: str) -> str:
+    rel = _repro_relpath(relpath)
+    parts = pathlib.PurePosixPath(rel).parts
+    if parts and parts[-1].endswith(".py"):
+        parts = parts[:-1] + (parts[-1][:-3],)
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _collect_disables(source: str) -> dict[int, set[str]]:
+    out: dict[int, set[str]] = {}
+    try:
+        toks = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _DISABLE_RE.search(tok.string)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                out.setdefault(tok.start[0], set()).update(rules)
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` -> "a.b.c"; None for anything not a plain name chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+class _ModuleLinter(ast.NodeVisitor):
+    def __init__(self, tree: ast.Module, source: str, relpath: str,
+                 config: LintConfig):
+        self.cfg = config
+        self.relpath = _repro_relpath(relpath)
+        self.module = _module_name(relpath)
+        self.lines = source.splitlines()
+        self.disables = _collect_disables(source)
+        self.findings: list[Finding] = []
+        self.scope: list[str] = []            # qualname stack
+        # alias -> fully qualified name prefix
+        self.aliases: dict[str, str] = {}
+        # every def in the file, by name (for ESS004 resolution)
+        self.defs: dict[str, ast.AST] = {}
+        for n in ast.walk(tree):
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.setdefault(n.name, n)
+        for n in ast.walk(tree):
+            if isinstance(n, ast.Import):
+                for a in n.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(n, ast.ImportFrom) and n.module and n.level == 0:
+                for a in n.names:
+                    if a.name != "*":
+                        self.aliases[a.asname or a.name] = (
+                            f"{n.module}.{a.name}")
+        # local top-level defs shadow nothing imported under the same name
+        for n in tree.body:
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.aliases.setdefault(n.name, f"{self.module}.{n.name}")
+        self._tree = tree
+
+    # -- helpers ----------------------------------------------------------
+
+    def _qualname(self) -> str:
+        return ".".join(self.scope) if self.scope else "<module>"
+
+    def _resolve(self, node: ast.AST) -> Optional[str]:
+        """Fully qualified name of a call target, via import aliases."""
+        dotted = _dotted(node)
+        if dotted is None:
+            return None
+        root, _, rest = dotted.partition(".")
+        base = self.aliases.get(root, root)
+        return f"{base}.{rest}" if rest else base
+
+    def _suppressed(self, rule: str, node: ast.AST) -> bool:
+        end = getattr(node, "end_lineno", None) or node.lineno
+        return any(rule in self.disables.get(ln, ())
+                   for ln in range(node.lineno, end + 1))
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        if rule not in self.cfg.rules or self._suppressed(rule, node):
+            return
+        ln = node.lineno
+        snippet = (self.lines[ln - 1].strip()
+                   if 0 < ln <= len(self.lines) else "")
+        self.findings.append(Finding(
+            rule=rule, path=self.relpath, line=ln,
+            scope=self._qualname(), message=message, snippet=snippet))
+
+    def _in_ess002_scope(self) -> bool:
+        return self.cfg.force_scope or self.relpath.startswith(
+            self.cfg.ess002_prefixes)
+
+    def _in_ess003_scope(self) -> bool:
+        if self.scope and self.scope[-1] in self.cfg.ess003_host_functions:
+            return False
+        if self.cfg.force_scope:
+            return True
+        if self.relpath not in self.cfg.ess003_scopes:
+            return False
+        names = self.cfg.ess003_scopes[self.relpath]
+        if names is None:                       # whole module is traced
+            return True
+        return any(s in names for s in self.scope)
+
+    # -- scope tracking ---------------------------------------------------
+
+    def visit_FunctionDef(self, node):                    # noqa: N802
+        self._check_ess004_decorators(node)
+        self.scope.append(node.name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_ClassDef(self, node):                       # noqa: N802
+        self.scope.append(node.name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    # -- ESS001 / ESS002 / ESS004 (calls) --------------------------------
+
+    def visit_Call(self, node):                           # noqa: N802
+        resolved = self._resolve(node.func)
+        self._check_ess001(node, resolved)
+        self._check_ess002(node, resolved)
+        self._check_ess004_call(node, resolved)
+        self.generic_visit(node)
+
+    def _check_ess001(self, node: ast.Call, resolved: Optional[str]) -> None:
+        if resolved not in self.cfg.ess001_targets:
+            return
+        required = self.cfg.ess001_targets[resolved]
+        if any(kw.arg is None for kw in node.keywords):   # **kwargs: opaque
+            return
+        if any(kw.arg == required for kw in node.keywords):
+            return
+        self._emit("ESS001", node,
+                   f"call to {resolved} without explicit {required}= "
+                   f"(pass {required}=None to assert the ungated mode "
+                   f"is intended)")
+
+    def _check_ess002(self, node: ast.Call, resolved: Optional[str]) -> None:
+        if not self._in_ess002_scope():
+            return
+        site = f"{self.relpath}::{self._qualname()}"
+        if resolved == "jax.device_get":
+            if site not in self.cfg.fetch_sites:
+                self._emit("ESS002", node,
+                           "jax.device_get outside the allowlisted fetch "
+                           "site breaks the one-fetch contract")
+            return
+        fn = node.func
+        if (isinstance(fn, ast.Attribute) and fn.attr in _SYNC_METHODS
+                and not node.args and not node.keywords):
+            self._emit("ESS002", node,
+                       f".{fn.attr}() forces a device->host sync")
+            return
+        # int(f(x)) / float(model(...)): casting a computed value syncs.
+        # Plain int(x[i]) over an already-fetched array is fine, as is
+        # host math built only from _HOST_SAFE_CALLS (round/len/max...).
+        if (isinstance(fn, ast.Name) and fn.id in _HOST_CASTS
+                and fn.id not in self.aliases
+                and len(node.args) == 1 and not node.keywords):
+            inner = [sub for sub in ast.walk(node.args[0])
+                     if isinstance(sub, ast.Call)]
+            host_safe = all(
+                isinstance(c.func, ast.Name)
+                and c.func.id in _HOST_SAFE_CALLS
+                and c.func.id not in self.aliases for c in inner)
+            if not inner or host_safe:
+                return
+            self._emit("ESS002", node,
+                       f"{fn.id}() on a computed value is an implicit "
+                       f"device->host sync; fetch via the round's packed "
+                       f"device_get instead")
+
+    # -- ESS003 (traced-value branching) ---------------------------------
+
+    def _traced_marker(self, expr: ast.AST) -> Optional[str]:
+        for sub in ast.walk(expr):
+            if not isinstance(sub, ast.Call):
+                continue
+            resolved = self._resolve(sub.func)
+            if resolved and (resolved.startswith(_TRACED_PREFIXES)
+                             or resolved.split(".")[0] in _TRACED_ROOTS):
+                return resolved
+            if (isinstance(sub.func, ast.Attribute)
+                    and sub.func.attr in _TRACED_TEST_METHODS):
+                return f".{sub.func.attr}()"
+        return None
+
+    def _check_ess003(self, node: ast.AST, test: ast.AST, kind: str) -> None:
+        if not self._in_ess003_scope():
+            return
+        marker = self._traced_marker(test)
+        if marker is not None:
+            self._emit("ESS003", test,
+                       f"Python {kind} on a traced value ({marker}) "
+                       f"inside a traced round body — use jnp.where / "
+                       f"lax.cond")
+
+    def visit_If(self, node):                             # noqa: N802
+        self._check_ess003(node, node.test, "if-branch")
+        self.generic_visit(node)
+
+    def visit_While(self, node):                          # noqa: N802
+        self._check_ess003(node, node.test, "while-loop")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node):                          # noqa: N802
+        self._check_ess003(node, node.test, "conditional expression")
+        self.generic_visit(node)
+
+    # -- ESS004 (undeclared donation) ------------------------------------
+
+    def _takes_engine_state(self, fn_node: ast.AST) -> bool:
+        if isinstance(fn_node, ast.Lambda):
+            args = fn_node.args
+        elif isinstance(fn_node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            args = fn_node.args
+        else:
+            return False
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if a.arg in ("state", "engine_state"):
+                return True
+            if a.annotation is not None:
+                ann = ast.unparse(a.annotation)
+                if "EngineState" in ann:
+                    return True
+        return False
+
+    def _jit_has_donation(self, call: ast.Call) -> bool:
+        return any(kw.arg in ("donate_argnums", "donate_argnames")
+                   for kw in call.keywords)
+
+    def _check_ess004_call(self, node: ast.Call,
+                           resolved: Optional[str]) -> None:
+        # direct form: jax.jit(fn, ...) / functools.partial(jax.jit, ...)
+        target = None
+        if resolved == "jax.jit" and node.args:
+            target = node.args[0]
+        elif resolved in ("functools.partial", "partial") and node.args:
+            head = self._resolve(node.args[0].func) \
+                if isinstance(node.args[0], ast.Call) else \
+                self._resolve(node.args[0])
+            if head == "jax.jit" and len(node.args) > 1:
+                target = node.args[1]
+        if target is None:
+            return
+        if self._jit_has_donation(node):
+            return
+        fn_node = target
+        if isinstance(target, ast.Name):
+            fn_node = self.defs.get(target.id)
+            if fn_node is None:
+                return                      # can't resolve — stay silent
+        if self._takes_engine_state(fn_node):
+            self._emit("ESS004", node,
+                       "jax.jit over a function taking the engine state "
+                       "without donate_argnums/donate_argnames — peak "
+                       "cache memory doubles")
+
+    def _check_ess004_decorators(self, node) -> None:
+        for dec in node.decorator_list:
+            resolved = None
+            has_donation = False
+            if isinstance(dec, ast.Call):
+                head = self._resolve(dec.func)
+                if head == "jax.jit":
+                    resolved, has_donation = head, self._jit_has_donation(dec)
+                elif head in ("functools.partial", "partial") and dec.args:
+                    inner = self._resolve(dec.args[0])
+                    if inner == "jax.jit":
+                        resolved = inner
+                        has_donation = self._jit_has_donation(dec)
+            else:
+                if self._resolve(dec) == "jax.jit":
+                    resolved = "jax.jit"
+            if (resolved and not has_donation
+                    and self._takes_engine_state(node)):
+                self._emit("ESS004", dec,
+                           "@jax.jit on a function taking the engine "
+                           "state without donate_argnums/donate_argnames "
+                           "— peak cache memory doubles")
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def lint_source(source: str, relpath: str,
+                config: Optional[LintConfig] = None) -> list[Finding]:
+    config = config or default_config()
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(rule="ESS000", path=_repro_relpath(relpath),
+                        line=e.lineno or 0, scope="<module>",
+                        message=f"syntax error: {e.msg}")]
+    linter = _ModuleLinter(tree, source, relpath, config)
+    linter.visit(tree)
+    return linter.findings
+
+
+def lint_file(path, root,
+              config: Optional[LintConfig] = None) -> list[Finding]:
+    path = pathlib.Path(path)
+    rel = path.relative_to(root).as_posix() if root else path.as_posix()
+    return lint_source(path.read_text(), rel, config)
+
+
+def lint_tree(root, subdir: str = "src/repro",
+              config: Optional[LintConfig] = None) -> list[Finding]:
+    """Lint every ``*.py`` under ``root/subdir`` (repo-relative paths in
+    the findings)."""
+    root = pathlib.Path(root)
+    findings: list[Finding] = []
+    for path in sorted((root / subdir).rglob("*.py")):
+        findings.extend(lint_file(path, root, config))
+    return findings

@@ -278,8 +278,8 @@ def graft_slot(caches: ESSCaches, slot: int, donor: ESSCaches,
     rows = slot_latents(donor, 0, use_kernel=use_kernel)[:, :n_rows]
     ids = jnp.arange(n_rows, dtype=jnp.int32)[None]      # [1, n]
     host = offload.host_scatter_rows_stacked(
-        caches.host_latent, ids, rows[:, None], batch_offset=slot,
-        block_table=caches.block_tables)
+        caches.host_latent, ids, rows[:, None], slot_mask=None,
+        batch_offset=slot, block_table=caches.block_tables)
 
     return caches._replace(
         lens=caches.lens.at[slot].set(n_rows),

@@ -70,12 +70,18 @@ def init_pool(batch: int, pool_entries: int, max_seq: int, dim: int,
 
 
 def lookup(pool: PoolState, req_ids: jax.Array, req_valid: jax.Array,
-           max_misses: int, *, dedup: bool = True
-           ) -> tuple[PoolState, Lookup, PoolStats]:
+           max_misses: int, *, slot_mask: jax.Array | None,
+           dedup: bool = True) -> tuple[PoolState, Lookup, PoolStats]:
     """Resolve requested cache ids against the pool.
 
     req_ids [B,K] (score-descending), req_valid [B,K].  Touches hit slots
     (LRU stamp).  Returns miss buffer of fixed width ``max_misses``.
+
+    ``slot_mask`` is **required, keyword-only** (ESS001 — see ANALYSIS.md):
+    a ``[B]`` bool mask ANDs into ``req_valid`` so a frozen/freed batch row
+    neither touches LRU stamps nor requests fetches; ``None`` states
+    explicitly that every row is live (or that ``req_valid`` already
+    encodes the gating).
 
     With ``dedup`` the request list may contain **duplicates** (a Q>1
     speculative-verify step flattens every draft's top-k into one list,
@@ -91,6 +97,8 @@ def lookup(pool: PoolState, req_ids: jax.Array, req_valid: jax.Array,
     two are bit-identical on duplicate-free input.
     """
     B, K = req_ids.shape
+    if slot_mask is not None:
+        req_valid = req_valid & slot_mask[:, None]
     bi = jnp.arange(B)[:, None]
     safe_ids = jnp.clip(req_ids, 0, pool.slot_of.shape[1] - 1)
     slot = jnp.take_along_axis(pool.slot_of, safe_ids, axis=1)   # [B,K]
@@ -131,11 +139,16 @@ def lookup(pool: PoolState, req_ids: jax.Array, req_valid: jax.Array,
             Lookup(slot, hit, miss_ids, rank, n_miss), stats)
 
 
-def admit(pool: PoolState, miss_ids: jax.Array, rows: jax.Array,
+def admit(pool: PoolState, miss_ids: jax.Array, rows: jax.Array, *,
+          slot_mask: jax.Array | None,
           protect_slots: jax.Array | None = None) -> PoolState:
     """LRU-evict |M| coldest slots and write the fetched rows into them.
 
     miss_ids [B,M] (-1 padding rows are ignored), rows [B,M,D].
+    ``slot_mask`` is **required, keyword-only** (ESS001): a ``[B]`` bool
+    mask voids the admissions of masked batch rows (their pool state is
+    frozen in-step); ``None`` states explicitly that every row is live or
+    that masked rows' ``miss_ids`` are already all ``-1``.
     protect_slots [B,Kp]: slots that must not be evicted this step (current
     hits are protected automatically by their fresh LRU stamp as long as
     P >= K; pass explicit slots for extra safety with tiny pools).
@@ -146,6 +159,8 @@ def admit(pool: PoolState, miss_ids: jax.Array, rows: jax.Array,
     full width, only residency is capacity-clipped.
     """
     B, M = miss_ids.shape
+    if slot_mask is not None:
+        miss_ids = jnp.where(slot_mask[:, None], miss_ids, -1)
     P = pool.ids.shape[1]
     if M > P:
         miss_ids, rows = miss_ids[:, :P], rows[:, :P]
@@ -218,7 +233,7 @@ def check_consistent(pool: PoolState) -> bool:
     B, P = ids.shape
     for b in range(B):
         res = ids[b][ids[b] >= 0]
-        if len(res) != len(set(res.tolist())):
+        if len(res) != len(set(res.tolist())):  # esslint: disable=ESS002 — numpy, host-only helper
             return False                     # duplicate resident position
         for s in range(P):
             if ids[b, s] >= 0 and slot_of[b, ids[b, s]] != s:

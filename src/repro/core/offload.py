@@ -169,19 +169,28 @@ def host_gather_rows(host_cache: jax.Array, ids: jax.Array, *,
 
 
 def host_scatter_rows(host_cache: jax.Array, ids: jax.Array,
-                      rows: jax.Array, *, layer: int = 0,
-                      batch_offset: int = 0,
+                      rows: jax.Array, *, slot_mask: jax.Array | None,
+                      layer: int = 0, batch_offset: int = 0,
                       block_table: jax.Array | None = None) -> jax.Array:
     """D2H writeback: scatter rows [B,Q,D] into the host cache at ids
     [B,Q] (sequence positions; -1 = masked).  Returns the functionally
     updated full cache (XLA aliases the host buffer in place when the step
     donates its caches).
 
+    ``slot_mask`` is **required, keyword-only** (the serve loop's live-slot
+    contract: an un-gated scatter from a freed or mid-prefill slot is
+    exactly the page-0 aliasing bug class — see ANALYSIS.md ESS001).
+    ``slot_mask=None`` states explicitly that every batch row is live (or
+    that the caller already folded the mask into ``ids``); a ``[B]`` bool
+    mask drops the writes of masked rows in-step.
+
     With ``block_table`` the positions route through the paged
     indirection; writes to unmapped pages are dropped.  Masked rows are
     otherwise handled read-modify-write (rewrite the current value), so no
     copy of the huge host buffer is ever materialized."""
     ctx = shd.current()
+    if slot_mask is not None:
+        ids = jnp.where(slot_mask[:, None], ids, -1)
     B, Q = ids.shape
 
     if block_table is not None:
@@ -262,21 +271,28 @@ def host_scatter_rows(host_cache: jax.Array, ids: jax.Array,
 
 
 def host_scatter_rows_stacked(host_cache: jax.Array, ids: jax.Array,
-                              rows: jax.Array, *, batch_offset: int = 0,
+                              rows: jax.Array, *,
+                              slot_mask: jax.Array | None,
+                              batch_offset: int = 0,
                               block_table: jax.Array | None = None
                               ) -> jax.Array:
     """Scatter rows [L,B,Q,D] at the *same* positions ids [B,Q] into every
     layer of a stacked host cache in one pass (admission graft: the target
     pages are identical per layer, so L separate per-layer scatters would
-    functionally rewrite the full pool L times)."""
+    functionally rewrite the full pool L times).
+
+    ``slot_mask`` is required keyword-only, exactly as in
+    :func:`host_scatter_rows` (ESS001)."""
     ctx = shd.current()
+    if slot_mask is not None:
+        ids = jnp.where(slot_mask[:, None], ids, -1)
     Lh = host_cache.shape[0]
     if ctx is not None and ctx.mesh is not None:
         # mesh path: fall back to the per-layer host-compute scatter
         out = host_cache
         for layer in range(Lh):
-            out = host_scatter_rows(out, ids, rows[layer], layer=layer,
-                                    batch_offset=batch_offset,
+            out = host_scatter_rows(out, ids, rows[layer], slot_mask=None,
+                                    layer=layer, batch_offset=batch_offset,
                                     block_table=block_table)
         return out
     B, Q = ids.shape

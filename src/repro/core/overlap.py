@@ -84,7 +84,8 @@ def ess_sparse_attention(mla_p: dict, idx_p: dict, cfg: ArchConfig,
                          x_norm: jax.Array, positions: jax.Array,
                          state: ESSLayerState, idx_keys: jax.Array,
                          lens: jax.Array, *, overlap: str = "da",
-                         use_kernel: bool = False
+                         use_kernel: bool = False,
+                         slot_mask: jax.Array | None = None
                          ) -> tuple[jax.Array, ESSLayerState, ESSStats]:
     """One layer of ESS decode attention.
 
@@ -93,15 +94,18 @@ def ess_sparse_attention(mla_p: dict, idx_p: dict, cfg: ArchConfig,
     new tokens' keys*, lens [B] = cache length *after* appending new tokens
     — or per-query ``[B,Q]`` (causal within the Q window: query ``q`` sees
     positions ``< lens[b,q]``; a slot-masked row passes 0).
+    ``slot_mask`` [B] gates the pool mutations (LRU touches / admissions)
+    of frozen batch rows in-step; it is forwarded into
+    :func:`repro.core.lru_pool.lookup` / :func:`~repro.core.lru_pool.admit`.
     ``state.host_latent`` must already contain the new latent rows (the
     engine performs the D2H writeback — Figure 3's small D2H — before
     calling attention so drafts can attend to themselves).
     """
     if overlap == "dba":
         return _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys,
-                    lens, use_kernel)
+                    lens, use_kernel, slot_mask)
     return _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys,
-                       lens, overlap, use_kernel)
+                       lens, overlap, use_kernel, slot_mask)
 
 
 def _fetch_valid(lk, B: int, Q: int, K: int, M_env: int) -> jax.Array:
@@ -117,7 +121,7 @@ def _fetch_valid(lk, B: int, Q: int, K: int, M_env: int) -> jax.Array:
         bi, qidx, scat].set(True, mode="drop")[:, :, :M_env]
 
 
-def _topk_and_lookup(idx_p, cfg, x_norm, state, idx_keys, lens):
+def _topk_and_lookup(idx_p, cfg, x_norm, state, idx_keys, lens, slot_mask):
     B, Q, _ = x_norm.shape
     S = idx_keys.shape[1]
     K = min(cfg.dsa.index_topk, S)
@@ -135,15 +139,15 @@ def _topk_and_lookup(idx_p, cfg, x_norm, state, idx_keys, lens):
     # one query's top-k is duplicate-free; only the Q>1 flattening can
     # request the same position twice (skip the O(K^2) dedup at Q=1)
     pool, lk, stats = LP.lookup(state.pool, flat_ids, flat_valid, M_env,
-                                dedup=Q > 1)
+                                slot_mask=slot_mask, dedup=Q > 1)
     return pool, lk, stats, ids, req_valid, K, M_env
 
 
 def _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
-                overlap, use_kernel):
+                overlap, use_kernel, slot_mask=None):
     B, Q, _ = x_norm.shape
     pool, lk, stats, ids, req_valid, K, M_env = _topk_and_lookup(
-        idx_p, cfg, x_norm, state, idx_keys, lens)
+        idx_p, cfg, x_norm, state, idx_keys, lens, slot_mask)
 
     # ---- issue the H2D fetch as early as possible (DA overlap) ----
     fetched = offload.host_gather_rows(state.host_latent, lk.miss_ids,
@@ -188,21 +192,23 @@ def _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
     out_lat = M.finalize_partial(part, x_norm.dtype)
     out = M.output_proj(mla_p, cfg, out_lat)
 
-    pool = LP.admit(pool, lk.miss_ids, fetched)
+    pool = LP.admit(pool, lk.miss_ids, fetched, slot_mask=slot_mask)
     pool = LP.tick(pool)
     new_state = state._replace(pool=pool)
     return out, new_state, ESSStats(stats.hits, stats.misses, stats.overflow)
 
 
 def _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
-         use_kernel):
+         use_kernel, slot_mask=None):
     """DualBatch-Attention: batch split in two, indexer of half-2 overlaps
     the fetch of half-1."""
     B = x_norm.shape[0]
     h = B // 2
     if h == 0:
         return _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state,
-                           idx_keys, lens, "da", use_kernel)
+                           idx_keys, lens, "da", use_kernel, slot_mask)
+    sm0 = None if slot_mask is None else slot_mask[:h]
+    sm1 = None if slot_mask is None else slot_mask[h:]
 
     def half(sl, off):
         pool = LP.PoolState(*(a[sl] if a.ndim > 0 else a
@@ -216,14 +222,14 @@ def _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
     s0, s1 = half(slice(0, h), 0), half(slice(h, None), h)
     # half-1 indexer + fetch issue
     p0_pool, lk0, st0, ids0, rv0, K, M_env = _topk_and_lookup(
-        idx_p, cfg, x_norm[:h], s0, idx_keys[:h], lens[:h])
+        idx_p, cfg, x_norm[:h], s0, idx_keys[:h], lens[:h], sm0)
     fetched0 = offload.host_gather_rows(s0.host_latent, lk0.miss_ids,
                                         layer=s0.layer,
                                         batch_offset=s0.batch_offset,
                                         block_table=s0.block_table)
     # half-2 indexer (independent of fetched0 -> overlaps the copy)
     p1_pool, lk1, st1, ids1, rv1, _, _ = _topk_and_lookup(
-        idx_p, cfg, x_norm[h:], s1, idx_keys[h:], lens[h:])
+        idx_p, cfg, x_norm[h:], s1, idx_keys[h:], lens[h:], sm1)
     fetched1 = offload.host_gather_rows(s1.host_latent, lk1.miss_ids,
                                         layer=s1.layer,
                                         batch_offset=s1.batch_offset,
@@ -231,10 +237,10 @@ def _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
 
     out0, ns0 = _finish_half(mla_p, cfg, x_norm[:h], positions[:h], p0_pool,
                              lk0, ids0, rv0, fetched0, s0, K, M_env,
-                             use_kernel)
+                             use_kernel, sm0)
     out1, ns1 = _finish_half(mla_p, cfg, x_norm[h:], positions[h:], p1_pool,
                              lk1, ids1, rv1, fetched1, s1, K, M_env,
-                             use_kernel)
+                             use_kernel, sm1)
 
     pool = LP.PoolState(*(jnp.concatenate([a, b], 0) if a.ndim > 0 else a
                           for a, b in zip(ns0.pool, ns1.pool)))
@@ -248,7 +254,7 @@ def _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
 
 
 def _finish_half(mla_p, cfg, x_norm, positions, pool, lk, ids, req_valid,
-                 fetched, st, K, M_env, use_kernel):
+                 fetched, st, K, M_env, use_kernel, slot_mask=None):
     B, Q, _ = x_norm.shape
     q_comb = M.absorbed_query(mla_p, cfg, x_norm, positions)
     hit = lk.hit.reshape(B, Q, K)
@@ -263,5 +269,5 @@ def _finish_half(mla_p, cfg, x_norm, positions, pool, lk, ids, req_valid,
                       fvalid, cfg, use_kernel)
     part = M.merge_partials(p0, p1)
     out = M.output_proj(mla_p, cfg, M.finalize_partial(part, x_norm.dtype))
-    pool = LP.admit(pool, lk.miss_ids, fetched)
+    pool = LP.admit(pool, lk.miss_ids, fetched, slot_mask=slot_mask)
     return out, st._replace(pool=pool)

@@ -16,7 +16,8 @@ from repro.models import mla as M
 
 def lru_warmup(pool: LP.PoolState, host_latent: jax.Array,
                x_tail: jax.Array, idx_p: dict, idx_keys: jax.Array,
-               lens: jax.Array, cfg: ArchConfig, *, layer: int = 0,
+               lens: jax.Array, cfg: ArchConfig, *,
+               slot_mask: jax.Array | None, layer: int = 0,
                batch_offset: int = 0,
                block_table: jax.Array | None = None) -> LP.PoolState:
     """Seed the pool.
@@ -25,6 +26,10 @@ def lru_warmup(pool: LP.PoolState, host_latent: jax.Array,
     (the "windows"); idx_keys [B, S, Di] full indexer cache; lens [B].
     Sequentially (scan) inserts each window's Top-K set with full LRU
     semantics, so stamps increase window by window.
+
+    ``slot_mask`` is required keyword-only (ESS001): a ``[B]`` bool mask
+    freezes masked rows' pool state through the whole warmup scan;
+    ``None`` = every row live (e.g. the per-slot replay at admission).
 
     ``layer`` / ``batch_offset`` / ``block_table`` route the miss fetches
     through a stacked and/or paged host tier (the serve loop replays warmup
@@ -44,11 +49,12 @@ def lru_warmup(pool: LP.PoolState, host_latent: jax.Array,
     def body(p, wi):
         ids, vw = wi                                     # [B,K]
         p, lk, _ = LP.lookup(p, ids, vw, K,              # envelope = K (exact)
+                             slot_mask=slot_mask,
                              dedup=False)                # per-window top-k
         rows = offload.host_gather_rows(host_latent, lk.miss_ids,
                                         layer=layer, batch_offset=batch_offset,
                                         block_table=block_table)
-        p = LP.admit(p, lk.miss_ids, rows)
+        p = LP.admit(p, lk.miss_ids, rows, slot_mask=slot_mask)
         p = LP.tick(p)
         return p, None
 

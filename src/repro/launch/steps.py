@@ -243,7 +243,7 @@ def make_decode_step(cfg: ArchConfig, use_kernel: bool = False) -> Callable:
         def decode_step(params, batch):
             out = E.ess_decode(params, cfg, batch["inputs"],
                                batch["positions"], batch["caches"],
-                               use_kernel=use_kernel)
+                               use_kernel=use_kernel, slot_mask=None)
             return out.logits, out.caches
         return decode_step
 

@@ -158,8 +158,9 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
             new_ik.astype(ikeys_all[layer].dtype), mode="drop")
         ikeys_all = ikeys_all[:layer] + (ik_l,) + ikeys_all[layer + 1:]
         new_lat = M.latent_entries(lp["mla"], cfg, h, positions) # [B,Q,D]
+        # masked slots' gating is already folded into widx (-1 rows drop)
         host_latent = offload.host_scatter_rows(
-            host_latent, widx, new_lat, layer=layer,
+            host_latent, widx, new_lat, slot_mask=None, layer=layer,
             block_table=caches.block_tables)
 
         # --- ESS sparse attention (fetch ∥ Attn0, Attn1, merge, admit) ---
@@ -168,7 +169,7 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
         ov = _overlap_for_layer(cfg, layer, layerwise_policy)
         attn, st2, stats = ess_sparse_attention(
             lp["mla"], lp["indexer"], cfg, h, positions, st, ik_l, attn_lens,
-            overlap=ov, use_kernel=use_kernel)
+            overlap=ov, use_kernel=use_kernel, slot_mask=live)
         pools = pools[:layer] + (st2.pool,) + pools[layer + 1:]
         x = x + attn
 
@@ -320,7 +321,7 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
     # one stacked D2H scatter for the whole chunk (all layers, same rows;
     # pad rows carry widx == -1 and are dropped)
     host = offload.host_scatter_rows_stacked(
-        host, widx, jnp.stack(lat_stack), batch_offset=b0,
+        host, widx, jnp.stack(lat_stack), slot_mask=None, batch_offset=b0,
         block_table=caches.block_tables)
     new_lens = jax.lax.dynamic_update_slice(
         caches.lens, start + nv, (b0,))
@@ -365,7 +366,7 @@ def ess_prefill(params, cfg: ArchConfig, tokens, positions, max_seq: int,
         ck = min(C, Sp - c0)
         lg, caches, _, _ = ess_prefill_chunk(
             params, cfg, tokens[:, c0:c0 + ck], positions[:, c0:c0 + ck],
-            caches, use_kernel=use_kernel)
+            caches, use_kernel=use_kernel, n_valid=None)
         parts.append(lg)
     logits = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
 
@@ -381,7 +382,7 @@ def ess_prefill(params, cfg: ArchConfig, tokens, positions, max_seq: int,
         def step(c, tw):
             tok, pos = tw                                  # [B], [B]
             o = ess_decode(params, cfg_x, tok[:, None], pos[:, None], c,
-                           use_kernel=use_kernel)
+                           use_kernel=use_kernel, slot_mask=None)
             return o.caches, o.logits[:, 0]
 
         toks_w = tokens[:, Sp:].T                          # [W, B]
@@ -576,6 +577,11 @@ class ServeSession:
         # chunked-prefill state machine: slot -> task, FIFO service order
         # by dict insertion (re-admissions re-insert at the back)
         self._prefill: dict[int, _PrefillTask] = {}
+        # just-promoted slots whose on-device first tokens still await
+        # delivery: [(slot, req, t0_dev)].  decode_round packs them into
+        # the round's single device_get (one-fetch contract); the normal
+        # step_round cadence holds at most one entry
+        self._pending_first: list[tuple] = []
         self._round = 0
         self._submit_round: dict[int, int] = {}
         self._submit_time: dict[int, float] = {}
@@ -772,7 +778,16 @@ class ServeSession:
         valid rows) that also selects the first token in-device and
         promotes the slot inside the program; with ``do_warmup`` the
         legacy eager chunk collects the per-layer warmup tails and the
-        LRU replay runs after the last chunk."""
+        LRU replay runs after the last chunk.
+
+        **One-fetch contract**: a last chunk does *not* fetch its first
+        token here.  The promotion bookkeeping is token-free, so the slot
+        promotes immediately and the on-device ``t0`` is stashed; it
+        rides this round's single packed ``device_get`` in
+        :meth:`decode_round` (the promoted slot is active, so the decode
+        program always runs).  Only the legacy ``do_warmup`` path — whose
+        chunk is eager and host-driven anyway — still resolves ``t0``
+        inline."""
         if not self._prefill:
             return False
         slot = next(iter(self._prefill))         # FIFO by insertion order
@@ -783,6 +798,7 @@ class ServeSession:
         last = c0 + ck >= n
         if self.do_warmup:
             t0 = self._prefill_chunk_warmup(slot, task, c0, ck, n, last)
+            t0_dev = None
         else:
             C = SP.chunk_bucket(ck, self.prefill_chunk)
             toks = task.tokens[:, c0:c0 + ck]
@@ -792,7 +808,6 @@ class ServeSession:
             self.state, t0_dev = fn(self.params, self.state, toks,
                                     jnp.asarray(slot, jnp.int32),
                                     jnp.asarray(ck, jnp.int32))
-            t0 = int(jax.device_get(t0_dev)) if last else None
         task.cursor += ck
         self.report.prefill_chunks += 1
         self.report.prefill_tokens += ck
@@ -800,7 +815,13 @@ class ServeSession:
             f"round {self._round}: rid={task.req.rid} prefill chunk "
             f"[{c0}:{c0 + ck})/{n} (slot {slot})")
         if last:
-            self._finish_prefill(slot, task, t0)
+            if self.do_warmup:
+                self._finish_prefill(slot, task, t0)
+            else:
+                req = task.req
+                self.sched.promote(slot)
+                del self._prefill[slot]
+                self._pending_first.append((slot, req, t0_dev))
         return True
 
     def _prefill_chunk_warmup(self, slot: int, task: _PrefillTask, c0: int,
@@ -814,7 +835,7 @@ class ServeSession:
         lg, self.caches, tails, hid_last = ess_prefill_chunk(
             self.params, self.cfg, toks, pos, self.caches, slot=slot,
             want_logits=last, collect_tail=min(W, ck),
-            use_kernel=self.use_kernel)
+            use_kernel=self.use_kernel, n_valid=None)
         if W > 0:
             if task.tails is None:
                 task.tails = list(tails)
@@ -826,26 +847,25 @@ class ServeSession:
         if W > 0:
             self._warmup_slot(slot, tuple(task.tails), n)
         req = task.req
+        # legacy eager warmup path: syncs per chunk by design (the
+        # compiled path defers t0 into decode_round's packed fetch)
         if req.sampling:
-            t0 = int(self._draw(req, lg[0, -1], 0))
+            t0 = int(self._draw(req, lg[0, -1], 0))    # esslint: disable=ESS002
         else:
-            t0 = int(greedy(lg[:, -1])[0])
+            t0 = int(greedy(lg[:, -1])[0])             # esslint: disable=ESS002
         self.state = ES.promote_slot(self.state, slot, t0, hid_last[0])
         return t0
 
-    def _finish_prefill(self, slot: int, task: _PrefillTask,
-                        t0: int) -> None:
-        """Promotion bookkeeping after the last prefill chunk: deliver the
-        first token, promote the slot into the decode batch, record TTFT.
-        A ``max_new_tokens == 1`` request's budget is spent by the first
-        token — it finishes right here, before any decode round; so does
-        a request whose first token is one of its EOS/stop tokens."""
-        req = task.req
+    def _deliver_first_token(self, slot: int, req: Request,
+                             t0: int) -> Optional[str]:
+        """Deliver a freshly promoted slot's first token (stream + event
+        + TTFT stamps).  Returns the terminal kind if the request is
+        already done at its first token — ``"stop"`` (t0 is an EOS/stop
+        token) or ``"length"`` (``max_new_tokens == 1`` spent the whole
+        budget) — else ``None``."""
         self.outputs[req.rid] = [t0]
         self._event(TokenEvent(rid=req.rid, token=t0, index=0,
                                t=time.perf_counter()))
-        self.sched.promote(slot)
-        del self._prefill[slot]
         rid = req.rid
         ttft = self._round - self._submit_round[rid]
         # a preempted request's first token was already delivered by its
@@ -858,8 +878,27 @@ class ServeSession:
             f"(ttft {ttft} rounds)")
         if t0 in req.stop_set:
             req.finish_reason = "stop"
+            return "stop"
+        if self.sched.budget_left(slot) == 0:
+            return "length"
+        return None
+
+    def _finish_prefill(self, slot: int, task: _PrefillTask,
+                        t0: int) -> None:
+        """Legacy (``do_warmup``) promotion bookkeeping after the last
+        prefill chunk: deliver the host-resolved first token and promote
+        the slot into the decode batch.  A ``max_new_tokens == 1``
+        request's budget is spent by the first token — it finishes right
+        here, before any decode round; so does a request whose first
+        token is one of its EOS/stop tokens.  (The compiled path defers
+        delivery to :meth:`decode_round`'s packed fetch instead.)"""
+        req = task.req
+        self.sched.promote(slot)
+        del self._prefill[slot]
+        done = self._deliver_first_token(slot, req, t0)
+        if done == "stop":
             self._handle_done([self.sched.finish(slot)])
-        elif self.sched.budget_left(slot) == 0:
+        elif done == "length":
             self._handle_done(self.sched.record_tokens({slot: 0}))
 
     def _warmup_slot(self, slot: int, tails: tuple, prompt_len: int) -> None:
@@ -879,8 +918,8 @@ class ServeSession:
                                            slot + 1, axis=0)
             one = warmup.lru_warmup(
                 one, self.caches.host_latent, x_tail, lp["indexer"], ik_slot,
-                lens1, self.cfg, layer=layer, batch_offset=slot,
-                block_table=self.caches.block_tables)
+                lens1, self.cfg, slot_mask=None, layer=layer,
+                batch_offset=slot, block_table=self.caches.block_tables)
             pools.append(LC.graft_pool_into(full, one, slot))
         self.caches = self.caches._replace(pools=tuple(pools))
 
@@ -959,21 +998,51 @@ class ServeSession:
         StepProgram over the donated device state; inactive and
         mid-prefill slots are masked *inside* the step (``slot_mask``):
         their host pages, pool state and ``lens`` are untouched.  The
-        host fetches exactly one packed ``(tokens, n_emit)`` struct and
-        does scheduler bookkeeping + stream emission with it."""
+        host fetches exactly one packed ``(tokens, n_emit)`` struct —
+        when a slot finished its prefill this round, its deferred first
+        token rides the same fetch — and does scheduler bookkeeping +
+        stream emission with it."""
         self._sample_pages()
+        pending, self._pending_first = self._pending_first, []
+        # drop stale entries (slot preempted/aborted before its first
+        # token was fetched — the re-admission regenerates the stream)
+        pending = [(s, r, t) for s, r, t in pending
+                   if self.sched.slots[s].active
+                   and self.sched.slots[s].rid == r.rid]
         active = self.sched.active_slots()
         if not active:
+            assert not pending       # a promoted slot is always active
             return []
         spec = self.mtp_depth > 0
         fn = self._programs.spec(self.compiled) if spec \
             else self._programs.decode(self.compiled)
         self.state, out = fn(self.params, self.state)
-        toks, n_emit = jax.device_get((out.tokens, out.n_emit))
+        # the round's single packed fetch (one-fetch contract): decode
+        # emissions + the just-promoted slots' deferred first tokens
+        if pending:
+            toks, n_emit, t0s = jax.device_get(
+                (out.tokens, out.n_emit, [t for _, _, t in pending]))
+        else:
+            t0s = []
+            toks, n_emit = jax.device_get((out.tokens, out.n_emit))
         slot_tokens = {}
         stop_slots = []
+        first_done = {}
+        for (s0, r0, _), t0 in zip(pending, t0s):
+            fd = self._deliver_first_token(s0, r0, int(t0))
+            if fd is not None:
+                first_done[s0] = fd
         for i in active:
             req = self._slot_req(i)
+            if i in first_done:
+                # the request ended at its very first token (stop token
+                # or max_new_tokens == 1); the decode step the program
+                # already took for the slot is discarded wholesale when
+                # the slot releases (full reset: lens, pool maps, pages)
+                slot_tokens[i] = 0
+                if first_done[i] == "stop":
+                    stop_slots.append(i)
+                continue
             n = int(n_emit[i])
             charged, stopped = self._emit(i, req,
                                           [int(t) for t in toks[i, :n]])

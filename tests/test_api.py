@@ -280,13 +280,17 @@ def test_stop_token_truncates_within_spec_round(cfg):
         np.testing.assert_array_equal(a, b)
         assert (a < snap_spec["lens"]).all()     # nothing beyond the stop
 
-    # EOS on the prefill's first token finishes at promotion
+    # EOS on the prefill's first token finishes the stream at index 0;
+    # the token rides the promotion round's packed fetch (one-fetch
+    # contract), so that round is the only decode round and delivers
+    # nothing beyond the first token
     sE = E.ServeSession(params, cfg, num_slots=1, max_seq=48, mtp_depth=2)
     rE = sE.run([Request(rid=0, prompt_len=10, max_new_tokens=9,
                          eos_token_ids=(stream[0],))], max_rounds=20)
     assert sE.outputs[0] == stream[:1]
     assert sE._terminal == {0: "stop"}
-    assert rE.rounds == 0                        # no decode round needed
+    assert rE.rounds == 1                        # the t0-carrying round
+    assert rE.decode_tokens == 0
 
 
 # ---------------------------------------------------------------------------

@@ -269,8 +269,10 @@ def test_emit_charge_equals_delivery_at_budget_edge():
 
 def test_max_new_tokens_one_finishes_at_promotion():
     """The prefill first token is the whole budget: the request finishes
-    at promotion without a decode round (the old accounting needed a
-    ghost decode round that delivered nothing)."""
+    at its first token with an empty decode charge.  The first token is
+    fetched via the promotion round's single packed device_get (one-fetch
+    contract), so exactly one decode round runs — and delivers nothing
+    beyond the first token."""
     cfg = smoke_cfg(max_miss_ratio=1.0)
     params = init_params(jax.random.key(0), T.model_def(cfg))
     session = E.ServeSession(params, cfg, num_slots=1, max_seq=32,
@@ -279,7 +281,8 @@ def test_max_new_tokens_one_finishes_at_promotion():
                          max_rounds=10)
     assert report.finished_rids == [0]
     assert session.outputs[0] and len(session.outputs[0]) == 1
-    assert report.rounds == 0         # no decode round was needed
+    assert report.rounds == 1         # the t0-carrying round only
+    assert report.decode_tokens == 0  # ...which delivered no decode token
 
 
 def test_ttft_submit_stamp_unconditional():

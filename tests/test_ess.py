@@ -70,7 +70,8 @@ def test_lru_warmup_preheats_pool(setup):
     P = max(int(0.5 * S), cfg.dsa.index_topk)
     pool0 = LP.init_pool(B, P, S, cfg.mla.latent_dim, jnp.float32)
     x_tail = jnp.repeat(x, 4, axis=1)
-    pool_w = WU.lru_warmup(pool0, lat, x_tail, idx_p, ikeys, lens, cfg)
+    pool_w = WU.lru_warmup(pool0, lat, x_tail, idx_p, ikeys, lens, cfg,
+                           slot_mask=None)
     cfg_x = dataclasses.replace(
         cfg, ess=dataclasses.replace(cfg.ess, max_miss_ratio=1.0))
     _, _, s_cold = OV.ess_sparse_attention(

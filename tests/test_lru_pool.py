@@ -53,8 +53,8 @@ def test_lru_miss_counts_match_oracle_single_id(stream, P):
     got = []
     for r in stream:
         ids = jnp.array([[r]], jnp.int32)
-        pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=1)
-        pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 1, D)))
+        pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=1, slot_mask=None)
+        pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 1, D)), slot_mask=None)
         pool = LP.tick(pool)
         got.append(int(stats.misses[0]))
     assert got == ref_lru([[r] for r in stream], P)
@@ -76,7 +76,7 @@ def test_lru_guarantee_batched(reqs, P):
     for t, req in enumerate(reqs):
         ids = jnp.full((1, 6), -1, jnp.int32).at[0, :len(req)].set(
             jnp.array(req, jnp.int32))
-        pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=6)
+        pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=6, slot_mask=None)
         missed = set(int(i) for i in np.array(lk.miss_ids[0]) if i >= 0)
         for r in req:
             if r in missed and r in last_access:
@@ -91,7 +91,7 @@ def test_lru_guarantee_batched(reqs, P):
         history.append(set(req))
         for r in req:
             last_access[r] = t
-        pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 6, D)))
+        pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 6, D)), slot_mask=None)
         pool = LP.tick(pool)
 
 
@@ -105,9 +105,9 @@ def test_pool_invariants(reqs):
         ids = jnp.full((2, 5), -1, jnp.int32)
         ids = ids.at[0, :len(req)].set(jnp.array(req, jnp.int32))
         ids = ids.at[1, :len(req)].set(jnp.array(req, jnp.int32))
-        pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=5)
+        pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=5, slot_mask=None)
         rows = jnp.ones((2, 5, 4))
-        pool = LP.admit(pool, lk.miss_ids, rows)
+        pool = LP.admit(pool, lk.miss_ids, rows, slot_mask=None)
         pool = LP.tick(pool)
         so = np.array(pool.slot_of)
         pids = np.array(pool.ids)
@@ -124,14 +124,14 @@ def test_pool_invariants(reqs):
 def test_lookup_marks_hits_and_packs_misses():
     pool = mk_pool(B=1)
     ids = jnp.array([[3, 5, 7, -1]], jnp.int32)
-    pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=4)
+    pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=4, slot_mask=None)
     assert int(stats.misses[0]) == 3
     np.testing.assert_array_equal(np.array(lk.miss_ids[0, :3]), [3, 5, 7])
     rows = jnp.arange(4 * 4, dtype=jnp.float32).reshape(1, 4, 4)
-    pool = LP.admit(pool, lk.miss_ids, rows)
+    pool = LP.admit(pool, lk.miss_ids, rows, slot_mask=None)
     pool = LP.tick(pool)
     # second lookup: all hits, data returned matches admitted rows
-    pool, lk2, st2 = LP.lookup(pool, ids, ids >= 0, max_misses=4)
+    pool, lk2, st2 = LP.lookup(pool, ids, ids >= 0, max_misses=4, slot_mask=None)
     assert int(st2.misses[0]) == 0
     got, _ = LP.gather_resident(pool, lk2.slot, lk2.hit)
     np.testing.assert_allclose(np.array(got[0, 0]), np.array(rows[0, 0]))
@@ -140,7 +140,7 @@ def test_lookup_marks_hits_and_packs_misses():
 def test_miss_envelope_overflow_drops_lowest_priority():
     pool = mk_pool(B=1, P=8)
     ids = jnp.array([[1, 2, 3, 4, 5]], jnp.int32)   # 5 misses, envelope 3
-    pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=3)
+    pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=3, slot_mask=None)
     assert int(stats.overflow[0]) == 2
     # packed misses are the FIRST (highest-score) requests
     np.testing.assert_array_equal(np.array(lk.miss_ids[0]), [1, 2, 3])
@@ -149,8 +149,8 @@ def test_miss_envelope_overflow_drops_lowest_priority():
 def test_invalidate_beyond_removes_stale_entries():
     pool = mk_pool(B=1, P=8)
     ids = jnp.array([[2, 9, 14]], jnp.int32)
-    pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=3)
-    pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 3, 4)))
+    pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=3, slot_mask=None)
+    pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 3, 4)), slot_mask=None)
     pool = LP.invalidate_beyond(pool, jnp.array([10]))
     so = np.array(pool.slot_of[0])
     assert so[2] >= 0 and so[9] >= 0
@@ -161,16 +161,16 @@ def test_invalidate_beyond_removes_stale_entries():
 def test_protected_slots_not_evicted():
     pool = mk_pool(B=1, P=4)
     ids = jnp.array([[0, 1, 2, 3]], jnp.int32)
-    pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=4)
-    pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 4, 4)))
+    pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=4, slot_mask=None)
+    pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 4, 4)), slot_mask=None)
     pool = LP.tick(pool)
     # request 2 new ids while protecting slots of ids 0,1
     prot = jnp.array([[0, 1]], jnp.int32)
     slot_prot = jnp.take_along_axis(pool.slot_of, prot, axis=1)
     ids2 = jnp.array([[10, 11]], jnp.int32)
-    pool, lk2, _ = LP.lookup(pool, ids2, ids2 >= 0, max_misses=2)
+    pool, lk2, _ = LP.lookup(pool, ids2, ids2 >= 0, max_misses=2, slot_mask=None)
     pool = LP.admit(pool, lk2.miss_ids, jnp.ones((1, 2, 4)),
-                    protect_slots=slot_prot)
+                    slot_mask=None, protect_slots=slot_prot)
     so = np.array(pool.slot_of[0])
     assert so[0] >= 0 and so[1] >= 0          # protected survived
     assert so[10] >= 0 and so[11] >= 0        # admitted

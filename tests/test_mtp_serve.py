@@ -100,7 +100,7 @@ def test_duplicate_miss_requests_admit_once():
     clobbered the live duplicate's inverse link."""
     pool = LP.init_pool(1, 8, 32, 4, jnp.float32)
     ids = jnp.array([[5, 9, 5, 9, 2]], jnp.int32)    # 3 unique, 2 dups
-    pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=5)
+    pool, lk, stats = LP.lookup(pool, ids, ids >= 0, max_misses=5, slot_mask=None)
     assert int(stats.misses[0]) == 3                 # unique fetch rows
     np.testing.assert_array_equal(np.array(lk.miss_ids[0]),
                                   [5, 9, 2, -1, -1])
@@ -108,7 +108,8 @@ def test_duplicate_miss_requests_admit_once():
     np.testing.assert_array_equal(np.array(lk.miss_rank[0, :5]),
                                   [0, 1, 0, 1, 2])
     pool = LP.admit(pool, lk.miss_ids,
-                    jnp.arange(5 * 4, dtype=jnp.float32).reshape(1, 5, 4))
+                    jnp.arange(5 * 4, dtype=jnp.float32).reshape(1, 5, 4),
+                    slot_mask=None)
     pool = LP.tick(pool)
     assert LP.check_consistent(pool)
     pids = np.array(pool.ids[0])
@@ -122,12 +123,12 @@ def test_invalidate_beyond_after_admit_consistent():
     MISS on re-lookup."""
     pool = LP.init_pool(1, 8, 32, 4, jnp.float32)
     ids = jnp.array([[3, 11, 12]], jnp.int32)        # 11, 12 = draft rows
-    pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=3)
-    pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 3, 4)))
+    pool, lk, _ = LP.lookup(pool, ids, ids >= 0, max_misses=3, slot_mask=None)
+    pool = LP.admit(pool, lk.miss_ids, jnp.ones((1, 3, 4)), slot_mask=None)
     pool = LP.tick(pool)
     pool = LP.invalidate_beyond(pool, jnp.array([11]))   # 1 draft accepted
     assert LP.check_consistent(pool)
-    pool, lk2, st2 = LP.lookup(pool, ids, ids >= 0, max_misses=3)
+    pool, lk2, st2 = LP.lookup(pool, ids, ids >= 0, max_misses=3, slot_mask=None)
     np.testing.assert_array_equal(np.array(lk2.hit[0]),
                                   [True, False, False])
     assert int(st2.misses[0]) == 2

@@ -53,8 +53,10 @@ def test_paged_vs_dense_roundtrip_bitwise():
 
     for layer in (0, cfg.num_layers - 1):
         hp = offload.host_scatter_rows(caches.host_latent, ids, rows,
-                                       layer=layer, block_table=bt)
-        hd = offload.host_scatter_rows(dense, ids, rows, layer=layer)
+                                       slot_mask=None, layer=layer,
+                                       block_table=bt)
+        hd = offload.host_scatter_rows(dense, ids, rows, slot_mask=None,
+                                       layer=layer)
         got_p = offload.host_gather_rows(hp, ids, layer=layer,
                                          block_table=bt)
         got_d = offload.host_gather_rows(hd, ids, layer=layer)
@@ -71,7 +73,7 @@ def test_paged_scatter_drops_unmapped_and_out_of_range():
     ids = jnp.array([[0, 999], [3, 5]], jnp.int32)       # 999 out of range
     rows = jnp.ones((B, 2, D), jnp.float32)
     h = offload.host_scatter_rows(caches.host_latent, ids, rows,
-                                  block_table=bt)
+                                  slot_mask=None, block_table=bt)
     got = offload.host_gather_rows(h, ids, block_table=bt)
     np.testing.assert_array_equal(np.array(got[0, 0]), np.ones(D))
     assert np.array(got[0, 1]).sum() == 0                # OOR dropped
@@ -137,15 +139,16 @@ def test_reset_slot_clears_pool_maps():
     ids = jnp.array([[3, 7, 11], [5, 9, 13]], jnp.int32)
     pools = []
     for p in caches.pools:
-        p, lk, _ = LP.lookup(p, ids, ids >= 0, max_misses=3)
-        p = LP.admit(p, lk.miss_ids, jnp.ones((B, 3, cfg.mla.latent_dim)))
+        p, lk, _ = LP.lookup(p, ids, ids >= 0, max_misses=3, slot_mask=None)
+        p = LP.admit(p, lk.miss_ids, jnp.ones((B, 3, cfg.mla.latent_dim)),
+                      slot_mask=None)
         pools.append(LP.tick(p))
     caches = caches._replace(pools=tuple(pools),
                              lens=jnp.array([20, 20], jnp.int32))
 
     # the old buggy path: only lens reset -> stale HIT
     stale = caches._replace(lens=caches.lens.at[1].set(0))
-    _, lk_stale, st_stale = LP.lookup(stale.pools[0], ids, ids >= 0, 3)
+    _, lk_stale, st_stale = LP.lookup(stale.pools[0], ids, ids >= 0, 3, slot_mask=None)
     assert int(st_stale.hits[1]) == 3        # the bug this PR fixes
 
     # reset_slot: full per-slot reset -> no hits, slot 0 untouched
@@ -156,7 +159,7 @@ def test_reset_slot_clears_pool_maps():
         assert (np.array(p.last_use[1]) == -1).all()
         assert (np.array(p.slot_of[1]) == -1).all()
         assert (np.array(p.ids[0]) >= 0).sum() == 3
-    _, lk_clean, st_clean = LP.lookup(clean.pools[0], ids, ids >= 0, 3)
+    _, lk_clean, st_clean = LP.lookup(clean.pools[0], ids, ids >= 0, 3, slot_mask=None)
     assert int(st_clean.hits[1]) == 0
     assert int(st_clean.hits[0]) == 3
 

@@ -75,11 +75,11 @@ def test_quest_blocks_pool_roundtrip():
     meta = Q.build_block_meta(k, block)
     ids, bvalid = Q.quest_topk_blocks(q, meta, lens, block, topb=4)
     pool = LP.init_pool(B, 6, S // block, block * KV * D * 2)
-    pool, lk, st1 = LP.lookup(pool, ids, bvalid, max_misses=4)
+    pool, lk, st1 = LP.lookup(pool, ids, bvalid, max_misses=4, slot_mask=None)
     rows = jnp.zeros((B, 4, block * KV * D * 2))
-    pool = LP.admit(pool, lk.miss_ids, rows)
+    pool = LP.admit(pool, lk.miss_ids, rows, slot_mask=None)
     pool = LP.tick(pool)
-    pool, lk2, st2 = LP.lookup(pool, ids, bvalid, max_misses=4)
+    pool, lk2, st2 = LP.lookup(pool, ids, bvalid, max_misses=4, slot_mask=None)
     assert int(st1.misses[0]) > 0 and int(st2.misses[0]) == 0
 
 
