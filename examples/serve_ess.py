@@ -29,6 +29,13 @@ for the op-by-op debugging path; the emitted streams are identical
 either way.  (See ``examples/stream_abort.py`` for the incremental
 ``stream()`` / ``abort()`` / stop-token side of the API.)
 
+With ``overlap=True`` the rounds run as the **plan/compute/commit
+pipeline**: each round's indexer scores drive a speculative H2D stage
+into a double-buffered slab, so most of the next round's misses arrive
+pre-staged (watch the prefetch hit/miss/wasted counters in the report
+line) while the residual misses fall back to the synchronous gather —
+the emitted streams are bitwise identical to the synchronous path.
+
     PYTHONPATH=src python examples/serve_ess.py
 """
 
@@ -73,7 +80,7 @@ def main() -> None:
 
     engine = EssEngine(params, cfg, num_slots=NUM_SLOTS, max_seq=SMAX,
                        num_host_pages=num_pages, prefill_chunk=16,
-                       mtp_depth=2, tbo=True)
+                       mtp_depth=2, tbo=True, overlap=True)
     rids = [engine.submit(plen, sp) for plen, sp in workload]
 
     # drive serve rounds by hand (generate() would do the same loop);
@@ -106,6 +113,10 @@ def main() -> None:
           f"admissions blocked on pages: "
           f"{engine.session.sched.blocked_admissions}; "
           f"peak pages in use: {report.peak_pages_in_use}/{report.num_pages}")
+    print(f"async-offload pipeline: prefetch hits/misses/wasted rows "
+          f"{report.prefetch_hits}/{report.prefetch_misses}/"
+          f"{report.prefetch_wasted_rows} "
+          f"(hit rate {report.prefetch_hit_rate:.2f})")
     print("ttft (serve rounds from submit to first token): "
           + ", ".join(f"rid{r}={t}" for r, t in
                       sorted(report.ttft_rounds.items())))

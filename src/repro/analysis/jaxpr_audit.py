@@ -1,7 +1,7 @@
 """esslint layer 2 — lower every StepProgram and audit the serve
 contracts (:mod:`repro.analysis.contracts`).
 
-Four audits, each a thin driver over a pure checker (the checkers take
+Five audits, each a thin driver over a pure checker (the checkers take
 plain data so tests can exercise failure paths without lowering):
 
 * **ESS101 donation** — every round program donates the EngineState
@@ -19,6 +19,13 @@ plain data so tests can exercise failure paths without lowering):
 * **ESS104 dtype drift** — each program's output EngineState leaf
   dtypes equal its input leaf dtypes, and no ``convert_element_type``
   widens a cache-tier-sized bf16 tensor to f32.
+* **ESS105 no-blocking-stage** — with the async-offload pipeline on
+  (``prefetch > 0``), a backward slice of each decode/spec jaxpr must
+  show (a) the staged slab a round *consumes* feeding its tokens
+  output, and (b) the slab *refill* gather needed only for the
+  ``staged_rows`` output — a refill gather on the token path means the
+  round blocks on a transfer it should have overlapped into the next
+  round.
 
 Abstract lowering (ESS101/ESS104) uses ``ShapeDtypeStruct`` trees — no
 parameter memory is allocated.  The workload audits (ESS102/ESS103)
@@ -58,7 +65,8 @@ def _smoke_cfg(paged: bool = True):
     return dataclasses.replace(cfg, ess=ess, mtp_depth=2)
 
 
-def _abstract_state(cfg, num_slots: int, max_seq: int):
+def _abstract_state(cfg, num_slots: int, max_seq: int,
+                    prefetch: int = 0):
     from repro.cache import latent_cache as LC
     from repro.serving import state as ES
 
@@ -69,7 +77,8 @@ def _abstract_state(cfg, num_slots: int, max_seq: int):
         caches = LC.init_ess_caches(cfg, num_slots, max_seq,
                                     cfg.param_dtype, num_pages=num_pages,
                                     map_slots=not paged)
-        return ES.init_engine_state(cfg, caches, num_slots)
+        return ES.init_engine_state(cfg, caches, num_slots,
+                                    prefetch_rows=prefetch)
 
     return jax.eval_shape(build)
 
@@ -90,16 +99,19 @@ class AuditTarget:
 
 def build_targets(cfg=None, *, num_slots: int = 2,
                   max_seq: Optional[int] = None, mtp_depth: int = 2,
-                  prefill_chunk: int = 8) -> list[AuditTarget]:
+                  prefill_chunk: int = 8,
+                  prefetch: int = 0) -> list[AuditTarget]:
     """Every round-program variant of one shape family, with abstract
-    arguments ready for ``.lower()`` / ``jax.eval_shape``."""
+    arguments ready for ``.lower()`` / ``jax.eval_shape``.
+    ``prefetch > 0`` builds the pipelined variants (staging slab in
+    state, prefetch-aware step programs)."""
     from repro.serving import step as SP
     cfg = cfg if cfg is not None else _smoke_cfg()
     max_seq = max_seq if max_seq is not None else next(_FRESH_SEQ)
     params = _abstract_params(cfg)
-    state = _abstract_state(cfg, num_slots, max_seq)
+    state = _abstract_state(cfg, num_slots, max_seq, prefetch)
     programs = SP.get_programs(cfg, num_slots, max_seq, False, False,
-                               mtp_depth)
+                               mtp_depth, prefetch)
     i32 = lambda shape=(): jax.ShapeDtypeStruct(shape, jnp.int32)  # noqa: E731
     targets = [AuditTarget("decode", programs.decode(True),
                            (params, state), state)]
@@ -195,10 +207,13 @@ def _mixed_requests():
 
 
 def audit_fetch_counts(cfg=None, *, session_cls=None, mtp_depth: int = 0,
-                       max_seq: Optional[int] = None) -> list[Finding]:
+                       max_seq: Optional[int] = None,
+                       overlap: bool = False) -> list[Finding]:
     """Drive a real mixed workload counting ``jax.device_get`` per serve
     round.  ``session_cls`` is injectable so tests can demonstrate the
-    audit catching a session that sneaks extra fetches."""
+    audit catching a session that sneaks extra fetches.  ``overlap=True``
+    drives the pipelined session — async staging must ride the same
+    single packed fetch, not add host syncs."""
     from repro.models import transformer as T
     from repro.models.params import init_params
     from repro.serving import engine as E
@@ -208,7 +223,7 @@ def audit_fetch_counts(cfg=None, *, session_cls=None, mtp_depth: int = 0,
     params = init_params(jax.random.key(0), T.model_def(cfg))
     session = session_cls(params, cfg, num_slots=2, max_seq=max_seq,
                           prefill_chunk=8, compiled=True,
-                          mtp_depth=mtp_depth)
+                          mtp_depth=mtp_depth, overlap=overlap)
     for r in _mixed_requests():
         session.submit(r)
     counts = []
@@ -388,6 +403,111 @@ def audit_dtypes(cfg=None, *, targets=None, **kw) -> list[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# ESS105: no blocking stage (pipeline overlap)
+# ---------------------------------------------------------------------------
+
+def _slice_jaxpr(jaxpr, out_positions: set) -> tuple[set, set]:
+    """Backward slice: which invar positions and which gather equations
+    (by ``id``) are needed to compute ``jaxpr.outvars[i]`` for the given
+    positions.
+
+    Descends *precisely* into arity-matched ``pjit`` calls (only the
+    needed inner outputs propagate demand to the outer inputs) and
+    *conservatively* into every other call-like primitive — cond / scan /
+    while mark all their invars needed and count every gather in every
+    branch.  Conservatism only widens the needed sets, so a clean
+    verdict ("this gather is exclusive to the slab output") is sound.
+    """
+    needed = set()
+    for i in out_positions:
+        v = jaxpr.outvars[i]
+        if not isinstance(v, jax.core.Literal):
+            needed.add(v)
+    gathers: set = set()
+    for eqn in reversed(jaxpr.eqns):
+        if not any(v in needed for v in eqn.outvars):
+            continue
+        sub = eqn.params.get("jaxpr") \
+            if eqn.primitive.name == "pjit" else None
+        if (sub is not None
+                and len(sub.jaxpr.invars) == len(eqn.invars)
+                and len(sub.jaxpr.outvars) == len(eqn.outvars)):
+            sub_out = {i for i, v in enumerate(eqn.outvars) if v in needed}
+            sub_in, sub_g = _slice_jaxpr(sub.jaxpr, sub_out)
+            gathers |= sub_g
+            for i in sub_in:
+                v = eqn.invars[i]
+                if not isinstance(v, jax.core.Literal):
+                    needed.add(v)
+        else:
+            if eqn.primitive.name == "gather":
+                gathers.add(id(eqn))
+            for j in _jaxpr_subfuns(eqn.params):
+                for se in _iter_eqns(j):
+                    if se.primitive.name == "gather":
+                        gathers.add(id(se))
+            for v in eqn.invars:
+                if not isinstance(v, jax.core.Literal):
+                    needed.add(v)
+    invar_positions = {i for i, v in enumerate(jaxpr.invars) if v in needed}
+    return invar_positions, gathers
+
+
+def check_pipeline_overlap(kind: str, *, consumes_staged: bool,
+                           n_exclusive_gathers: int) -> list[Finding]:
+    """Pure checker over the two sliced facts of one round program."""
+    out = []
+    if not consumes_staged:
+        out.append(Finding(
+            rule="ESS105", path=_AUDIT_PATH, line=0, scope=kind,
+            message=f"{kind}: the staged_rows input never reaches the "
+                    f"tokens output — the pipeline stages rows the round "
+                    f"does not consume (dead prefetch)"))
+    if n_exclusive_gathers < 1:
+        out.append(Finding(
+            rule="ESS105", path=_AUDIT_PATH, line=0, scope=kind,
+            message=f"{kind}: no gather is exclusive to the staged_rows "
+                    f"output — the slab refill sits on the token critical "
+                    f"path, so the round blocks on its own prefetch "
+                    f"instead of overlapping it into the next round"))
+    return out
+
+
+def audit_pipeline_overlap(cfg=None, *, targets=None, **kw
+                           ) -> list[Finding]:
+    """Slice each pipelined decode/spec program and verify the staging
+    contract (:data:`contracts.ESS105_STAGED_ROWS_LEAF`): consumed slab
+    on the token path, refill gather off it."""
+    if targets is None:
+        kw.setdefault("prefetch", 4)
+        targets = build_targets(cfg, **kw)
+    findings = []
+    for t in targets:
+        if t.kind not in ("decode", "spec"):
+            continue
+        if getattr(t.state, "staged_rows", None) is None:
+            findings.append(Finding(
+                rule="ESS105", path=_AUDIT_PATH, line=0, scope=t.kind,
+                message=f"{t.kind}: no staging slab in EngineState — "
+                        f"build targets with prefetch > 0"))
+            continue
+        n_params = len(jax.tree.leaves(t.args[0]))
+        n_state = len(jax.tree.leaves(t.state))
+        jaxpr = jax.make_jaxpr(t.fn)(*t.args).jaxpr
+        # flattened invars = params then state; outvars = state then
+        # RoundOut (tokens first).  staged_rows is pinned to the state
+        # tail (contracts.ESS105_STAGED_ROWS_LEAF).
+        rows_in = n_params + n_state + C.ESS105_STAGED_ROWS_LEAF
+        tok_in, tok_g = _slice_jaxpr(jaxpr, {n_state})
+        _, slab_g = _slice_jaxpr(
+            jaxpr, {n_state + C.ESS105_STAGED_ROWS_LEAF})
+        findings += check_pipeline_overlap(
+            t.kind, consumes_staged=rows_in in tok_in,
+            n_exclusive_gathers=len(slab_g - tok_g))
+    return findings
+
+
+# ---------------------------------------------------------------------------
 # the full audit
 # ---------------------------------------------------------------------------
 
@@ -404,6 +524,18 @@ def run_all(*, paged: bool = True, dense: bool = True,
                   + audit_dtypes(targets=targets)):
             findings.append(dataclasses.replace(
                 f, scope=f"{name}/{f.scope}"))
+    if paged:
+        # pipelined (async-offload) variant of the paged tier: the
+        # staging slab joins the donated state, so ESS101/ESS104 must
+        # hold over the extra leaves, and ESS105 checks the refill
+        # gather stays off the token critical path.
+        cfg = _smoke_cfg(paged=True)
+        targets = build_targets(cfg, prefetch=4)
+        for f in (audit_donation(targets=targets)
+                  + audit_dtypes(targets=targets)
+                  + audit_pipeline_overlap(targets=targets)):
+            findings.append(dataclasses.replace(
+                f, scope=f"paged+pf/{f.scope}"))
     if workload:
         cfg = _smoke_cfg()
         for f in (audit_fetch_counts(cfg)
@@ -411,4 +543,7 @@ def run_all(*, paged: bool = True, dense: bool = True,
                   + audit_retrace(cfg)):
             findings.append(dataclasses.replace(
                 f, scope=f"paged/{f.scope}"))
+        for f in audit_fetch_counts(cfg, overlap=True):
+            findings.append(dataclasses.replace(
+                f, scope=f"paged+pf/{f.scope}"))
     return findings

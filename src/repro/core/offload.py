@@ -314,6 +314,49 @@ def host_scatter_rows_stacked(host_cache: jax.Array, ids: jax.Array,
         rows.astype(host_cache.dtype), mode="drop")
 
 
+def gather_into_slab(host_cache: jax.Array, ids: jax.Array, *,
+                     slot_mask: jax.Array | None, batch_offset: int = 0,
+                     block_table: jax.Array | None = None) -> jax.Array:
+    """Async-offload staging gather: the H2D half of the split transfer.
+
+    ``ids [L,B,P]`` are *per-layer* predicted positions (``-1`` = not
+    staged); the result ``[L,B,P,D]`` is the device-resident landing slab
+    round ``N+1`` computes against.  Each layer routes through the same
+    FlashTrans gather as the synchronous fetch, so a staged row is
+    bit-identical to what the fallback would read — speculation can be
+    wasted, never wrong.
+
+    ``slot_mask`` is required keyword-only (ESS001): staging rows for a
+    frozen slot would land the previous occupant's pages in the slab."""
+    if slot_mask is not None:
+        ids = jnp.where(slot_mask[None, :, None], ids, -1)
+    return jnp.stack([
+        host_gather_rows(host_cache, ids[layer], layer=layer,
+                         batch_offset=batch_offset,
+                         block_table=block_table)
+        for layer in range(ids.shape[0])])
+
+
+def scatter_from_slab(host_cache: jax.Array, ids: jax.Array,
+                      rows: jax.Array, *, slot_mask: jax.Array | None,
+                      batch_offset: int = 0,
+                      block_table: jax.Array | None = None) -> jax.Array:
+    """Async-offload spill flush: the D2H half of the split transfer.
+
+    ``rows [L,B,Q,D]`` is the round's spill slab — every layer's freshly
+    appended latents, collected during compute and committed in **one**
+    stacked scatter at the commit stage (the synchronous round pays L
+    per-layer functional pool rewrites instead).  Positions ``ids
+    [B,Q]`` are shared across layers; ``-1`` rows drop.
+
+    ``slot_mask`` is required keyword-only (ESS001), exactly as in
+    :func:`host_scatter_rows`."""
+    return host_scatter_rows_stacked(host_cache, ids, rows,
+                                     slot_mask=slot_mask,
+                                     batch_offset=batch_offset,
+                                     block_table=block_table)
+
+
 def abstract_host(shape, dtype, *axes):
     """ShapeDtypeStruct pinned to host for the dry-run."""
     ctx = shd.current()

@@ -140,25 +140,23 @@ def _topk_and_lookup(idx_p, cfg, x_norm, state, idx_keys, lens, slot_mask):
     # request the same position twice (skip the O(K^2) dedup at Q=1)
     pool, lk, stats = LP.lookup(state.pool, flat_ids, flat_valid, M_env,
                                 slot_mask=slot_mask, dedup=Q > 1)
-    return pool, lk, stats, ids, req_valid, K, M_env
+    return pool, lk, stats, ids, req_valid, K, M_env, sc
 
 
-def _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
-                overlap, use_kernel, slot_mask=None):
+def _finish_attention(mla_p, cfg, x_norm, positions, pool, lk, ids,
+                      req_valid, fetched, K, M_env, overlap, use_kernel,
+                      slot_mask):
+    """Attention + LRU admission over already-resolved miss rows: Attn0
+    on pool-resident rows ∥ Attn1 on ``fetched`` with the exact partial
+    merge (or one union attention for ``overlap="none"``).  Shared by the
+    synchronous gather path and the staged-slab path — they differ only
+    in where ``fetched`` came from, so value-identical sourcing gives
+    bit-identical outputs (the async-offload parity bar).  Returns
+    ``(out, pool-after-admit)``; the caller ticks the clock."""
     B, Q, _ = x_norm.shape
-    pool, lk, stats, ids, req_valid, K, M_env = _topk_and_lookup(
-        idx_p, cfg, x_norm, state, idx_keys, lens, slot_mask)
-
-    # ---- issue the H2D fetch as early as possible (DA overlap) ----
-    fetched = offload.host_gather_rows(state.host_latent, lk.miss_ids,
-                                       layer=state.layer,
-                                       batch_offset=state.batch_offset,
-                                       block_table=state.block_table)
-
     q_comb = M.absorbed_query(mla_p, cfg, x_norm, positions)     # [B,Q,H,D]
 
     hit = lk.hit.reshape(B, Q, K)
-    slot = lk.slot.reshape(B, Q, K)
     if overlap == "none":
         # single attention over the union: every row depends on the fetch
         rows_hit, _ = LP.gather_resident(pool, lk.slot, lk.hit)
@@ -193,9 +191,121 @@ def _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
     out = M.output_proj(mla_p, cfg, out_lat)
 
     pool = LP.admit(pool, lk.miss_ids, fetched, slot_mask=slot_mask)
+    return out, pool
+
+
+def _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
+                overlap, use_kernel, slot_mask=None):
+    pool, lk, stats, ids, req_valid, K, M_env, _ = _topk_and_lookup(
+        idx_p, cfg, x_norm, state, idx_keys, lens, slot_mask)
+
+    # ---- issue the H2D fetch as early as possible (DA overlap) ----
+    fetched = offload.host_gather_rows(state.host_latent, lk.miss_ids,
+                                       layer=state.layer,
+                                       batch_offset=state.batch_offset,
+                                       block_table=state.block_table)
+
+    out, pool = _finish_attention(mla_p, cfg, x_norm, positions, pool, lk,
+                                  ids, req_valid, fetched, K, M_env,
+                                  overlap, use_kernel, slot_mask)
     pool = LP.tick(pool)
     new_state = state._replace(pool=pool)
     return out, new_state, ESSStats(stats.hits, stats.misses, stats.overflow)
+
+
+def ess_sparse_attention_staged(mla_p: dict, idx_p: dict, cfg: ArchConfig,
+                                x_norm: jax.Array, positions: jax.Array,
+                                state: ESSLayerState, idx_keys: jax.Array,
+                                lens: jax.Array, *, new_rows: jax.Array,
+                                widx: jax.Array, staged_ids_l: jax.Array,
+                                staged_rows_l: jax.Array,
+                                overlap: str = "da",
+                                use_kernel: bool = False,
+                                slot_mask: jax.Array | None = None):
+    """One layer of ESS decode attention sourcing miss rows from the
+    async-offload staging slab instead of a synchronous host gather (the
+    pipeline's compute stage).
+
+    The *selection* semantics (indexer scores, top-K, pool lookup, miss
+    buffer, LRU admission) are exactly :func:`ess_sparse_attention`'s —
+    only row *sourcing* changes, resolved in precedence order:
+
+    1. **own-row bypass** — the round's freshly appended latents
+       (``new_rows [B,Q,D]`` at positions ``widx [B,Q]``) are still in
+       the spill slab (their D2H is deferred to the commit stage), so a
+       miss on them is served from the live activations.  Bit-identical
+       to the synchronous host round trip: the scatter stores
+       ``astype(host dtype)`` and the gather reads it back verbatim.
+    2. **staged-slab match** — rows predicted and prefetched during the
+       *previous* round (``staged_ids_l/staged_rows_l [B,P(,D)]``).
+    3. **synchronous fallback** — mispredicted misses gather from the
+       host tier under a nested ``lax.cond``: a fully-predicted round
+       keeps the H2D path off the critical graph entirely.
+
+    The whole sourcing block sits under one ``lax.cond`` on the round
+    having any valid miss at all: a steady-state round whose top-K is
+    fully pool-resident pays a single skipped branch instead of the
+    per-layer match machinery (the plan stage rides *every* round, so
+    its cost bounds the pipeline's overhead floor — which is also why
+    the planning inputs are returned to the round driver and ranked
+    once, batched across layers, rather than per layer here).
+
+    Returns ``(out, new_state, stats, plan_sig, (hits, unmatched) [B]
+    each)`` — ``plan_sig = (sc_last [B,S], qlens_last [B], slot_of
+    [B,S])`` is this layer's plan-stage signal (last query's indexer
+    scores, its horizon, post-admit pool residency); the counters are
+    gated on ``slot_mask`` so frozen slots contribute zero.
+    ``overlap="dba"`` degrades to the DA graph (the slab already
+    decouples the fetch the batch-split indexer would have hidden)."""
+    from repro.core import transfer as TR
+    B, Q, _ = x_norm.shape
+    live = jnp.ones((B,), bool) if slot_mask is None else slot_mask
+    pool, lk, stats, ids, req_valid, K, M_env, sc = _topk_and_lookup(
+        idx_p, cfg, x_norm, state, idx_keys, lens, slot_mask)
+
+    mvalid = lk.miss_ids >= 0
+    D = new_rows.shape[-1]
+
+    def _source_rows():
+        own_eq = (lk.miss_ids[:, :, None] == widx[:, None, :]) \
+            & (widx >= 0)[:, None, :]                            # [B,M,Q]
+        own = own_eq.any(-1)
+        own_rows = jnp.take_along_axis(
+            new_rows, jnp.argmax(own_eq, -1)[:, :, None], axis=1)  # [B,M,D]
+        need = mvalid & ~own
+        smatch, srows = TR.match_staged(staged_ids_l, staged_rows_l,
+                                        lk.miss_ids, need)
+        unmatched = need & ~smatch
+        fb_ids = jnp.where(unmatched, lk.miss_ids, -1)
+        fb = jax.lax.cond(
+            jnp.any(unmatched),
+            lambda: offload.host_gather_rows(state.host_latent, fb_ids,
+                                             layer=state.layer,
+                                             batch_offset=state.batch_offset,
+                                             block_table=state.block_table),
+            lambda: jnp.zeros((B, M_env, D), new_rows.dtype))
+        fetched = jnp.where(own[..., None], own_rows,
+                            jnp.where(smatch[..., None], srows, fb))
+        return (jnp.where(mvalid[..., None], fetched, 0),
+                smatch.sum(-1).astype(jnp.int32),
+                unmatched.sum(-1).astype(jnp.int32))
+
+    fetched, s_hits, s_unm = jax.lax.cond(
+        jnp.any(mvalid), _source_rows,
+        lambda: (jnp.zeros((B, M_env, D), new_rows.dtype),
+                 jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32)))
+
+    out, pool = _finish_attention(mla_p, cfg, x_norm, positions, pool, lk,
+                                  ids, req_valid, fetched, K, M_env,
+                                  "da" if overlap == "dba" else overlap,
+                                  use_kernel, slot_mask)
+    pool = LP.tick(pool)
+
+    qlast = lens[:, -1] if lens.ndim == 2 else lens
+    liv = live.astype(jnp.int32)
+    return out, state._replace(pool=pool), \
+        ESSStats(stats.hits, stats.misses, stats.overflow), \
+        (sc[:, -1], qlast, pool.slot_of), (s_hits * liv, s_unm * liv)
 
 
 def _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
@@ -221,14 +331,14 @@ def _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
 
     s0, s1 = half(slice(0, h), 0), half(slice(h, None), h)
     # half-1 indexer + fetch issue
-    p0_pool, lk0, st0, ids0, rv0, K, M_env = _topk_and_lookup(
+    p0_pool, lk0, st0, ids0, rv0, K, M_env, _ = _topk_and_lookup(
         idx_p, cfg, x_norm[:h], s0, idx_keys[:h], lens[:h], sm0)
     fetched0 = offload.host_gather_rows(s0.host_latent, lk0.miss_ids,
                                         layer=s0.layer,
                                         batch_offset=s0.batch_offset,
                                         block_table=s0.block_table)
     # half-2 indexer (independent of fetched0 -> overlaps the copy)
-    p1_pool, lk1, st1, ids1, rv1, _, _ = _topk_and_lookup(
+    p1_pool, lk1, st1, ids1, rv1, _, _, _ = _topk_and_lookup(
         idx_p, cfg, x_norm[h:], s1, idx_keys[h:], lens[h:], sm1)
     fetched1 = offload.host_gather_rows(s1.host_latent, lk1.miss_ids,
                                         layer=s1.layer,

@@ -1,0 +1,189 @@
+"""The async offload TransferEngine: double-buffered staging slabs +
+indexer-driven prefetch planning (NOSA's native-offloadable locality,
+KVDrive-style transfer pipelining — see PAPERS.md).
+
+The serve round is a three-stage pipeline — **plan → compute → commit** —
+and this module owns the transfer half of it.  Round ``N`` computes
+against rows *staged during round ``N-1``*; while it computes, round
+``N+1``'s predicted pages are already in flight.  Two slab buffers make
+that a two-deep software pipeline:
+
+* ``staged_ids  [L, B, P]``   the sequence positions staged per layer per
+  slot (``-1`` = empty / cancelled);
+* ``staged_rows [L, B, P, D]`` the host-tier latent rows gathered at those
+  positions, resident on device before the round that consumes them.
+
+Both live as **donated EngineState leaves** (:mod:`repro.serving.state`):
+XLA's donation aliasing is what implements the double buffering — each
+round program consumes slab ``N`` and produces slab ``N+1`` into the same
+storage, so the swap is free and the host never touches a row.
+
+Prediction is **indexer-driven** (the tentpole's plan stage): the
+Lightning-Indexer scores of a round's last query are a strong proxy for
+the next round's scores (top-K selections are stable step over step — the
+locality the paper's whole offload story rests on).  The planner stages
+the *predicted misses* — the ``P`` highest-scored positions that are
+not pool-resident: capacity misses the LRU just evicted out of the
+working set plus the margin about to rotate into the top-K — because
+those are, to first order, exactly the rows the next round's
+synchronous gather would have to fetch.  A wrong
+speculation is never wrong-*valued*: rows the compute stage needs but the
+slab lacks fall back to the synchronous gather inside the program, so the
+overlapped stream is bit-identical to the synchronous one (hit/miss/wasted
+accounting records how often speculation paid).
+
+Traced helpers (:func:`empty_slab`, :func:`plan_prefetch`,
+:func:`match_staged`) are pure fixed-shape JAX — they compile into the
+donated StepPrograms.  :class:`TransferEngine` is the *host-side*
+orchestrator the serve session drives at stage boundaries:
+``issue_stage`` arms (or re-arms) the slabs on an EngineState,
+``await_staged`` hands the compute stage its staged pair, ``commit``
+folds a round's fetched prefetch counters into the report, and the
+``invalidate_slot`` / ``truncate_slot`` edges cancel staged transfers
+whose rows a lifecycle transition (release, abort, stop-token rollback)
+just invalidated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def empty_slab(num_layers: int, num_slots: int, prefetch_rows: int,
+               dim: int, dtype) -> tuple[jax.Array, jax.Array]:
+    """A disarmed staging slab pair: no ids staged, zeroed landing rows."""
+    return (jnp.full((num_layers, num_slots, prefetch_rows), -1, jnp.int32),
+            jnp.zeros((num_layers, num_slots, prefetch_rows, dim), dtype))
+
+
+def plan_prefetch(sc_last: jax.Array, qlens_last: jax.Array,
+                  slot_of: jax.Array, live: jax.Array, topk: int,
+                  prefetch_rows: int) -> jax.Array:
+    """Plan one layer's next-round staging from this round's indexer scores.
+
+    ``sc_last [B,S]`` — the last query's indexer scores (the freshest
+    locality signal available before the round commits); ``qlens_last
+    [B]`` — that query's attention horizon (positions ``< qlens`` are
+    real); ``slot_of [B,S]`` — the *post-admit* pool inverse map;
+    ``live [B]`` — the slot gate.
+
+    Returns ``pred [B, P]`` (``-1`` padded): the **predicted top-K
+    misses** — the ``P`` highest-scored positions that are in horizon
+    and **not pool-resident**.  Those are, in score-rank order, exactly
+    the entries the next round's top-K selection would have to fetch
+    synchronously: capacity misses the LRU just evicted out of the
+    working set, and the margin about to rotate into the top-K.
+    Everything resident would be a guaranteed pool hit next round and
+    is never staged.  (One masked ``top_k`` of width ``P`` — the plan
+    stage rides every round, so it must stay far cheaper than the
+    gathers it hides.)
+    """
+    del topk  # the plan ranks *misses* by score; K never truncates it
+    B, S = sc_last.shape
+    in_range = jnp.arange(S)[None, :] < qlens_last[:, None]        # [B,S]
+    NEG = jnp.finfo(jnp.float32).min
+    cand = in_range & (slot_of < 0) & live[:, None]    # predictable misses
+    masked = jnp.where(cand, sc_last.astype(jnp.float32), NEG)
+    val, top = jax.lax.top_k(masked, min(prefetch_rows, S))        # [B,P]
+    pred = jnp.where(val > NEG / 2, top, -1)
+    if pred.shape[1] < prefetch_rows:
+        pred = jnp.pad(pred, ((0, 0), (0, prefetch_rows - pred.shape[1])),
+                       constant_values=-1)
+    return pred
+
+
+def match_staged(staged_ids_l: jax.Array, staged_rows_l: jax.Array,
+                 miss_ids: jax.Array, need: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Serve a round's miss buffer from one layer's staged slab.
+
+    ``staged_ids_l [B,P]`` / ``staged_rows_l [B,P,D]`` — the slab;
+    ``miss_ids [B,M]`` — the lookup's (duplicate-free) miss buffer;
+    ``need [B,M]`` — which misses actually require host rows (valid and
+    not satisfiable from the round's own appended rows).
+
+    Returns ``(matched [B,M], rows [B,M,D])`` — matched rows carry the
+    staged values (bit-identical to what the synchronous gather would
+    have fetched: the slab was filled from the committed host tier), the
+    rest are zero.
+    """
+    eq = (miss_ids[:, :, None] == staged_ids_l[:, None, :]) \
+        & (staged_ids_l >= 0)[:, None, :] & need[:, :, None]       # [B,M,P]
+    matched = eq.any(-1)
+    idx = jnp.argmax(eq, axis=-1)                                  # [B,M]
+    rows = jnp.take_along_axis(staged_rows_l, idx[:, :, None], axis=1)
+    return matched, jnp.where(matched[..., None], rows, 0)
+
+
+class TransferEngine:
+    """Host-side orchestrator of the staging slabs across the
+    plan → compute → commit pipeline.
+
+    The actual transfers are traced *inside* the donated round programs
+    (issuing them from the host would be a second per-round host sync and
+    a donation break); this object owns everything that happens at stage
+    and slot-lifecycle boundaries:
+
+    * :meth:`issue_stage` — arm fresh (empty) slabs on an EngineState:
+      session start, or any edge that must cancel *all* in-flight staging;
+    * :meth:`await_staged` — the staged pair the compute stage consumes
+      (the name is the pipeline contract: by the time a program reads the
+      slab, its H2D copy has already landed — XLA sequences the
+      dependency, the host never blocks on it);
+    * :meth:`commit` — fold a round's fetched hit/miss/wasted counters
+      into the :class:`~repro.serving.engine.ServeReport`;
+    * :meth:`invalidate_slot` / :meth:`truncate_slot` — cancel staged
+      transfers whose target rows a release / abort / stop-token rollback
+      just invalidated (a stale staged id would otherwise serve a
+      *different occupant's* row next round).
+    """
+
+    def __init__(self, num_layers: int, num_slots: int, prefetch_rows: int,
+                 dim: int, dtype):
+        self.num_layers = num_layers
+        self.num_slots = num_slots
+        self.prefetch_rows = prefetch_rows
+        self.dim = dim
+        self.dtype = dtype
+
+    # -- pipeline stages -----------------------------------------------------
+
+    def issue_stage(self, state):
+        """Arm the double buffer: install empty slabs (all transfers
+        cancelled; the next round stages from scratch)."""
+        ids, rows = empty_slab(self.num_layers, self.num_slots,
+                               self.prefetch_rows, self.dim, self.dtype)
+        return state._replace(staged_ids=ids, staged_rows=rows)
+
+    def await_staged(self, state):
+        """The (ids, rows) pair staged for the upcoming round."""
+        return state.staged_ids, state.staged_rows
+
+    def commit(self, report, pf_hits, pf_misses, pf_wasted) -> None:
+        """Commit-stage accounting: the counters ride the round's single
+        packed fetch (already host ints/arrays here)."""
+        report.prefetch_hits += int(pf_hits)
+        report.prefetch_misses += int(pf_misses)
+        report.prefetch_wasted_rows += int(pf_wasted)
+
+    # -- slot-lifecycle edges ------------------------------------------------
+
+    def invalidate_slot(self, state, slot: int):
+        """Cancel every staged transfer of one slot (release/abort)."""
+        if state.staged_ids is None:
+            return state
+        return state._replace(
+            staged_ids=state.staged_ids.at[:, slot].set(-1))
+
+    def truncate_slot(self, state, slot: int, new_len):
+        """Cancel staged transfers targeting rolled-back positions
+        (``>= new_len``) of one slot — the stop-token / rejection
+        rollback edge.  ``new_len`` may be a traced scalar (no host
+        sync)."""
+        if state.staged_ids is None:
+            return state
+        col = state.staged_ids[:, slot]                            # [L,P]
+        return state._replace(
+            staged_ids=state.staged_ids.at[:, slot].set(
+                jnp.where(col >= new_len, -1, col)))

@@ -310,6 +310,10 @@ class EssEngine:
             "admissions_blocked": self.session.sched.blocked_admissions,
             "peak_pages_in_use": rep.peak_pages_in_use,
             "num_pages": rep.num_pages,
+            "prefetch_hits": rep.prefetch_hits,
+            "prefetch_misses": rep.prefetch_misses,
+            "prefetch_wasted_rows": rep.prefetch_wasted_rows,
+            "prefetch_hit_rate": rep.prefetch_hit_rate,
         }
         m.update(latency_stats(self.session.token_events,
                                self.session._submit_time))

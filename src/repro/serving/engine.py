@@ -53,8 +53,10 @@ from repro.cache import latent_cache as LC
 from repro.configs.base import ArchConfig
 from repro.core import lru_pool as LP
 from repro.core import offload, warmup
+from repro.core import transfer as TR
 from repro.core.overlap import (ESSLayerState, _attend_rows,
-                                ess_sparse_attention)
+                                ess_sparse_attention,
+                                ess_sparse_attention_staged)
 from repro.distributed.sharding import shard
 from repro.models import layers as L
 from repro.models import mla as M
@@ -111,7 +113,9 @@ def _overlap_for_layer(cfg: ArchConfig, layer: int,
 def ess_decode(params, cfg: ArchConfig, tokens, positions,
                caches: LC.ESSCaches, *, use_kernel: bool = False,
                layerwise_policy: tuple[str, ...] | None = None,
-               slot_mask: jax.Array | None = None) -> DecodeOut:
+               slot_mask: jax.Array | None = None,
+               staged: tuple[jax.Array, jax.Array] | None = None
+               ) -> DecodeOut:
     """tokens [B,Q] -> logits [B,Q,V].  Q>1 = MTP draft verification.
 
     ``slot_mask`` [B] bool marks the live decode slots of a continuous
@@ -122,6 +126,21 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
     block table can alias a live slot's physical host page and its pool
     silently admits a garbage latent row that a future occupant then
     *hits* on.
+
+    ``staged`` switches the step into the **pipelined** round shape
+    (plan → compute → commit, the async-offload tentpole): it carries the
+    previous round's staging slab pair ``(staged_ids [L,B,P],
+    staged_rows [L,B,P,D])``.  The compute stage then sources miss rows
+    from the slab (:func:`repro.core.overlap.ess_sparse_attention_staged`
+    — own-round bypass, slab match, cond-gated sync fallback), the
+    per-layer D2H spill of new latents is deferred into **one** stacked
+    commit-stage scatter after the layer loop, and the plan stage gathers
+    next round's predicted rows into a fresh slab *after* that commit (so
+    the predictions may include this round's appends).  The stats dict
+    gains ``staged_ids`` / ``staged_rows`` (the next slab) and
+    ``pf_hits`` / ``pf_misses`` / ``pf_wasted`` ``[B]`` prefetch
+    counters.  ``staged=None`` is the synchronous path, bit-identical to
+    the pre-pipeline graph.
     """
     B, Q = tokens.shape
     x = L.embed(params["embed"], tokens).astype(cfg.param_dtype)
@@ -145,6 +164,9 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
     ikeys_all = caches.ikeys
     pools = caches.pools
     hits = misses = ovf = jnp.zeros((B,), jnp.int32)
+    lat_stack: list[jax.Array] = []    # staged mode: deferred D2H spill
+    plan_sigs: list[tuple] = []        # staged mode: per-layer plan signal
+    pf_h = pf_m = pf_w = jnp.zeros((B,), jnp.int32)
 
     for layer in range(cfg.num_layers):
         lp, is_moe = _layer_params(params, cfg, layer)
@@ -158,18 +180,35 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
             new_ik.astype(ikeys_all[layer].dtype), mode="drop")
         ikeys_all = ikeys_all[:layer] + (ik_l,) + ikeys_all[layer + 1:]
         new_lat = M.latent_entries(lp["mla"], cfg, h, positions) # [B,Q,D]
-        # masked slots' gating is already folded into widx (-1 rows drop)
-        host_latent = offload.host_scatter_rows(
-            host_latent, widx, new_lat, slot_mask=None, layer=layer,
-            block_table=caches.block_tables)
+        if staged is None:
+            # masked slots' gating is already folded into widx (-1 drops)
+            host_latent = offload.host_scatter_rows(
+                host_latent, widx, new_lat, slot_mask=None, layer=layer,
+                block_table=caches.block_tables)
+        else:
+            # pipelined: spill deferred to the commit stage (one stacked
+            # scatter after the loop); keep the host-dtype rows at hand so
+            # same-round misses are served from the live activations
+            lat_stack.append(new_lat.astype(host_latent.dtype))
 
         # --- ESS sparse attention (fetch ∥ Attn0, Attn1, merge, admit) ---
         st = ESSLayerState(pools[layer], host_latent, layer,
                            block_table=caches.block_tables)
         ov = _overlap_for_layer(cfg, layer, layerwise_policy)
-        attn, st2, stats = ess_sparse_attention(
-            lp["mla"], lp["indexer"], cfg, h, positions, st, ik_l, attn_lens,
-            overlap=ov, use_kernel=use_kernel, slot_mask=live)
+        if staged is None:
+            attn, st2, stats = ess_sparse_attention(
+                lp["mla"], lp["indexer"], cfg, h, positions, st, ik_l,
+                attn_lens, overlap=ov, use_kernel=use_kernel,
+                slot_mask=live)
+        else:
+            attn, st2, stats, sig, pf = ess_sparse_attention_staged(
+                lp["mla"], lp["indexer"], cfg, h, positions, st, ik_l,
+                attn_lens, new_rows=lat_stack[-1], widx=widx,
+                staged_ids_l=staged[0][layer],
+                staged_rows_l=staged[1][layer], overlap=ov,
+                use_kernel=use_kernel, slot_mask=live)
+            plan_sigs.append(sig)
+            pf_h, pf_m = pf_h + pf[0], pf_m + pf[1]
         pools = pools[:layer] + (st2.pool,) + pools[layer + 1:]
         x = x + attn
 
@@ -187,11 +226,61 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = L.unembed(params.get("unembed", params.get("embed")), x,
                        cap=cfg.logit_softcap)
+    stats_out = {"hits": hits, "misses": misses, "overflow": ovf,
+                 "hidden": x}
+    if staged is not None:
+        # --- commit stage: one stacked D2H spill of the round's appends --
+        host_latent = offload.scatter_from_slab(
+            host_latent, widx, jnp.stack(lat_stack), slot_mask=None,
+            block_table=caches.block_tables)
+        # --- plan stage: stage next round's predicted rows (after the
+        # commit, so predictions may target rows appended this round).
+        # The whole plan is gated on the round having *missed at all*: a
+        # zero-miss round proves residency covered the working set, so
+        # the freshest plan is the one already staged — the slab passes
+        # through untouched and the steady-state round pays one skipped
+        # cond instead of a top-k + gather.  Rounds that did miss rank
+        # the per-layer signals in one batched top-k rather than L
+        # separate ones ------------------------------------------------
+        Lh, P = staged[0].shape[0], staged[0].shape[2]
+
+        def _plan():
+            sc_all = jnp.stack([s[0] for s in plan_sigs])         # [L,B,S]
+            so_all = jnp.stack([s[2] for s in plan_sigs])         # [L,B,S]
+            pred = TR.plan_prefetch(
+                sc_all.reshape(Lh * B, -1), jnp.tile(plan_sigs[0][1], Lh),
+                so_all.reshape(Lh * B, -1), jnp.tile(live, Lh),
+                cfg.dsa.index_topk, P).reshape(Lh, B, P)          # [L,B,P]
+            # rows already staged last round are reused in place:
+            # committed host rows are append-only below the truncation
+            # edges, and every truncation edge cancels the staged ids it
+            # invalidates, so a surviving id's bytes cannot have changed.
+            # Only genuinely new ids touch the link — a plan that
+            # re-predicts a stable margin skips the H2D gather entirely.
+            old_ids, old_rows = staged
+            eq = (pred[..., None] == old_ids[..., None, :]) \
+                & (old_ids >= 0)[..., None, :] & (pred >= 0)[..., None]
+            have = eq.any(-1)                                     # [L,B,P]
+            src = jnp.argmax(eq, axis=-1)
+            reused = jnp.take_along_axis(old_rows, src[..., None], axis=2)
+            new_ids = jnp.where(have, -1, pred)
+            new_slab_rows = jax.lax.cond(
+                jnp.any(new_ids >= 0),
+                lambda: offload.gather_into_slab(
+                    host_latent, new_ids, slot_mask=None,
+                    block_table=caches.block_tables),
+                lambda: jnp.zeros_like(staged[1]))
+            return pred, jnp.where(have[..., None], reused, new_slab_rows)
+
+        pred, slab_rows = jax.lax.cond(jnp.any(misses > 0), _plan,
+                                       lambda: staged)
+        pf_w = ((staged[0] >= 0).sum((0, 2)).astype(jnp.int32)
+                * live.astype(jnp.int32) - pf_h)
+        stats_out.update(staged_ids=pred, staged_rows=slab_rows,
+                         pf_hits=pf_h, pf_misses=pf_m, pf_wasted=pf_w)
     new_caches = caches._replace(lens=new_lens, host_latent=host_latent,
                                  ikeys=ikeys_all, pools=pools)
-    return DecodeOut(logits, new_caches,
-                     {"hits": hits, "misses": misses, "overflow": ovf,
-                      "hidden": x})
+    return DecodeOut(logits, new_caches, stats_out)
 
 
 def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
@@ -396,6 +485,13 @@ def ess_prefill(params, cfg: ArchConfig, tokens, positions, max_seq: int,
 # Continuous-batching serve loop (scheduler + paged host tier)
 # ---------------------------------------------------------------------------
 
+# depth of the round pipeline: a freshly promoted slot needs this many
+# decode rounds before its slab/working set reach steady state (round N
+# computes against rows staged in round N-1, which planned off round
+# N-2's scores)
+PIPELINE_FILL_ROUNDS = 2
+
+
 @dataclasses.dataclass
 class ServeReport:
     rounds: int = 0                     # decode rounds actually stepped
@@ -403,6 +499,24 @@ class ServeReport:
     prefill_chunks: int = 0             # chunked-prefill steps run
     prefill_tokens: int = 0             # prompt tokens prefilled
     wall_s: float = 0.0
+    # wall time spent inside decode rounds only (plan stage -> commit
+    # stage of rounds that actually stepped a program).  `rounds_per_s`
+    # uses it so admission-only / prefill-only rounds — the pipeline's
+    # fill and drain — don't dilute the decode cadence.
+    decode_wall_s: float = 0.0
+    # decode rounds inside a slot's pipeline-fill window (its first
+    # PIPELINE_FILL_ROUNDS rounds after promotion: the slab is empty and
+    # the working set cold).  Counted in `rounds` but excluded — numerator
+    # *and* denominator — from `rounds_per_s`, identically in sync and
+    # overlapped modes, so the cadence compares steady-state rounds only
+    # instead of double-counting the pipeline's fill/drain.
+    fill_rounds: int = 0
+    # async-offload prefetch accounting (summed over layers and slots):
+    # staged rows that served misses / misses that fell back to the
+    # synchronous gather / staged rows nobody requested
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    prefetch_wasted_rows: int = 0
     finished_rids: list = dataclasses.field(default_factory=list)
     admissions_blocked: int = 0         # admit attempts gated on resources
     peak_pages_in_use: int = 0          # sampled every serve round
@@ -432,7 +546,14 @@ class ServeReport:
 
     @property
     def rounds_per_s(self) -> float:
-        return self.rounds / self.wall_s if self.wall_s > 0 else 0.0
+        denom = self.decode_wall_s if self.decode_wall_s > 0 else self.wall_s
+        return (self.rounds - self.fill_rounds) / denom if denom > 0 else 0.0
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        """Staged-row hits / miss-buffer entries needing host rows."""
+        tot = self.prefetch_hits + self.prefetch_misses
+        return self.prefetch_hits / tot if tot else 0.0
 
     @property
     def accept_rate(self) -> float:
@@ -444,6 +565,14 @@ class ServeReport:
     def mean_ttft_s(self) -> float:
         vals = list(self.ttft_s.values())
         return sum(vals) / len(vals) if vals else 0.0
+
+
+class _RoundPlan(NamedTuple):
+    """Output of the round pipeline's plan stage (host-side half)."""
+    active: list            # slots stepping this round
+    pending: list           # (slot, req, t0_dev) deferred first tokens
+    spec: bool              # MTP draft+verify round?
+    t0: float               # plan-stage entry time (decode_wall_s)
 
 
 @dataclasses.dataclass
@@ -515,7 +644,9 @@ class ServeSession:
                  prompt_fn: Optional[Callable[[Request], jax.Array]] = None,
                  do_warmup: bool = False, use_kernel: bool = False,
                  prefill_chunk: int = 64, mtp_depth: int = 0,
-                 tbo: bool = False, compiled: bool = True):
+                 tbo: bool = False, compiled: bool = True,
+                 overlap: bool = False,
+                 prefetch_rows: Optional[int] = None):
         self.params = params
         self.cfg = cfg
         self.num_slots = num_slots
@@ -529,6 +660,16 @@ class ServeSession:
                              f"{cfg.mtp_depth} stacked draft modules")
         self.mtp_depth = max(0, mtp_depth)
         self.tbo = tbo and num_slots >= 2
+        # async-offload pipeline: size the staging slab to the steady
+        # -state miss envelope (the same max_miss_ratio * K bound the
+        # lookup provisions) unless the caller pins it explicitly
+        self.overlap = overlap
+        if overlap:
+            self.prefetch_rows = prefetch_rows if prefetch_rows is not None \
+                else max(1, int(cfg.ess.max_miss_ratio
+                                * min(cfg.dsa.index_topk, max_seq)))
+        else:
+            self.prefetch_rows = 0
         self.paged = LC.uses_paged_host(cfg)
         blocks_per_slot = LC.num_blocks(cfg, max_seq) if cfg.ess.enabled \
             else 0
@@ -546,10 +687,19 @@ class ServeSession:
         # per-slot sampling knobs + live/sampling masks.  The compiled
         # StepPrograms donate it every round; host code touches it only
         # at slot-lifecycle edges with .at[slot] updates.
-        self.state = ES.init_engine_state(cfg, caches, num_slots)
+        self.state = ES.init_engine_state(cfg, caches, num_slots,
+                                          prefetch_rows=self.prefetch_rows)
+        # the host half of the pipeline (slab arming + lifecycle-edge
+        # cancellation + commit accounting); None when synchronous
+        self.transfer: Optional[TR.TransferEngine] = None
+        if self.prefetch_rows > 0:
+            self.transfer = TR.TransferEngine(
+                cfg.num_layers, num_slots, self.prefetch_rows,
+                caches.host_latent.shape[-1], caches.host_latent.dtype)
         self._programs = SP.get_programs(cfg, num_slots, max_seq,
                                          use_kernel, self.tbo,
-                                         self.mtp_depth)
+                                         self.mtp_depth,
+                                         self.prefetch_rows)
         self.pool_entries_per_slot = LC.pool_entries(cfg, max_seq)
         self.free_pool_entries = num_slots * self.pool_entries_per_slot
         self.sched = Scheduler(num_slots, max_seq,
@@ -582,6 +732,9 @@ class ServeSession:
         # the round's single device_get (one-fetch contract); the normal
         # step_round cadence holds at most one entry
         self._pending_first: list[tuple] = []
+        # decode rounds each slot has run since its promotion — the
+        # pipeline-fill window detector for ServeReport.fill_rounds
+        self._rounds_since_promote: dict[int, int] = {}
         self._round = 0
         self._submit_round: dict[int, int] = {}
         self._submit_time: dict[int, float] = {}
@@ -647,6 +800,7 @@ class ServeSession:
             self.caches = LC.unmap_slot(self.caches, slot)
         self.caches = LC.reset_slot(self.caches, slot)
         self.state = ES.release_slot(self.state, slot)
+        self._rounds_since_promote.pop(slot, None)
         self.free_pool_entries += self.pool_entries_per_slot
 
     def _sample_pages(self) -> None:
@@ -820,6 +974,7 @@ class ServeSession:
             else:
                 req = task.req
                 self.sched.promote(slot)
+                self._rounds_since_promote[slot] = 0
                 del self._prefill[slot]
                 self._pending_first.append((slot, req, t0_dev))
         return True
@@ -856,23 +1011,26 @@ class ServeSession:
         self.state = ES.promote_slot(self.state, slot, t0, hid_last[0])
         return t0
 
-    def _deliver_first_token(self, slot: int, req: Request,
-                             t0: int) -> Optional[str]:
+    def _deliver_first_token(self, slot: int, req: Request, t0: int,
+                             now: Optional[float] = None) -> Optional[str]:
         """Deliver a freshly promoted slot's first token (stream + event
-        + TTFT stamps).  Returns the terminal kind if the request is
-        already done at its first token — ``"stop"`` (t0 is an EOS/stop
-        token) or ``"length"`` (``max_new_tokens == 1`` spent the whole
-        budget) — else ``None``."""
+        + TTFT stamps).  ``now`` is the round's delivery time — the
+        instant the packed fetch landed on the host — so latency stamps
+        measure when the token became *available*, not when the commit
+        stage's bookkeeping got around to it.  Returns the terminal kind
+        if the request is already done at its first token — ``"stop"``
+        (t0 is an EOS/stop token) or ``"length"`` (``max_new_tokens ==
+        1`` spent the whole budget) — else ``None``."""
+        if now is None:
+            now = time.perf_counter()
         self.outputs[req.rid] = [t0]
-        self._event(TokenEvent(rid=req.rid, token=t0, index=0,
-                               t=time.perf_counter()))
+        self._event(TokenEvent(rid=req.rid, token=t0, index=0, t=now))
         rid = req.rid
         ttft = self._round - self._submit_round[rid]
         # a preempted request's first token was already delivered by its
         # first attempt: keep that TTFT
         self.report.ttft_rounds.setdefault(rid, ttft)
-        self.report.ttft_s.setdefault(
-            rid, time.perf_counter() - self._submit_time[rid])
+        self.report.ttft_s.setdefault(rid, now - self._submit_time[rid])
         self.report.events.append(
             f"round {self._round}: rid={rid} first token ready "
             f"(ttft {ttft} rounds)")
@@ -894,6 +1052,7 @@ class ServeSession:
         delivery to :meth:`decode_round`'s packed fetch instead.)"""
         req = task.req
         self.sched.promote(slot)
+        self._rounds_since_promote[slot] = 0
         del self._prefill[slot]
         done = self._deliver_first_token(slot, req, t0)
         if done == "stop":
@@ -936,8 +1095,8 @@ class ServeSession:
         return sample(request_key(req.sample_seed, index), logits,
                       req.temperature, req.top_k, req.top_p)
 
-    def _emit(self, slot: int, req: Request,
-              tokens: list[int]) -> tuple[int, bool]:
+    def _emit(self, slot: int, req: Request, tokens: list[int],
+              now: Optional[float] = None) -> tuple[int, bool]:
         """Deliver a round's emitted tokens for one slot: extend the
         request's output stream (as TokenEvents too) and return
         ``(generated-budget charge, stop-token hit)``.
@@ -952,7 +1111,11 @@ class ServeSession:
         EOS/stop-token termination cuts *within* the round: the stream
         ends exactly at the stop position (the stop token is the last
         delivery) and the caller rolls back the over-accepted suffix an
-        MTP verify round may have appended past it."""
+        MTP verify round may have appended past it.
+
+        ``now`` (the round's post-fetch delivery instant) stamps the
+        TokenEvents, keeping ITL a delivery-latency measure rather than
+        a commit-latency one."""
         out = self.outputs.setdefault(req.rid, [])
         delivered = tokens[:max(0, self.sched.remaining(slot))]
         stops = req.stop_set
@@ -963,7 +1126,8 @@ class ServeSession:
                     delivered = delivered[:j + 1]
                     stopped = True
                     break
-        now = time.perf_counter()
+        if now is None:
+            now = time.perf_counter()
         for t in delivered:
             self._event(TokenEvent(rid=req.rid, token=t, index=len(out),
                                    t=now))
@@ -987,21 +1151,25 @@ class ServeSession:
         pools = tuple(LP.invalidate_beyond(p, new_lens)
                       for p in caches.pools)
         self.caches = caches._replace(lens=new_lens, pools=pools)
+        if self.transfer is not None:
+            # cancel staged transfers landing beyond the rollback point —
+            # their host rows are about to be overwritten by the re-append
+            # and would otherwise serve dead-draft latents next round.
+            # new_lens[slot] stays a traced device scalar: an int() here
+            # would be a second host sync inside the round (ESS102).
+            self.state = self.transfer.truncate_slot(self.state, slot,
+                                                     new_lens[slot])
 
-    def decode_round(self) -> list[Request]:
-        """One decode round over the running slots; returns newly
-        finished.
-
-        The whole round — model step (Q=1, or the fused MTP draft+verify
-        when ``mtp_depth > 0``, TBO halves included), greedy/sampled
-        token selection, ``tok``/``hidden`` carries — runs as one
-        StepProgram over the donated device state; inactive and
-        mid-prefill slots are masked *inside* the step (``slot_mask``):
-        their host pages, pool state and ``lens`` are untouched.  The
-        host fetches exactly one packed ``(tokens, n_emit)`` struct —
-        when a slot finished its prefill this round, its deferred first
-        token rides the same fetch — and does scheduler bookkeeping +
-        stream emission with it."""
+    def _plan_round(self) -> Optional["_RoundPlan"]:
+        """**Plan stage** of the round pipeline: decide what this round
+        runs before any device work — sample page pressure, collect the
+        just-promoted slots whose first tokens are still on device, and
+        pick the round kind.  Returns ``None`` when no slot is active
+        (a pipeline fill/drain round: nothing to compute, and the round
+        is *not* counted toward the decode cadence).  The speculative
+        plan half — which rows to stage for round N+1 — is traced inside
+        the round program itself (``ess_decode``'s plan stage), where the
+        indexer scores live."""
         self._sample_pages()
         pending, self._pending_first = self._pending_first, []
         # drop stale entries (slot preempted/aborted before its first
@@ -1012,24 +1180,44 @@ class ServeSession:
         active = self.sched.active_slots()
         if not active:
             assert not pending       # a promoted slot is always active
-            return []
-        spec = self.mtp_depth > 0
-        fn = self._programs.spec(self.compiled) if spec \
+            return None
+        return _RoundPlan(active=active, pending=pending,
+                          spec=self.mtp_depth > 0,
+                          t0=time.perf_counter())
+
+    def _compute_round(self, plan: "_RoundPlan") -> ES.RoundOut:
+        """**Compute stage**: launch the round's donated StepProgram over
+        the device state and return its packed :class:`RoundOut` handle —
+        still on device; nothing here blocks the host.  With overlap on,
+        the program consumes the slab staged by round N-1 and leaves
+        round N+1's staging transfer in flight inside the same program."""
+        fn = self._programs.spec(self.compiled) if plan.spec \
             else self._programs.decode(self.compiled)
         self.state, out = fn(self.params, self.state)
-        # the round's single packed fetch (one-fetch contract): decode
-        # emissions + the just-promoted slots' deferred first tokens
-        if pending:
-            toks, n_emit, t0s = jax.device_get(
-                (out.tokens, out.n_emit, [t for _, _, t in pending]))
-        else:
-            t0s = []
-            toks, n_emit = jax.device_get((out.tokens, out.n_emit))
+        return out
+
+    def _commit_round(self, plan: "_RoundPlan",
+                      out: ES.RoundOut) -> list[Request]:
+        """**Commit stage**: the round's single packed fetch (one-fetch
+        contract — decode emissions, the just-promoted slots' deferred
+        first tokens, and the prefetch counters all ride one
+        ``device_get``), then scheduler bookkeeping + stream emission.
+        Every TokenEvent is stamped with the post-fetch *delivery*
+        instant, not the time this bookkeeping finishes."""
+        active, pending, spec = plan.active, plan.pending, plan.spec
+        pf = () if out.pf_hits is None else \
+            (out.pf_hits, out.pf_misses, out.pf_wasted)
+        toks, n_emit, t0s, pf_host = jax.device_get(
+            (out.tokens, out.n_emit, [t for _, _, t in pending], pf))
+        t_deliver = time.perf_counter()
+        if pf_host:
+            self.transfer.commit(self.report, pf_host[0].sum(),
+                                 pf_host[1].sum(), pf_host[2].sum())
         slot_tokens = {}
         stop_slots = []
         first_done = {}
         for (s0, r0, _), t0 in zip(pending, t0s):
-            fd = self._deliver_first_token(s0, r0, int(t0))
+            fd = self._deliver_first_token(s0, r0, int(t0), now=t_deliver)
             if fd is not None:
                 first_done[s0] = fd
         for i in active:
@@ -1045,11 +1233,13 @@ class ServeSession:
                 continue
             n = int(n_emit[i])
             charged, stopped = self._emit(i, req,
-                                          [int(t) for t in toks[i, :n]])
+                                          [int(t) for t in toks[i, :n]],
+                                          now=t_deliver)
             slot_tokens[i] = charged
             if stopped:
                 # the verify round drafted past the stop: drop the
                 # over-accepted suffix from the slot's lens + pools
+                # (staged transfers beyond the cut are cancelled too)
                 self._truncate_slot_tail(i, n - charged)
                 stop_slots.append(i)
             if spec and not req.sampling:
@@ -1059,11 +1249,46 @@ class ServeSession:
         for i in stop_slots:
             if self.sched.slots[i].active:   # not already budget-finished
                 done.append(self.sched.finish(i))
+        # a round is *fill* while any stepping slot is still inside its
+        # pipeline-fill window; fill rounds count toward `rounds` but not
+        # toward the decode cadence (numerator nor denominator) — see
+        # ServeReport.fill_rounds.  The window is a function of the
+        # admission schedule alone, so sync and overlapped runs classify
+        # identical rounds.
+        fill = any(self._rounds_since_promote.get(i, PIPELINE_FILL_ROUNDS)
+                   < PIPELINE_FILL_ROUNDS for i in active)
+        for i in active:
+            if self._rounds_since_promote.get(i, 99) < PIPELINE_FILL_ROUNDS:
+                self._rounds_since_promote[i] += 1
         self.report.rounds += 1
         if spec:
             self.report.spec_rounds += 1
         self.report.decode_tokens += sum(slot_tokens.values())
+        if fill:
+            self.report.fill_rounds += 1
+        else:
+            self.report.decode_wall_s += time.perf_counter() - plan.t0
         return done
+
+    def decode_round(self) -> list[Request]:
+        """One decode round over the running slots; returns newly
+        finished.
+
+        The round is an explicit three-stage pipeline —
+        :meth:`_plan_round` → :meth:`_compute_round` →
+        :meth:`_commit_round`.  The whole compute — model step (Q=1, or
+        the fused MTP draft+verify when ``mtp_depth > 0``, TBO halves
+        included), greedy/sampled token selection, ``tok``/``hidden``
+        carries, and (with ``overlap``) the staged-slab consumption +
+        next round's prefetch staging — runs as one StepProgram over the
+        donated device state; inactive and mid-prefill slots are masked
+        *inside* the step (``slot_mask``).  The host fetches exactly one
+        packed struct per round in the commit stage."""
+        plan = self._plan_round()
+        if plan is None:
+            return []
+        out = self._compute_round(plan)
+        return self._commit_round(plan, out)
 
     def _handle_done(self, done: list[Request]) -> None:
         for req in done:

@@ -78,6 +78,8 @@ class SpecOut(NamedTuple):
     caches: object
     hidden: jax.Array     # [B, d] hidden at the last accepted position
     logits: jax.Array | None = None   # [B, depth+1, V] verify logits
+    stats: dict | None = None         # verify step stats (async-offload
+                                      # slab + prefetch counters ride here)
 
 
 def speculative_step(decode_fn: Callable, params: dict, cfg: ArchConfig,
@@ -148,4 +150,15 @@ def speculative_step(decode_fn: Callable, params: dict, cfg: ArchConfig,
     hid = out.stats["hidden"]                                    # [B,Q,d]
     last_idx = jnp.clip(n_acc, 0, depth)
     hidden = jnp.take_along_axis(hid, last_idx[:, None, None], axis=1)[:, 0]
-    return SpecOut(model_next, n_acc + 1, new_caches, hidden, out.logits)
+    stats = dict(out.stats)
+    if "staged_ids" in stats:
+        # the rollback edge of the async-offload pipeline: cancel staged
+        # transfers targeting rejected draft positions (their host rows
+        # hold rolled-back content that the next round's re-append will
+        # overwrite — serving them would leak a dead draft's latents).
+        # -1 stays -1 (corrected >= 0).
+        sid = stats["staged_ids"]                                # [L,B,P]
+        stats["staged_ids"] = jnp.where(sid < corrected[None, :, None],
+                                        sid, -1)
+    return SpecOut(model_next, n_acc + 1, new_caches, hidden, out.logits,
+                   stats)

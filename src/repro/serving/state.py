@@ -45,16 +45,38 @@ class EngineState(NamedTuple):
     emit_index: jax.Array   # [B] i32  next sampling chain position
     slot_mask: jax.Array    # [B] bool live decode slots
     sample_mask: jax.Array  # [B] bool slots emitting stochastically
+    # async-offload staging slabs (None = overlap off; ``None`` is an
+    # empty pytree, so the synchronous state keeps its exact leaf
+    # structure).  Donated like every other leaf — XLA's aliasing is the
+    # double buffer: each round consumes slab N and writes slab N+1 into
+    # the same storage.  Field order matters to the ESS105 audit:
+    # ``staged_rows`` is the LAST state leaf, ``staged_ids`` the
+    # second-to-last.
+    staged_ids: jax.Array | None = None   # [L,B,P] i32 staged positions
+    staged_rows: jax.Array | None = None  # [L,B,P,D] staged host rows
 
 
 class RoundOut(NamedTuple):
-    """Packed per-round emission — the single host fetch of a round."""
+    """Packed per-round emission — the single host fetch of a round.
+    With async offload the prefetch accounting rides the same packed
+    struct (``None`` fields are empty pytree leaves, so the synchronous
+    fetch shape is unchanged)."""
     tokens: jax.Array       # [B,Q] emitted tokens; cols [0, n_emit) valid
     n_emit: jax.Array       # [B] i32 tokens emitted (0 for frozen slots)
+    pf_hits: jax.Array | None = None     # [B] staged rows that served misses
+    pf_misses: jax.Array | None = None   # [B] misses falling back to sync
+    pf_wasted: jax.Array | None = None   # [B] staged rows nobody requested
 
 
 def init_engine_state(cfg: ArchConfig, caches: LC.ESSCaches,
-                      num_slots: int) -> EngineState:
+                      num_slots: int, *,
+                      prefetch_rows: int = 0) -> EngineState:
+    staged_ids = staged_rows = None
+    if prefetch_rows > 0:
+        from repro.core import transfer as TR
+        staged_ids, staged_rows = TR.empty_slab(
+            caches.host_latent.shape[0], num_slots, prefetch_rows,
+            caches.host_latent.shape[-1], caches.host_latent.dtype)
     return EngineState(
         caches=caches,
         tok=jnp.zeros((num_slots,), jnp.int32),
@@ -66,6 +88,8 @@ def init_engine_state(cfg: ArchConfig, caches: LC.ESSCaches,
         emit_index=jnp.zeros((num_slots,), jnp.int32),
         slot_mask=jnp.zeros((num_slots,), bool),
         sample_mask=jnp.zeros((num_slots,), bool),
+        staged_ids=staged_ids,
+        staged_rows=staged_rows,
     )
 
 
@@ -102,10 +126,15 @@ def promote_slot(state: EngineState, slot, tok, hidden) -> EngineState:
 def release_slot(state: EngineState, slot: int) -> EngineState:
     """Freeze a finished/preempted slot (host-side edge).  Cache-tier
     cleanup (pages, pools, lens) happens separately via
-    :func:`repro.cache.latent_cache.reset_slot` / ``unmap_slot``."""
+    :func:`repro.cache.latent_cache.reset_slot` / ``unmap_slot``.  The
+    slot's staged transfers are cancelled with it — a surviving staged
+    id would serve the *previous occupant's* row to the next one."""
+    staged = {} if state.staged_ids is None else {
+        "staged_ids": state.staged_ids.at[:, slot].set(-1)}
     return state._replace(
         slot_mask=state.slot_mask.at[slot].set(False),
         sample_mask=state.sample_mask.at[slot].set(False),
         temperature=state.temperature.at[slot].set(0.0),
         emit_index=state.emit_index.at[slot].set(0),
+        **staged,
     )

@@ -82,22 +82,24 @@ def chunk_bucket(ck: int, prefill_chunk: int) -> int:
 
 
 def _make_raw_step(cfg: ArchConfig, use_kernel: bool, tbo: bool) -> Callable:
-    """(params, tokens [B,Q], positions [B,Q], caches, slot_mask) ->
-    DecodeOut — the TBO-composed model step both round kinds share."""
+    """(params, tokens [B,Q], positions [B,Q], caches, slot_mask, staged)
+    -> DecodeOut — the TBO-composed model step both round kinds share.
+    ``staged`` (default None = synchronous) is the async-offload staging
+    slab pair threaded down from the EngineState leaves."""
     from repro.serving import engine as E      # engine imports this module
 
-    def one(p_, c_, t_, po_, ca_, slot_mask=None):
+    def one(p_, c_, t_, po_, ca_, slot_mask=None, staged=None):
         return E.ess_decode(p_, c_, t_, po_, ca_, use_kernel=use_kernel,
-                            slot_mask=slot_mask)
+                            slot_mask=slot_mask, staged=staged)
 
-    def raw(params, tokens, positions, caches, slot_mask):
+    def raw(params, tokens, positions, caches, slot_mask, staged=None):
         if tbo and tokens.shape[0] >= 2:
             logits, merged, stats = TBO.tbo_step(
                 one, params, cfg, tokens, positions, caches,
-                slot_mask=slot_mask)
+                slot_mask=slot_mask, staged=staged)
             return E.DecodeOut(logits, merged, stats)
         return one(params, cfg, tokens, positions, caches,
-                   slot_mask=slot_mask)
+                   slot_mask=slot_mask, staged=staged)
 
     return raw
 
@@ -142,21 +144,31 @@ def _decode_round_fn(units: _Units, key: str) -> Callable:
     def fn(params, state: EngineState):
         TRACE_COUNTS[key] += 1
         caches = state.caches
+        staged = None if state.staged_ids is None else \
+            (state.staged_ids, state.staged_rows)
         out = units.step(params, state.tok[:, None], caches.lens[:, None],
-                         caches, state.slot_mask)
+                         caches, state.slot_mask, staged)
         logits = out.logits[:, -1]                             # [B,V]
         g = greedy(logits)
         smp = _maybe_sample(units, state, logits, g)
         t = jnp.where(state.sample_mask, smp, g)
         live = state.slot_mask
+        upd = {} if staged is None else dict(
+            staged_ids=out.stats["staged_ids"],
+            staged_rows=out.stats["staged_rows"])
         new_state = state._replace(
             caches=out.caches,
             tok=jnp.where(live, t, state.tok),
             hidden=jnp.where(live[:, None], out.stats["hidden"][:, -1],
                              state.hidden),
-            emit_index=state.emit_index + live.astype(jnp.int32))
-        return new_state, RoundOut(jnp.where(live, t, 0)[:, None],
-                                   live.astype(jnp.int32))
+            emit_index=state.emit_index + live.astype(jnp.int32),
+            **upd)
+        ro = RoundOut(jnp.where(live, t, 0)[:, None], live.astype(jnp.int32))
+        if staged is not None:
+            ro = ro._replace(pf_hits=out.stats["pf_hits"],
+                             pf_misses=out.stats["pf_misses"],
+                             pf_wasted=out.stats["pf_wasted"])
+        return new_state, ro
 
     return fn
 
@@ -172,8 +184,10 @@ def _spec_round_fn(units: _Units, key: str) -> Callable:
     def fn(params, state: EngineState):
         TRACE_COUNTS[key] += 1
         live = state.slot_mask
+        staged = None if state.staged_ids is None else \
+            (state.staged_ids, state.staged_rows)
         spec = units.spec(params, state.caches, state.tok, state.hidden,
-                          live, state.sample_mask)
+                          live, state.sample_mask, staged)
         # false branch reuses the verify step's own position-0 argmax
         smp = _maybe_sample(units, state, spec.logits[:, 0],
                             spec.tokens[:, 0])
@@ -185,13 +199,21 @@ def _spec_round_fn(units: _Units, key: str) -> Callable:
         last = jnp.take_along_axis(tokens,
                                    jnp.maximum(n_emit - 1, 0)[:, None],
                                    axis=1)[:, 0]
+        upd = {} if staged is None else dict(
+            staged_ids=spec.stats["staged_ids"],
+            staged_rows=spec.stats["staged_rows"])
         new_state = state._replace(
             caches=spec.caches,
             tok=jnp.where(live, last, state.tok),
             hidden=jnp.where(live[:, None], spec.hidden, state.hidden),
-            emit_index=state.emit_index + live.astype(jnp.int32))
-        return new_state, RoundOut(jnp.where(live[:, None], tokens, 0),
-                                   n_emit)
+            emit_index=state.emit_index + live.astype(jnp.int32),
+            **upd)
+        ro = RoundOut(jnp.where(live[:, None], tokens, 0), n_emit)
+        if staged is not None:
+            ro = ro._replace(pf_hits=spec.stats["pf_hits"],
+                             pf_misses=spec.stats["pf_misses"],
+                             pf_wasted=spec.stats["pf_wasted"])
+        return new_state, ro
 
     return fn
 
@@ -260,23 +282,26 @@ class StepPrograms:
     jitted units (eager mode)."""
 
     def __init__(self, cfg: ArchConfig, num_slots: int, max_seq: int,
-                 use_kernel: bool, tbo: bool, depth: int):
+                 use_kernel: bool, tbo: bool, depth: int,
+                 prefetch: int = 0):
         self._cfg = cfg
         self._use_kernel = use_kernel
         # the cfg hash disambiguates two configs sharing a shape family
         # (e.g. paged vs dense at the same slots/max_seq) so each
-        # program's trace counter stays its own
+        # program's trace counter stays its own; ``prefetch`` keys the
+        # pipelined (async-offload) programs apart from the synchronous
+        # ones — the state's slab leaves change the traced structure
         self._sig = (f"B{num_slots}s{max_seq}tbo{int(tbo)}"
-                     f"d{depth}k{int(use_kernel)}"
+                     f"d{depth}k{int(use_kernel)}p{prefetch}"
                      f"c{abs(hash(cfg)) % 16 ** 4:04x}")
         raw = _make_raw_step(cfg, use_kernel, tbo)
 
         spec_core = None
         if depth > 0:
             def spec_core_fn(params, caches, tok, hidden, slot_mask,
-                             sample_mask):
+                             sample_mask, staged=None):
                 def dec_fn(p_, c_, t_, po_, ca_):
-                    return raw(p_, t_, po_, ca_, slot_mask)
+                    return raw(p_, t_, po_, ca_, slot_mask, staged)
                 return MTP.speculative_step(
                     dec_fn, params, cfg, caches, tok, hidden,
                     slot_mask=slot_mask, sample_mask=sample_mask,
@@ -315,5 +340,7 @@ class StepPrograms:
 
 @functools.lru_cache(maxsize=64)
 def get_programs(cfg: ArchConfig, num_slots: int, max_seq: int,
-                 use_kernel: bool, tbo: bool, depth: int) -> StepPrograms:
-    return StepPrograms(cfg, num_slots, max_seq, use_kernel, tbo, depth)
+                 use_kernel: bool, tbo: bool, depth: int,
+                 prefetch: int = 0) -> StepPrograms:
+    return StepPrograms(cfg, num_slots, max_seq, use_kernel, tbo, depth,
+                        prefetch)

@@ -26,12 +26,19 @@ from repro.core import lru_pool as LP
 
 
 def tbo_step(step_fn: Callable, params, cfg, tokens, positions, caches, *,
-             slot_mask: jax.Array | None = None):
+             slot_mask: jax.Array | None = None,
+             staged: tuple | None = None):
     """Full split → two-half step → page-ownership merge composition over
     an un-split cache: the step-level TBO building block the serve round
     uses (``repro.serving.step`` traces it — split, both halves and the
     merge — into one donated jit program, which is what actually lets the
     XLA scheduler interleave half-A's H2D fetches with half-B's compute).
+
+    With the async-offload pipeline, TBO is just the degenerate special
+    case of the same plan/compute/commit structure — the two halves are
+    two pipeline lanes whose transfers and compute the scheduler
+    interleaves — so the staging slab pair (``staged``) splits along the
+    slot axis and rides through each half unchanged in meaning.
 
     Returns ``(logits [B,Q,V], merged_caches, stats)``.
     """
@@ -39,23 +46,27 @@ def tbo_step(step_fn: Callable, params, cfg, tokens, positions, caches, *,
     ca, cb = split_caches(caches, B // 2)
     logits, ca2, cb2, stats = two_batch_step(
         step_fn, params, cfg, tokens, positions, ca, cb,
-        slot_mask=slot_mask)
+        slot_mask=slot_mask, staged=staged)
     return logits, merge_caches(ca2, cb2), stats
 
 
 def two_batch_step(step_fn: Callable, params, cfg, tokens, positions,
                    caches_a, caches_b, *,
-                   slot_mask: jax.Array | None = None):
+                   slot_mask: jax.Array | None = None,
+                   staged: tuple | None = None):
     """tokens/positions [B,Q] split at ``B // 2``; caches pre-split by the
     engine (:func:`split_caches`).  ``slot_mask`` [B] (continuous-batching
     live mask) is split alongside and forwarded to ``step_fn`` as a
     keyword, so freed / mid-prefill slots stay gated inside each half.
+    ``staged`` (the async-offload slab pair ``(ids [L,B,P], rows
+    [L,B,P,D])``) splits along the slot axis the same way.
 
     Returns ``(logits [B,Q,V], caches_a', caches_b', stats)`` where
     ``stats`` is the per-key batch concatenation of the halves' step stats
-    (hits/misses/overflow [B], hidden [B,Q,d]).  Reconcile the halves with
-    :func:`merge_caches` — with a paged host tier neither half's
-    ``host_latent`` alone contains both halves' writes.
+    (hits/misses/overflow [B], hidden [B,Q,d]; ``staged_*`` slabs carry
+    the slot axis second, so they concatenate on axis 1).  Reconcile the
+    halves with :func:`merge_caches` — with a paged host tier neither
+    half's ``host_latent`` alone contains both halves' writes.
     """
     B = tokens.shape[0]
     h = B // 2
@@ -63,14 +74,20 @@ def two_batch_step(step_fn: Callable, params, cfg, tokens, positions,
     if slot_mask is not None:
         kw_a["slot_mask"] = slot_mask[:h]
         kw_b["slot_mask"] = slot_mask[h:]
+    if staged is not None:
+        kw_a["staged"] = (staged[0][:, :h], staged[1][:, :h])
+        kw_b["staged"] = (staged[0][:, h:], staged[1][:, h:])
     out_a = step_fn(params, cfg, tokens[:h], positions[:h], caches_a, **kw_a)
     out_b = step_fn(params, cfg, tokens[h:], positions[h:], caches_b, **kw_b)
     logits = jnp.concatenate([out_a.logits, out_b.logits], axis=0)
     stats = {}
     for k in out_a.stats:
         va, vb = out_a.stats[k], out_b.stats[k]
-        stats[k] = jnp.concatenate([va, vb], axis=0) \
-            if getattr(va, "ndim", 0) > 0 else va
+        if k.startswith("staged_"):              # [L,B/2,...] slab halves
+            stats[k] = jnp.concatenate([va, vb], axis=1)
+        else:
+            stats[k] = jnp.concatenate([va, vb], axis=0) \
+                if getattr(va, "ndim", 0) > 0 else va
     return logits, out_a.caches, out_b.caches, stats
 
 

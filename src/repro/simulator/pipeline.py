@@ -48,8 +48,17 @@ def pick_overlap(hw: HardwareProfile, c: LayerCosts, sc: ServeConfig) -> str:
 
 def simulate_step(hw: HardwareProfile, sc: ServeConfig,
                   miss_by_layer: list[float] | None = None) -> float:
-    """Seconds per decode round per GPU."""
+    """Seconds per decode round per GPU.
+
+    With ``sc.async_offload`` the plan/compute/commit pipeline stages
+    ``prefetch_hit_rate`` of each layer's misses one round ahead: the
+    staged fraction leaves the layer critical path (only the residual
+    misses pay a synchronous fetch), but its bytes still cross PCIe —
+    the accumulated staged link time is exposed only when it exceeds
+    the round's compute."""
     from repro.simulator.locality import expected_miss_per_seq
+    hr = sc.prefetch_hit_rate if (sc.offload and sc.async_offload) else 0.0
+    pf_hidden = 0.0
     times = []
     for layer in range(N_LAYERS):
         if sc.avg_miss_per_seq is not None:
@@ -62,6 +71,9 @@ def simulate_step(hw: HardwareProfile, sc: ServeConfig,
                 if sc.offload else 0.0
         c = layer_costs(hw, sc, moe_layer=(layer >= N_DENSE),
                         miss_per_seq=miss)
+        if hr > 0.0:
+            pf_hidden += c.t_fetch * hr
+            c = dataclasses.replace(c, t_fetch=c.t_fetch * (1.0 - hr))
         ov = sc.overlap
         if ov == "layerwise":
             ov = pick_overlap(hw, c, sc)
@@ -85,7 +97,9 @@ def simulate_step(hw: HardwareProfile, sc: ServeConfig,
                           if sc.offload else 0.0))
             ch = layer_costs(hw, half, moe_layer=(layer >= N_DENSE),
                              miss_per_seq=miss)
-            comm += ch.t_a2a + ch.t_fetch + ch.t_writeback
+            # the staged fraction leaves the TBO comm stream too: only
+            # residual (synchronous) fetches compete with the a2a there
+            comm += ch.t_a2a + ch.t_fetch * (1.0 - hr) + ch.t_writeback
             comp += ch.t_preattn + ch.t_indexer + ch.t_attn + ch.t_ffn
         comp += lm_head_time(hw, half)
         # steady state: each half's comm hides under the other half's
@@ -93,6 +107,12 @@ def simulate_step(hw: HardwareProfile, sc: ServeConfig,
         # (first comm burst / last compute drain).
         t_tbo = 2 * comp + 2 * max(0.0, comm - comp) + 0.02 * comm
         t = min(t, t_tbo)
+
+    if hr > 0.0:
+        # staged traffic of one round (≈ next round's hits, full batch)
+        # rides the PCIe stream under the whole round's compute; exposed
+        # only past the link's round-level headroom.
+        t += max(0.0, pf_hidden - t)
     return t
 
 

@@ -1,0 +1,371 @@
+"""Pipelined round architecture (plan → compute → commit): TransferEngine
+slab primitives, indexer-driven prefetch planning, overlap-vs-sync stream
+parity, lifecycle edges (admission / preemption / abort / stop-token
+truncation) landing against in-flight staged transfers, fill-round
+accounting, and the ESS105 no-blocking-stage audit.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import jaxpr_audit as JA
+from repro.configs import get_config
+from repro.core import transfer as TR
+from repro.models import transformer as T
+from repro.models.params import init_params
+from repro.serving import engine as E
+from repro.serving.api import EssEngine, SamplingParams
+from repro.serving.scheduler import Request
+
+
+def smoke_cfg(mtp_depth=None, **ess_overrides):
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    if ess_overrides:
+        cfg = dataclasses.replace(
+            cfg, ess=dataclasses.replace(cfg.ess, **ess_overrides))
+    if mtp_depth is not None:
+        cfg = dataclasses.replace(cfg, mtp_depth=mtp_depth)
+    return cfg
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_cfg(mtp_depth=2, max_miss_ratio=1.0)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(jax.random.key(0), T.model_def(cfg))
+
+
+# ---------------------------------------------------------------------------
+# TransferEngine primitives
+# ---------------------------------------------------------------------------
+
+def test_empty_slab_is_disarmed():
+    ids, rows = TR.empty_slab(3, 2, 4, 8, jnp.bfloat16)
+    assert ids.shape == (3, 2, 4) and (np.array(ids) == -1).all()
+    assert rows.shape == (3, 2, 4, 8) and (np.array(rows) == 0).all()
+
+
+def test_plan_prefetch_ranks_nonresident_in_horizon_by_score():
+    # slot 0: horizon 6 of 8; positions 1 and 4 are pool-resident and
+    # must never be staged; the rest rank by score.  slot 1 is dead.
+    sc = jnp.asarray([[.1, .9, .3, .8, .7, .2, .99, .5],
+                      [.9, .9, .9, .9, .9, .9, .9, .9]], jnp.float32)
+    qlens = jnp.asarray([6, 8], jnp.int32)
+    slot_of = jnp.full((2, 8), -1, jnp.int32)
+    slot_of = slot_of.at[0, 1].set(3).at[0, 4].set(0)
+    live = jnp.asarray([True, False])
+    pred = TR.plan_prefetch(sc, qlens, slot_of, live, topk=4,
+                            prefetch_rows=3)
+    assert pred.shape == (2, 3)
+    # candidates for slot 0: {0:.1, 2:.3, 3:.8, 5:.2} (1,4 resident;
+    # 6,7 out of horizon) -> score order 3, 2, 5
+    assert pred[0].tolist() == [3, 2, 5]
+    assert pred[1].tolist() == [-1, -1, -1]          # dead slot: no plan
+
+
+def test_plan_prefetch_pads_when_candidates_run_out():
+    sc = jnp.asarray([[.5, .6, .7, .8]], jnp.float32)
+    pred = TR.plan_prefetch(sc, jnp.asarray([2], jnp.int32),
+                            jnp.full((1, 4), -1, jnp.int32),
+                            jnp.asarray([True]), topk=4, prefetch_rows=6)
+    # only positions 0,1 are in horizon; P=6 pads with -1
+    assert pred.shape == (1, 6)
+    assert pred[0, :2].tolist() == [1, 0]
+    assert pred[0, 2:].tolist() == [-1] * 4
+
+
+def test_match_staged_serves_only_staged_needed_rows():
+    ids = jnp.asarray([[3, 7, -1]], jnp.int32)                  # [B=1,P=3]
+    rows = jnp.arange(6, dtype=jnp.float32).reshape(1, 3, 2) + 1.
+    miss = jnp.asarray([[7, 4, 3]], jnp.int32)
+    need = jnp.asarray([[True, True, False]])     # 3 needed elsewhere
+    matched, out = TR.match_staged(ids, rows, miss, need)
+    assert matched[0].tolist() == [True, False, False]
+    np.testing.assert_array_equal(np.array(out[0, 0]), np.array(rows[0, 1]))
+    assert (np.array(out[0, 1:]) == 0).all()
+
+
+def test_transfer_engine_lifecycle_edges_cancel_staged_ids():
+    te = TR.TransferEngine(num_layers=2, num_slots=2, prefetch_rows=3,
+                           dim=4, dtype=jnp.float32)
+    ids = jnp.asarray([[[2, 5, 9], [1, 4, 8]],
+                       [[3, 6, 7], [0, 2, 5]]], jnp.int32)
+
+    class _S:
+        def __init__(self, ids, rows):
+            self.staged_ids, self.staged_rows = ids, rows
+
+        def _replace(self, **kw):
+            return _S(kw.get("staged_ids", self.staged_ids),
+                      kw.get("staged_rows", self.staged_rows))
+
+    s = _S(ids, jnp.zeros((2, 2, 3, 4)))
+    # truncate: slot 1 rolls back to len 5 -> staged ids >= 5 cancel,
+    # slot 0 untouched; new_len may be traced
+    t = te.truncate_slot(s, 1, jnp.asarray(5, jnp.int32))
+    assert np.array(t.staged_ids[:, 1]).tolist() == [[1, 4, -1], [0, 2, -1]]
+    assert np.array(t.staged_ids[:, 0]).tolist() == np.array(ids[:, 0]).tolist()
+    # invalidate: release/abort cancels the whole slot column
+    v = te.invalidate_slot(t, 0)
+    assert (np.array(v.staged_ids[:, 0]) == -1).all()
+    # issue_stage disarms everything; await_staged hands the pair back
+    a = te.issue_stage(v)
+    aid, arow = te.await_staged(a)
+    assert (np.array(aid) == -1).all() and (np.array(arow) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Stream parity: overlap on == overlap off, bit for bit
+# ---------------------------------------------------------------------------
+
+_PARITY_WORKLOAD = [(10, dict(max_tokens=5)),
+                    (8, dict(max_tokens=3)),
+                    (13, dict(max_tokens=6)),
+                    (9, dict(max_tokens=4, temperature=0.8, top_k=64,
+                             top_p=0.95, seed=123))]
+
+
+def _run_workload(params, cfg, **engine_kw):
+    prompts = [p for p, _ in _PARITY_WORKLOAD]
+    sps = [SamplingParams(**kw) for _, kw in _PARITY_WORKLOAD]
+    eng = EssEngine(params, cfg, num_slots=2, max_seq=32, **engine_kw)
+    outs = eng.generate(prompts, sps, max_rounds=120)
+    assert sorted(eng.session._terminal) == [0, 1, 2, 3]
+    return eng, [o.tokens for o in outs]
+
+
+@pytest.mark.parametrize("mtp_depth,compiled", [(0, True), (2, True),
+                                                (2, False)])
+def test_overlap_stream_parity(cfg, params, mtp_depth, compiled):
+    """Acceptance bar: the pipelined path's streams are bitwise
+    identical to the synchronous path on the same greedy + sampled
+    workload (misses fall back, never corrupt)."""
+    kw = dict(mtp_depth=mtp_depth, compiled=compiled)
+    _, base = _run_workload(params, cfg, overlap=False, **kw)
+    eng, over = _run_workload(params, cfg, overlap=True, **kw)
+    assert over == base
+    rep = eng.session.report
+    assert rep.prefetch_hits + rep.prefetch_misses > 0   # pipeline engaged
+
+
+def test_overlap_stream_parity_dense_host_tier(params):
+    cfg_d = smoke_cfg(mtp_depth=2, max_miss_ratio=1.0, paged_host=False)
+    _, base = _run_workload(params, cfg_d, overlap=False, mtp_depth=2)
+    eng, over = _run_workload(params, cfg_d, overlap=True, mtp_depth=2)
+    assert over == base and not eng.session.caches.paged
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle edges vs in-flight staged transfers
+# ---------------------------------------------------------------------------
+
+def _drive_with_preempt(params, cfg, *, overlap, preempt_round=3,
+                        check_slab=False):
+    eng = EssEngine(params, cfg, num_slots=2, max_seq=32, overlap=overlap)
+    rids = [eng.submit(p, SamplingParams(max_tokens=6))
+            for p in (8, 9, 10, 11)]
+    rnd = 0
+    while eng.has_work():
+        eng.step()
+        if rnd == preempt_round and eng.session.sched.slots[1].active:
+            eng.session.preempt(1)
+            if check_slab:
+                # the victim's in-flight staged transfers are cancelled
+                # at the preemption edge, before any next-round program
+                # could consume a stale row
+                ids = np.array(eng.session.state.staged_ids)
+                assert (ids[:, 1] == -1).all()
+        rnd += 1
+        assert rnd < 200
+    return [eng.output(r).tokens for r in rids]
+
+
+def test_preemption_cancels_staged_and_replays_identically(cfg, params):
+    """A preemption landing between one round's plan (slab armed for
+    round N+1) and the next round's commit must cancel the victim
+    slot's staged transfers; the re-admitted request replays a stream
+    bitwise equal to the synchronous path under the same preemption."""
+    base = _drive_with_preempt(params, cfg, overlap=False)
+    over = _drive_with_preempt(params, cfg, overlap=True, check_slab=True)
+    assert over == base
+
+
+def _abort_run(params, cfg, *, overlap):
+    eng = EssEngine(params, cfg, num_slots=1, max_seq=32, overlap=overlap)
+    r0 = eng.submit(10, SamplingParams(max_tokens=8))
+    r1 = eng.submit(9, SamplingParams(max_tokens=5))
+    for _ in range(4):                     # r0 decoding, slab armed
+        eng.step()
+    slot = next(i for i, s in enumerate(eng.session.sched.slots)
+                if s.active and s.rid == r0)
+    assert eng.abort(r0)
+    if overlap:
+        ids = np.array(eng.session.state.staged_ids)
+        assert (ids[:, slot] == -1).all()  # abort cancelled the staging
+    while eng.has_work():
+        eng.step()
+    assert eng.finish_reason(r0) == "abort"
+    return eng.output(r1).tokens
+
+
+def test_abort_and_admission_reuse_slab_slot(cfg, params):
+    """Aborting a request cancels its slot's staged ids; the slot's next
+    occupant (admission edge) starts from a disarmed slab column and
+    streams identically to the synchronous path under the same abort
+    schedule."""
+    assert _abort_run(params, cfg, overlap=True) \
+        == _abort_run(params, cfg, overlap=False)
+
+
+def _permutation_params(cfg):
+    """Zeroed params with a permutation head (see test_api): the stream
+    is a non-constant permutation walk and MTP acceptance is full, so a
+    verify round provably drafts past a chosen stop position."""
+    base = jax.tree.map(jnp.zeros_like,
+                        init_params(jax.random.key(0), T.model_def(cfg)))
+    V, d = cfg.vocab_size, cfg.d_model
+    emb = jax.random.normal(jax.random.key(1), (V, d), cfg.param_dtype)
+    perm = jax.random.permutation(jax.random.key(2), V)
+    base["embed"] = emb
+    base["unembed"] = emb[jnp.argsort(perm)]
+    proj = jnp.zeros((cfg.mtp_depth, 2 * d, d), cfg.param_dtype)
+    proj = proj.at[:, d:, :].set(jnp.eye(d, dtype=cfg.param_dtype))
+    base["mtp"]["proj"] = proj
+    return base
+
+
+def _stop_run(params, cfg, stop, *, overlap, snap):
+    s = E.ServeSession(params, cfg, num_slots=1, max_seq=48, mtp_depth=2,
+                       overlap=overlap)
+    inner = s.sched.release_hook
+
+    def capture(slot):
+        snap["lens"] = int(np.array(s.caches.lens)[slot])
+        snap["ids"] = [np.sort(ids[ids >= 0])
+                       for ids in (np.array(p.ids[slot])
+                                   for p in s.caches.pools)]
+        if s.state.staged_ids is not None:
+            # stop-token rollback: staged transfers beyond the truncated
+            # length were cancelled before the release
+            ids = np.array(s.state.staged_ids)[:, slot]
+            assert (ids < snap["lens"]).all()
+        inner(slot)
+
+    s.sched.release_hook = capture
+    s.run([Request(rid=0, prompt_len=10, max_new_tokens=9,
+                   stop_token_ids=(stop,))], max_rounds=60)
+    return s.outputs[0]
+
+
+def test_stop_truncation_rolls_back_staged_state(cfg):
+    """A stop token landing mid-verify truncates the slot's tail; under
+    overlap the rollback must also cancel the staged ids beyond the cut,
+    and the released lens/pool state must equal the synchronous run's."""
+    params = _permutation_params(cfg)
+    s = E.ServeSession(params, cfg, num_slots=1, max_seq=48, mtp_depth=2)
+    s.run([Request(rid=0, prompt_len=10, max_new_tokens=9)], max_rounds=60)
+    stream = s.outputs[0]
+    stop = stream[2]                       # cuts the first verify round
+
+    snap_sync, snap_over = {}, {}
+    out_sync = _stop_run(params, cfg, stop, overlap=False, snap=snap_sync)
+    out_over = _stop_run(params, cfg, stop, overlap=True, snap=snap_over)
+    assert out_sync == out_over == stream[:3]
+    assert snap_sync["lens"] == snap_over["lens"] == 10 + 2
+    for a, b in zip(snap_sync["ids"], snap_over["ids"]):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Fill-round accounting (ServeReport)
+# ---------------------------------------------------------------------------
+
+def test_fill_rounds_excluded_from_cadence_identically(cfg, params):
+    """`rounds_per_s` excludes each slot's pipeline-fill window from
+    numerator and denominator, and classifies the same rounds as fill in
+    sync and overlapped runs (the window depends only on the admission
+    schedule)."""
+    reps = {}
+    for overlap in (False, True):
+        eng, _ = _run_workload(params, cfg, overlap=overlap)
+        reps[overlap] = eng.session.report
+    sync, over = reps[False], reps[True]
+    assert sync.fill_rounds == over.fill_rounds > 0
+    assert sync.rounds == over.rounds > sync.fill_rounds
+    for rep in (sync, over):
+        got = rep.rounds_per_s * rep.decode_wall_s
+        assert abs(got - (rep.rounds - rep.fill_rounds)) < 1e-6
+
+
+def test_fill_round_window_resets_per_promotion():
+    rep = E.ServeReport(rounds=10, fill_rounds=4, decode_wall_s=2.0)
+    assert rep.rounds_per_s == pytest.approx(3.0)
+    # all-fill degenerate run: cadence reads zero, never negative
+    rep2 = E.ServeReport(rounds=3, fill_rounds=3, wall_s=1.0)
+    assert rep2.rounds_per_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# ESS105 no-blocking-stage: checker + slicer sabotage
+# ---------------------------------------------------------------------------
+
+def test_ess105_checker_flags_blocking_and_dead_prefetch():
+    clean = JA.check_pipeline_overlap("decode", consumes_staged=True,
+                                      n_exclusive_gathers=2)
+    assert clean == []
+    dead = JA.check_pipeline_overlap("decode", consumes_staged=False,
+                                     n_exclusive_gathers=1)
+    assert [f.rule for f in dead] == ["ESS105"]
+    assert "does not consume" in dead[0].message \
+        or "dead prefetch" in dead[0].message
+    blocking = JA.check_pipeline_overlap("spec", consumes_staged=True,
+                                         n_exclusive_gathers=0)
+    assert [f.rule for f in blocking] == ["ESS105"]
+    assert "critical path" in blocking[0].message
+
+
+def test_ess105_slicer_separates_exclusive_gathers():
+    """Toy program with one gather per output: the backward slice must
+    attribute each gather to its output alone — the property that lets
+    the audit prove the slab refill sits off the token path."""
+    def toy(a, b, tbl):
+        return tbl[a].sum(), tbl[b]
+
+    jaxpr = jax.make_jaxpr(toy)(jnp.zeros((3,), jnp.int32),
+                                jnp.zeros((2,), jnp.int32),
+                                jnp.zeros((8, 4), jnp.float32)).jaxpr
+    in0, g0 = JA._slice_jaxpr(jaxpr, {0})
+    in1, g1 = JA._slice_jaxpr(jaxpr, {1})
+    assert 0 in in0 and 1 not in in0       # out0 needs a, not b
+    assert 1 in in1 and 0 not in in1
+    assert g1 - g0 and g0 - g1             # one exclusive gather each
+
+    def fused(a, tbl):
+        x = tbl[a]                          # single gather feeds BOTH
+        return x.sum(), x
+
+    j2 = jax.make_jaxpr(fused)(jnp.zeros((3,), jnp.int32),
+                               jnp.zeros((8, 4), jnp.float32)).jaxpr
+    _, h0 = JA._slice_jaxpr(j2, {0})
+    _, h1 = JA._slice_jaxpr(j2, {1})
+    assert not (h1 - h0)                    # no exclusive gather: blocking
+
+
+def test_staged_slab_leaves_ride_donation():
+    """The staging slab joins EngineState as the last two leaves and the
+    pipelined decode program still donates every leaf (ESS101 over the
+    grown state)."""
+    targets = [t for t in JA.build_targets(prefetch=4)
+               if t.kind == "decode"]
+    plain = [t for t in JA.build_targets() if t.kind == "decode"]
+    n_pf = len(jax.tree.leaves(targets[0].state))
+    n_plain = len(jax.tree.leaves(plain[0].state))
+    assert n_pf == n_plain + 2             # staged_ids + staged_rows
+    assert JA.audit_donation(targets=targets) == []
