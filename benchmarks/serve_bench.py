@@ -48,7 +48,7 @@ import jax
 def simulated_trajectory(context: int = 32768) -> dict:
     import dataclasses
 
-    from repro.simulator.costmodel import (ServeConfig,
+    from repro.simulator.costmodel import (LATENT_Q8_BYTES, ServeConfig,
                                            max_feasible_batch,
                                            max_host_admission_batch)
     from repro.simulator.hardware import H800_EP32
@@ -63,32 +63,46 @@ def simulated_trajectory(context: int = 32768) -> dict:
     # async-offload pipeline: indexer-driven prefetch stages most misses
     # a round ahead, so only the residual misses pay a synchronous fetch
     essa = dataclasses.replace(ess, async_offload=True)
+    # quantized host tier: int8 pages + f16 row scales shrink the host
+    # reservation and every PCIe transfer from 656 to 578 B/row; compute
+    # terms are untouched (the device pool stays bf16)
+    essq = dataclasses.replace(ess, cache_bytes_per_row=LATENT_Q8_BYTES)
+    essqa = dataclasses.replace(essq, async_offload=True)
     gpu_cap = max_feasible_batch(hw, base)
     rows = []
     for bs in [8, 16, 32, 52, 64, 96, 128, 160]:
         sc_b = dataclasses.replace(base, batch_per_gpu=bs)
         sc_e = dataclasses.replace(ess, batch_per_gpu=bs)
         sc_a = dataclasses.replace(essa, batch_per_gpu=bs)
+        sc_q = dataclasses.replace(essq, batch_per_gpu=bs)
+        sc_qa = dataclasses.replace(essqa, batch_per_gpu=bs)
         rows.append({
             "batch": bs,
             "baseline_tokens_per_s": round(throughput_node(hw, sc_b), 1),
             "baseline_feasible_on_gpu": bs <= gpu_cap,
             "ess_paged_tokens_per_s": round(throughput_node(hw, sc_e), 1),
             "ess_async_tokens_per_s": round(throughput_node(hw, sc_a), 1),
+            "ess_q8_tokens_per_s": round(throughput_node(hw, sc_q), 1),
+            "ess_q8_async_tokens_per_s": round(throughput_node(hw, sc_qa),
+                                               1),
         })
     return {
         "hardware": hw.name,
         "context": context,
         "prefetch_hit_rate": essa.prefetch_hit_rate,
+        "q8_row_bytes": LATENT_Q8_BYTES,
         "gpu_batch_ceiling_dense": gpu_cap,
         "host_admission_ceiling_dense": max_host_admission_batch(
             hw, dataclasses.replace(ess, paged_host=False)),
         "host_admission_ceiling_paged": max_host_admission_batch(hw, ess),
+        "host_admission_ceiling_paged_q8": max_host_admission_batch(
+            hw, essq),
         "trajectory": rows,
     }
 
 
 def live_smoke_trajectory(batches=(2, 4)) -> list[dict]:
+    from repro.cache import latent_cache as LC
     from repro.configs import get_config
     from repro.models import transformer as T
     from repro.models.params import init_params
@@ -117,6 +131,17 @@ def live_smoke_trajectory(batches=(2, 4)) -> list[dict]:
             "pages": report.num_pages,
             "peak_pages_in_use": report.peak_pages_in_use,
             "page_rows": cfg.ess.host_page_rows,
+            # measured capacity/transfer accounting (dtype-aware): the
+            # host-tier pin of one fully mapped slot, and the round's
+            # actual PCIe traffic from the ServeReport byte counters
+            "host_bytes_per_row": report.host_bytes_per_row,
+            "host_bytes_per_slot": (LC.num_blocks(cfg, SMAX)
+                                    * LC.host_page_bytes(cfg,
+                                                         cfg.param_dtype)),
+            "h2d_bytes": report.h2d_bytes,
+            "d2h_bytes": report.d2h_bytes,
+            "transfer_bytes_per_round":
+                round(report.transfer_bytes_per_round, 1),
             "context_equiv_note":
                 f"smoke arch, max_seq={SMAX}; pool/context and page/context "
                 f"ratios match the 32K cell "
@@ -179,6 +204,11 @@ def smoke_point(prefill_chunk: int = 8) -> dict:
         "tokens_per_s": round(report.tokens_per_s, 2),
         "mean_ttft_s": round(report.mean_ttft_s, 4),
         "wall_s": round(report.wall_s, 2),
+        "host_bytes_per_row": report.host_bytes_per_row,
+        "h2d_bytes": report.h2d_bytes,
+        "d2h_bytes": report.d2h_bytes,
+        "transfer_bytes_per_round":
+            round(report.transfer_bytes_per_round, 1),
     }
 
 
@@ -378,6 +408,94 @@ def overlap_smoke_point() -> dict:
     return point
 
 
+def quant_smoke_point() -> dict:
+    """Quantized (int8) host tier vs bf16 on the same workload/params —
+    the capacity-and-bandwidth point the compressed tier exists for.
+
+    Two sub-measurements:
+
+    * **admission** — both modes get the *same* host-byte budget (sized
+      to four int8 pages); the page pool floors it to whole pages of its
+      storage dtype, so the quantized tier must admit >= 2x the
+      concurrent batch.
+    * **transfer** — an unbudgeted run of the identical workload at the
+      same concurrency; H2D rows (useful misses) and D2H rows (decode
+      writebacks) match row-for-row, so bytes/round must shrink by the
+      row-byte ratio (42/80 = 0.525 on the smoke arch, <= 0.55 bound).
+      Greedy streams are compared token-for-token: drift is the parity
+      cost of quantization and must stay within the documented bound
+      (exact match on this workload — the int8 roundtrip error is far
+      below the smoke model's greedy decision margins).
+    """
+    import dataclasses
+
+    from repro.cache import latent_cache as LC
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.serving.api import EssEngine, SamplingParams
+    from repro.serving.engine import ServeSession
+    from repro.serving.scheduler import Request
+
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    qcfg = dataclasses.replace(
+        cfg, ess=dataclasses.replace(cfg.ess, host_cache_dtype="int8"))
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+
+    # --- admission at a fixed host-byte budget --------------------------
+    budget = 4 * LC.host_page_bytes(qcfg, qcfg.param_dtype)
+    admitted = {}
+    for name, c in (("bf16", cfg), ("q8", qcfg)):
+        s = ServeSession(params, c, num_slots=4, max_seq=32,
+                         host_byte_budget=budget)
+        for rid in range(4):     # one page each (prompt 6 + 4 new <= 16)
+            s.submit(Request(rid=rid, prompt_len=6, max_new_tokens=4))
+        s.step_round()           # admission pass
+        admitted[name] = len(s.sched.running)
+        s.run(max_rounds=100)    # everyone still finishes (serialized)
+        assert not s.sched.running and not s.sched.queue
+    assert admitted["q8"] >= 2 * admitted["bf16"], admitted
+
+    # --- transfer bytes/round + greedy drift at equal concurrency -------
+    PROMPT, NEW = 10, 6
+    runs = {}
+    for name, c in (("bf16", cfg), ("q8", qcfg)):
+        eng = EssEngine(params, c, num_slots=2, max_seq=32)
+        outs = eng.generate([PROMPT] * 4, SamplingParams(max_tokens=NEW),
+                            max_rounds=200)
+        assert all(o.finish_reason == "length" for o in outs)
+        runs[name] = ([o.tokens for o in outs], eng.session.report)
+    toks_b, rep_b = runs["bf16"]
+    toks_q, rep_q = runs["q8"]
+    flat_b = [t for s in toks_b for t in s]
+    flat_q = [t for s in toks_q for t in s]
+    match = sum(a == b for a, b in zip(flat_b, flat_q)) / len(flat_b)
+    ratio = rep_q.transfer_bytes_per_round / rep_b.transfer_bytes_per_round
+    point = {
+        "host_byte_budget": budget,
+        "admitted_bf16": admitted["bf16"],
+        "admitted_q8": admitted["q8"],
+        "bytes_per_row_bf16": rep_b.host_bytes_per_row,
+        "bytes_per_row_q8": rep_q.host_bytes_per_row,
+        "h2d_bytes_bf16": rep_b.h2d_bytes,
+        "h2d_bytes_q8": rep_q.h2d_bytes,
+        "d2h_bytes_bf16": rep_b.d2h_bytes,
+        "d2h_bytes_q8": rep_q.d2h_bytes,
+        "transfer_bytes_per_round_bf16":
+            round(rep_b.transfer_bytes_per_round, 1),
+        "transfer_bytes_per_round_q8":
+            round(rep_q.transfer_bytes_per_round, 1),
+        "transfer_ratio": round(ratio, 3),
+        "greedy_token_match": round(match, 3),
+        "note": "same params/workload; admission at a 4-int8-page byte "
+                "budget; transfer ratio bound 0.55 (nominal 42/80); "
+                "greedy drift bound: exact stream match on this workload",
+    }
+    assert ratio <= 0.55, point
+    assert match == 1.0, point
+    return point
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -395,6 +513,7 @@ def main(argv=None) -> int:
         point["dispatch"] = dispatch_smoke_point()
         point["latency"] = latency_smoke_point()
         point["overlap"] = overlap_smoke_point()
+        point["quant"] = quant_smoke_point()
         prev = {}
         if os.path.exists(args.out):
             try:
@@ -409,6 +528,7 @@ def main(argv=None) -> int:
         d = point["dispatch"]
         lt = point["latency"]
         ov = point["overlap"]
+        qt = point["quant"]
         print(f"appended smoke point #{len(prev['smoke_trajectory'])} to "
               f"{args.out} ({round(time.time() - t0, 1)}s): "
               f"{point['tokens_per_s']} tok/s, "
@@ -425,7 +545,11 @@ def main(argv=None) -> int:
               f"{lt['itl_p95_s']}s; "
               f"overlap: {ov['overlap_rounds_per_s']} vs sync "
               f"{ov['sync_rounds_per_s']} rounds/s ({ov['speedup']}x, "
-              f"pf hit rate {ov['prefetch_hit_rate']})")
+              f"pf hit rate {ov['prefetch_hit_rate']}); "
+              f"quant: {qt['admitted_q8']}/{qt['admitted_bf16']} admitted "
+              f"at {qt['host_byte_budget']} B, transfer ratio "
+              f"{qt['transfer_ratio']}, greedy match "
+              f"{qt['greedy_token_match']}")
         return 0
 
     t0 = time.time()

@@ -76,6 +76,8 @@ CACHE_DTYPE_INVARIANT = "state-out leaf dtypes == state-in leaf dtypes"
 ESS001_TARGETS = {
     "repro.core.offload.host_scatter_rows": "slot_mask",
     "repro.core.offload.host_scatter_rows_stacked": "slot_mask",
+    "repro.core.offload.scatter_tier_rows": "slot_mask",
+    "repro.core.offload.scatter_tier_rows_stacked": "slot_mask",
     "repro.core.lru_pool.lookup": "slot_mask",
     "repro.core.lru_pool.admit": "slot_mask",
     "repro.core.warmup.lru_warmup": "slot_mask",
@@ -135,7 +137,24 @@ ESS003_HOST_FUNCTIONS = {"check_consistent"}
 #      should have overlapped into the next round's compute.
 #
 # The slab leaves are pinned to the END of EngineState (state.py keeps
-# ``staged_ids``/``staged_rows`` as its last two fields) so the audit
-# can find them positionally in the flattened jaxpr invars/outvars.
-ESS105_STAGED_IDS_LEAF = -2   # EngineState leaf index, from the end
-ESS105_STAGED_ROWS_LEAF = -1
+# ``staged_ids``/``staged_scales``/``staged_rows`` as its last fields,
+# rows last in *every* configuration — ``staged_scales`` is an empty
+# pytree on a raw bf16 tier, so the rows index holds either way) so the
+# audit can find them positionally in the flattened jaxpr
+# invars/outvars.
+ESS105_STAGED_ROWS_LEAF = -1  # EngineState leaf index, from the end
+
+# ---------------------------------------------------------------------------
+# ESS106: quantized tier dequantizes at gather width only
+# ---------------------------------------------------------------------------
+
+# With a quantized host latent tier (ess.host_cache_dtype != "bf16"), no
+# StepProgram may widen a cache-tier-sized int8/fp8 tensor to
+# bf16/f16/f32: dequantization happens strictly *after* the gather, at
+# miss/slab width.  A tier-sized convert_element_type means some path
+# materialized the whole decompressed tier — the exact
+# memory-and-bandwidth blowup the compressed representation exists to
+# avoid.  The threshold is the largest quantized state leaf (the host
+# tier itself).
+ESS106_NARROW_DTYPES = ("int8", "float8_e4m3fn", "float8_e5m2")
+ESS106_WIDE_DTYPES = ("bfloat16", "float16", "float32")

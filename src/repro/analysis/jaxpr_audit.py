@@ -1,7 +1,7 @@
 """esslint layer 2 — lower every StepProgram and audit the serve
 contracts (:mod:`repro.analysis.contracts`).
 
-Five audits, each a thin driver over a pure checker (the checkers take
+Six audits, each a thin driver over a pure checker (the checkers take
 plain data so tests can exercise failure paths without lowering):
 
 * **ESS101 donation** — every round program donates the EngineState
@@ -26,6 +26,12 @@ plain data so tests can exercise failure paths without lowering):
   ``staged_rows`` output — a refill gather on the token path means the
   round blocks on a transfer it should have overlapped into the next
   round.
+* **ESS106 tier dequant** — with a quantized host tier
+  (``ess.host_cache_dtype != "bf16"``), no program widens a
+  cache-tier-sized int8/fp8 tensor to bf16/f16/f32: dequantization
+  happens strictly after the gather, at miss/slab width.  A tier-sized
+  convert means some path materialized the whole decompressed tier —
+  the exact blowup the compressed representation exists to avoid.
 
 Abstract lowering (ESS101/ESS104) uses ``ShapeDtypeStruct`` trees — no
 parameter memory is allocated.  The workload audits (ESS102/ESS103)
@@ -57,10 +63,11 @@ _ALIAS_ATTR = "tf.aliasing_output"
 _AUDIT_PATH = "<jaxpr>"
 
 
-def _smoke_cfg(paged: bool = True):
+def _smoke_cfg(paged: bool = True, host_dtype: str = "bf16"):
     from repro.configs import get_config
     cfg = get_config(SMOKE_CONFIG)
     ess = dataclasses.replace(cfg.ess, max_miss_ratio=1.0,
+                              host_cache_dtype=host_dtype,
                               **({} if paged else {"paged_host": False}))
     return dataclasses.replace(cfg, ess=ess, mtp_depth=2)
 
@@ -384,11 +391,14 @@ def audit_dtypes(cfg=None, *, targets=None, **kw) -> list[Finding]:
         findings += check_state_dtypes(
             t.kind, [str(x.dtype) for x in in_leaves],
             [str(x.dtype) for x in jax.tree.leaves(out_state)])
-        # cache-tier threshold: the largest bf16 state leaf (the host
-        # latent tier).  Upcasting a tensor that big is dtype drift;
-        # per-step f32 math on small tiles is fine.
+        # cache-tier threshold: the largest cache-tier state leaf.  On a
+        # raw tier that is the bf16 host latent; on a quantized tier the
+        # payload is int8/fp8 but its *element count* still defines
+        # "tier-sized" — otherwise the threshold collapses to chunk-scale
+        # bf16 leaves and legitimate per-step f32 math trips the audit.
         bf16_sizes = [x.size for x in in_leaves
-                      if x.dtype == jnp.bfloat16]
+                      if x.dtype == jnp.bfloat16
+                      or str(x.dtype) in C.ESS106_NARROW_DTYPES]
         if not bf16_sizes:
             continue
         threshold = max(bf16_sizes)
@@ -399,6 +409,62 @@ def audit_dtypes(cfg=None, *, targets=None, **kw) -> list[Finding]:
                 message=f"{t.kind}: convert_element_type {sd}->{dd} on a "
                         f"cache-tier-sized tensor ({size} elements) — "
                         f"silent 2x memory/bandwidth"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# ESS106: quantized tier dequantizes at gather width only
+# ---------------------------------------------------------------------------
+
+def find_big_dequants(closed_jaxpr, threshold: int) -> list[tuple]:
+    """(size, src_dtype, dst_dtype) for every convert_element_type that
+    widens an int8/fp8 tensor of >= ``threshold`` elements to a float
+    type (:data:`contracts.ESS106_WIDE_DTYPES`)."""
+    hits = []
+    for eqn in _iter_eqns(closed_jaxpr.jaxpr):
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        (src,), (dst,) = eqn.invars, eqn.outvars
+        saval, daval = src.aval, dst.aval
+        if (str(getattr(saval, "dtype", "")) in C.ESS106_NARROW_DTYPES
+                and str(daval.dtype) in C.ESS106_WIDE_DTYPES
+                and saval.size >= threshold):
+            hits.append((int(saval.size), str(saval.dtype),
+                         str(daval.dtype)))
+    return hits
+
+
+def check_tier_dequants(kind: str, hits: list[tuple],
+                        threshold: int) -> list[Finding]:
+    """Pure checker over one program's tier-sized dequant hits."""
+    return [Finding(
+        rule="ESS106", path=_AUDIT_PATH, line=0, scope=kind,
+        message=f"{kind}: convert_element_type {sd}->{dd} on a "
+                f"cache-tier-sized tensor ({size} >= {threshold} "
+                f"elements) — the quantized tier must dequantize at "
+                f"gather width, never materialize decompressed")
+        for size, sd, dd in hits]
+
+
+def audit_tier_dequant(cfg=None, *, targets=None, **kw) -> list[Finding]:
+    """ESS106: with a quantized host tier, no StepProgram materializes a
+    tier-sized bf16/f32 tensor from the int8/fp8 payload — dequant stays
+    at miss/slab width inside the gather path."""
+    findings = []
+    for t in (targets if targets is not None
+              else build_targets(cfg, **kw)):
+        q_sizes = [x.size for x in jax.tree.leaves(t.state)
+                   if str(x.dtype) in C.ESS106_NARROW_DTYPES]
+        if not q_sizes:
+            findings.append(Finding(
+                rule="ESS106", path=_AUDIT_PATH, line=0, scope=t.kind,
+                message=f"{t.kind}: no quantized state leaf — audit the "
+                        f"quantized tier config (host_cache_dtype)"))
+            continue
+        threshold = max(q_sizes)
+        jaxpr = jax.make_jaxpr(t.fn)(*t.args)
+        findings += check_tier_dequants(
+            t.kind, find_big_dequants(jaxpr, threshold), threshold)
     return findings
 
 
@@ -536,6 +602,25 @@ def run_all(*, paged: bool = True, dense: bool = True,
                   + audit_pipeline_overlap(targets=targets)):
             findings.append(dataclasses.replace(
                 f, scope=f"paged+pf/{f.scope}"))
+        # quantized host tier (int8 payload + f16 scale plane): the
+        # scale leaves join the donated state (ESS101/ESS104 over the
+        # wider tree) and ESS106 proves dequant stays at gather width.
+        # Audited plain and pipelined — the staging slab carries the
+        # compressed representation, so the overlap contract (ESS105)
+        # must hold with quantization on too.
+        qcfg = _smoke_cfg(paged=True, host_dtype="int8")
+        targets = build_targets(qcfg)
+        for f in (audit_donation(targets=targets)
+                  + audit_dtypes(targets=targets)
+                  + audit_tier_dequant(targets=targets)):
+            findings.append(dataclasses.replace(
+                f, scope=f"paged+q8/{f.scope}"))
+        targets = build_targets(qcfg, prefetch=4)
+        for f in (audit_donation(targets=targets)
+                  + audit_tier_dequant(targets=targets)
+                  + audit_pipeline_overlap(targets=targets)):
+            findings.append(dataclasses.replace(
+                f, scope=f"paged+q8+pf/{f.scope}"))
     if workload:
         cfg = _smoke_cfg()
         for f in (audit_fetch_counts(cfg)

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import lru_pool as LP
 from repro.core import offload
+from repro.distributed import compression as cmp
 from repro.distributed import sharding as shd
 
 
@@ -44,10 +45,19 @@ class ESSCaches(NamedTuple):
     ikeys: tuple                       # L x [B, S, Di]
     pools: tuple                       # L x PoolState
     block_tables: Optional[jax.Array] = None   # [B, NB] int32 (paged only)
+    # per-row scales of a quantized host tier (None = raw bf16 tier):
+    # paged [L,NP,R,1] | dense [L,B,S,1], SCALE_DTYPE, same memory space
+    # as host_latent — each page carries its R-row scale vector and moves
+    # with it (see repro.distributed.compression.quantize_rows)
+    host_scales: Optional[jax.Array] = None
 
     @property
     def paged(self) -> bool:
         return self.block_tables is not None
+
+    @property
+    def quantized(self) -> bool:
+        return self.host_scales is not None
 
 
 def pool_entries(cfg: ArchConfig, max_seq: int) -> int:
@@ -70,6 +80,37 @@ def pages_for_len(cfg: ArchConfig, n_rows: int) -> int:
     return -(-n_rows // cfg.ess.host_page_rows)
 
 
+def host_storage_dtype(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """(payload dtype, scale dtype | None) of the host latent tier."""
+    name = cfg.ess.host_cache_dtype
+    if name == "bf16":
+        return dtype, None
+    if name not in cmp.CACHE_QUANT_DTYPES:
+        raise ValueError(f"unknown host_cache_dtype {name!r}; have "
+                         f"bf16 | {sorted(cmp.CACHE_QUANT_DTYPES)}")
+    return cmp.CACHE_QUANT_DTYPES[name], cmp.SCALE_DTYPE
+
+
+def host_row_bytes(cfg: ArchConfig, dtype=jnp.bfloat16) -> int:
+    """Host bytes one latent row pins (payload + per-row scale).
+
+    This — not a row *count* — is what serve-loop admission budgets
+    against: a quantized pool packs ~2x the rows into the same host RAM,
+    and a byte-blind gate would let a mixed-precision deployment
+    over-admit (see ``ServeSession._admission_gate``)."""
+    qdt, sdt = host_storage_dtype(cfg, dtype)
+    bytes_row = cfg.mla.latent_dim * jnp.dtype(qdt).itemsize
+    if sdt is not None:
+        bytes_row += jnp.dtype(sdt).itemsize
+    return bytes_row
+
+
+def host_page_bytes(cfg: ArchConfig, dtype=jnp.bfloat16) -> int:
+    """Host bytes one page pins across all layers."""
+    return cfg.num_layers * cfg.ess.host_page_rows * host_row_bytes(
+        cfg, dtype)
+
+
 def init_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
                     dtype=jnp.bfloat16, *, num_pages: int | None = None,
                     map_slots: bool = True) -> ESSCaches:
@@ -90,14 +131,20 @@ def init_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
     Di = cfg.dsa.index_dim
     P = pool_entries(cfg, max_seq)
     paged = uses_paged_host(cfg)
+    qdt, sdt = host_storage_dtype(cfg, dtype)
 
     block_tables = None
+    host_scales = None
     if paged:
         R = cfg.ess.host_page_rows
         NB = num_blocks(cfg, max_seq)
         NP = batch * NB if num_pages is None else num_pages
-        host = jnp.zeros((Lh, NP, R, D), dtype)
+        host = jnp.zeros((Lh, NP, R, D), qdt)
         host = offload.to_host(host, None, "cache_batch", None, None)
+        if sdt is not None:
+            host_scales = offload.to_host(
+                jnp.zeros((Lh, NP, R, 1), sdt),
+                None, "cache_batch", None, None)
         if map_slots:
             if NP < batch * NB:
                 raise ValueError(
@@ -109,9 +156,14 @@ def init_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
         else:
             block_tables = jnp.full((batch, NB), -1, jnp.int32)
     else:
-        host = jnp.zeros((Lh, batch, max_seq, D), dtype)
+        host = jnp.zeros((Lh, batch, max_seq, D), qdt)
         host = offload.to_host(host, None, "batch", None, None) \
             if cfg.ess.offload_kv else host
+        if sdt is not None:
+            host_scales = jnp.zeros((Lh, batch, max_seq, 1), sdt)
+            host_scales = offload.to_host(
+                host_scales, None, "batch", None, None) \
+                if cfg.ess.offload_kv else host_scales
     return ESSCaches(
         lens=jnp.zeros((batch,), jnp.int32),
         host_latent=host,
@@ -120,6 +172,7 @@ def init_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
         pools=tuple(LP.init_pool(batch, P, max_seq, D, dtype)
                     for _ in range(Lh)),
         block_tables=block_tables,
+        host_scales=host_scales,
     )
 
 
@@ -228,18 +281,38 @@ def slot_latents(caches: ESSCaches, slot: int, *,
     DMA — instead of the jnp reference.  Rows of unmapped pages are zero.
     """
     if caches.block_tables is None:
-        return caches.host_latent[:, slot]
+        out = caches.host_latent[:, slot]
+        if caches.host_scales is not None:
+            out = cmp.dequantize_rows(out, caches.host_scales[:, slot],
+                                      jnp.bfloat16)
+        return out
     Lh, NP, R, D = caches.host_latent.shape
     bt = caches.block_tables[slot]                       # [NB]
     NB = bt.shape[0]
     safe = jnp.clip(bt, 0, NP - 1)
-    if use_kernel:
+
+    def page_gather(cache):
+        d = cache.shape[-1]
+        if use_kernel:
+            from repro.kernels.gather_cache import ops as gops
+            flat = cache.reshape(Lh, NP * R, d)
+            return gops.gather_pages(flat, jnp.broadcast_to(safe, (Lh, NB)),
+                                     R)
+        return jnp.take(cache, safe, axis=1).reshape(Lh, NB * R, d)
+
+    if caches.host_scales is not None and use_kernel:
+        # fused page fetch + dequant: the compressed payload is DMA'd and
+        # only the gathered pages are widened, inside the kernel
         from repro.kernels.gather_cache import ops as gops
-        flat = caches.host_latent.reshape(Lh, NP * R, D)
-        out = gops.gather_pages(flat, jnp.broadcast_to(safe, (Lh, NB)), R)
+        out = gops.gather_pages_dequant(
+            caches.host_latent.reshape(Lh, NP * R, D),
+            caches.host_scales.reshape(Lh, NP * R, 1),
+            jnp.broadcast_to(safe, (Lh, NB)), R, jnp.bfloat16)
     else:
-        out = jnp.take(caches.host_latent, safe, axis=1)  # [L,NB,R,D]
-        out = out.reshape(Lh, NB * R, D)
+        out = page_gather(caches.host_latent)
+        if caches.host_scales is not None:
+            out = cmp.dequantize_rows(out, page_gather(caches.host_scales),
+                                      jnp.bfloat16)
     valid = jnp.repeat(bt >= 0, R)                       # [NB*R]
     return jnp.where(valid[None, :, None], out, 0)
 
@@ -277,13 +350,15 @@ def graft_slot(caches: ESSCaches, slot: int, donor: ESSCaches,
     """
     rows = slot_latents(donor, 0, use_kernel=use_kernel)[:, :n_rows]
     ids = jnp.arange(n_rows, dtype=jnp.int32)[None]      # [1, n]
-    host = offload.host_scatter_rows_stacked(
-        caches.host_latent, ids, rows[:, None], slot_mask=None,
-        batch_offset=slot, block_table=caches.block_tables)
+    host, scales = offload.scatter_tier_rows_stacked(
+        caches.host_latent, caches.host_scales, ids, rows[:, None],
+        slot_mask=None, batch_offset=slot,
+        block_table=caches.block_tables)
 
     return caches._replace(
         lens=caches.lens.at[slot].set(n_rows),
         host_latent=host,
+        host_scales=scales,
         ikeys=tuple(full.at[slot].set(one[0].astype(full.dtype))
                     for full, one in zip(caches.ikeys, donor.ikeys)),
         pools=tuple(graft_pool_into(fp, op, slot)
@@ -323,6 +398,7 @@ def abstract_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
     Di = cfg.dsa.index_dim
     P = pool_entries(cfg, max_seq)
     paged = uses_paged_host(cfg)
+    qdt, sdt = host_storage_dtype(cfg, dtype)
 
     ctx = shd.current()
     # cache shardings are pinned to explicit mesh axes (batch over the data
@@ -348,20 +424,31 @@ def abstract_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
             shape, dt, sharding=jax.sharding.NamedSharding(ctx.mesh, spec))
 
     block_tables = None
+    host_scales = None
     if paged:
         R = cfg.ess.host_page_rows
         NB = num_blocks(cfg, max_seq)
         # pages laid out batch-major, so sharding the page dim over the data
         # axes is the paged analogue of batch-sharding the dense tier
-        host = offload.abstract_host((Lh, batch * NB, R, D), dtype,
+        host = offload.abstract_host((Lh, batch * NB, R, D), qdt,
                                      None, "cache_batch", None, None)
+        if sdt is not None:
+            host_scales = offload.abstract_host(
+                (Lh, batch * NB, R, 1), sdt,
+                None, "cache_batch", None, None)
         block_tables = dev((batch, NB), jnp.int32, "batch", None)
     elif cfg.ess.offload_kv:
-        host = offload.abstract_host((Lh, batch, max_seq, D), dtype,
+        host = offload.abstract_host((Lh, batch, max_seq, D), qdt,
                                      None, "batch", None, None)
+        if sdt is not None:
+            host_scales = offload.abstract_host(
+                (Lh, batch, max_seq, 1), sdt, None, "batch", None, None)
     else:
-        host = dev((Lh, batch, max_seq, D), dtype,
+        host = dev((Lh, batch, max_seq, D), qdt,
                    None, "batch", None, None)
+        if sdt is not None:
+            host_scales = dev((Lh, batch, max_seq, 1), sdt,
+                              None, "batch", None, None)
     pool = LP.PoolState(
         data=dev((batch, P, D), dtype, "batch", None, None),
         ids=dev((batch, P), jnp.int32, "batch", None),
@@ -376,4 +463,5 @@ def abstract_ess_caches(cfg: ArchConfig, batch: int, max_seq: int,
                     for _ in range(Lh)),
         pools=tuple(pool for _ in range(Lh)),
         block_tables=block_tables,
+        host_scales=host_scales,
     )

@@ -95,6 +95,12 @@ class ESSOptions:
     # and serve-loop admission is gated on free pages.
     paged_host: bool = True
     host_page_rows: int = 16           # latent rows per host page
+    # storage dtype of the offloaded host latent tier: "bf16" (raw) or a
+    # key of repro.distributed.compression.CACHE_QUANT_DTYPES ("int8" /
+    # "fp8").  Quantized tiers carry one SCALE_DTYPE scale per row (a
+    # per-page scale vector) and dequantize at miss width inside the
+    # gather path; parity vs bf16 is bounds-based, not bitwise.
+    host_cache_dtype: str = "bf16"
 
 
 @dataclasses.dataclass(frozen=True)

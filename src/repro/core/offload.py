@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental.compute_on import compute_on
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed import compression as cmp
 from repro.distributed import sharding as shd
 
 
@@ -355,6 +356,95 @@ def scatter_from_slab(host_cache: jax.Array, ids: jax.Array,
                                      slot_mask=slot_mask,
                                      batch_offset=batch_offset,
                                      block_table=block_table)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-tier wrappers: dequant-on-gather / quantize-on-scatter
+# ---------------------------------------------------------------------------
+# The quantized host tier is two pinned-host arrays moved by the *same*
+# FlashTrans machinery above: the int8/fp8 payload [.., NP, R, D] and a
+# per-page scale vector [.., NP, R, 1] (one SCALE_DTYPE scale per row —
+# see repro.distributed.compression).  Every transfer crosses PCIe
+# compressed; bf16 rows only ever materialize at miss width, on device,
+# after the DMA (the ESS106 audit proves no cache-tier-sized upcast
+# survives into any StepProgram).
+
+
+def gather_tier_rows(host_cache: jax.Array, host_scales: jax.Array | None,
+                     ids: jax.Array, *, layer: int = 0,
+                     batch_offset: int = 0,
+                     block_table: jax.Array | None = None,
+                     out_dtype=None) -> jax.Array:
+    """Scale-aware fetch: ids [B,M] -> dequantized rows [B,M,D] on device.
+
+    ``host_scales is None`` is the raw bf16 tier (identical to
+    :func:`host_gather_rows`).  Quantized tiers gather the payload and the
+    scale column through two host-compute gathers — both DMAs move
+    compressed data — and dequantize at **miss width** on device.  Masked
+    ids return exact zeros either way (payload 0 x scale 0)."""
+    rows = host_gather_rows(host_cache, ids, layer=layer,
+                            batch_offset=batch_offset,
+                            block_table=block_table)
+    if host_scales is None:
+        return rows if out_dtype is None else rows.astype(out_dtype)
+    srows = host_gather_rows(host_scales, ids, layer=layer,
+                             batch_offset=batch_offset,
+                             block_table=block_table)
+    return cmp.dequantize_rows(rows, srows,
+                               jnp.bfloat16 if out_dtype is None
+                               else out_dtype)
+
+
+def scatter_tier_rows(host_cache: jax.Array, host_scales: jax.Array | None,
+                      ids: jax.Array, rows: jax.Array, *,
+                      slot_mask: jax.Array | None, layer: int = 0,
+                      batch_offset: int = 0,
+                      block_table: jax.Array | None = None
+                      ) -> tuple[jax.Array, jax.Array | None]:
+    """Quantize-on-scatter writeback; returns ``(cache', scales')``.
+
+    Quantization happens on device at **append width** ([B,Q,D]); only the
+    one-byte payload and the scale column cross PCIe.  ``slot_mask`` is
+    required keyword-only exactly as in :func:`host_scatter_rows`
+    (ESS001)."""
+    if host_scales is None:
+        return host_scatter_rows(host_cache, ids, rows, slot_mask=slot_mask,
+                                 layer=layer, batch_offset=batch_offset,
+                                 block_table=block_table), None
+    q, s = cmp.quantize_rows(rows, host_cache.dtype)
+    cache2 = host_scatter_rows(host_cache, ids, q, slot_mask=slot_mask,
+                               layer=layer, batch_offset=batch_offset,
+                               block_table=block_table)
+    scales2 = host_scatter_rows(host_scales, ids, s, slot_mask=slot_mask,
+                                layer=layer, batch_offset=batch_offset,
+                                block_table=block_table)
+    return cache2, scales2
+
+
+def scatter_tier_rows_stacked(host_cache: jax.Array,
+                              host_scales: jax.Array | None,
+                              ids: jax.Array, rows: jax.Array, *,
+                              slot_mask: jax.Array | None,
+                              batch_offset: int = 0,
+                              block_table: jax.Array | None = None
+                              ) -> tuple[jax.Array, jax.Array | None]:
+    """All-layer quantize-on-scatter (admission graft / prefill flush):
+    rows [L,B,Q,D] quantized per row on device, then one stacked payload
+    scatter + one stacked scale scatter.  Returns ``(cache', scales')``."""
+    if host_scales is None:
+        return host_scatter_rows_stacked(
+            host_cache, ids, rows, slot_mask=slot_mask,
+            batch_offset=batch_offset, block_table=block_table), None
+    q, s = cmp.quantize_rows(rows, host_cache.dtype)
+    cache2 = host_scatter_rows_stacked(host_cache, ids, q,
+                                       slot_mask=slot_mask,
+                                       batch_offset=batch_offset,
+                                       block_table=block_table)
+    scales2 = host_scatter_rows_stacked(host_scales, ids, s,
+                                        slot_mask=slot_mask,
+                                        batch_offset=batch_offset,
+                                        block_table=block_table)
+    return cache2, scales2
 
 
 def abstract_host(shape, dtype, *axes):

@@ -49,6 +49,11 @@ class ESSLayerState(NamedTuple):
     # dynamic_slice), so no Python-int shape leaks force a retrace.
     batch_offset: int | jax.Array = 0
     block_table: jax.Array | None = None   # [B_total, NB] paged indirection
+    # per-row scale plane of a quantized host tier ([L,NP,R,1] paged /
+    # [L,B,S,1] dense); None = raw bf16 tier.  Fetches below go through
+    # offload.gather_tier_rows, which dequantizes at miss width — bf16
+    # rows never materialize at tier width.
+    host_scales: jax.Array | None = None
 
 
 class ESSStats(NamedTuple):
@@ -200,7 +205,8 @@ def _da_or_none(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
         idx_p, cfg, x_norm, state, idx_keys, lens, slot_mask)
 
     # ---- issue the H2D fetch as early as possible (DA overlap) ----
-    fetched = offload.host_gather_rows(state.host_latent, lk.miss_ids,
+    fetched = offload.gather_tier_rows(state.host_latent, state.host_scales,
+                                       lk.miss_ids,
                                        layer=state.layer,
                                        batch_offset=state.batch_offset,
                                        block_table=state.block_table)
@@ -219,6 +225,7 @@ def ess_sparse_attention_staged(mla_p: dict, idx_p: dict, cfg: ArchConfig,
                                 lens: jax.Array, *, new_rows: jax.Array,
                                 widx: jax.Array, staged_ids_l: jax.Array,
                                 staged_rows_l: jax.Array,
+                                staged_scales_l: jax.Array | None = None,
                                 overlap: str = "da",
                                 use_kernel: bool = False,
                                 slot_mask: jax.Array | None = None):
@@ -274,15 +281,19 @@ def ess_sparse_attention_staged(mla_p: dict, idx_p: dict, cfg: ArchConfig,
             new_rows, jnp.argmax(own_eq, -1)[:, :, None], axis=1)  # [B,M,D]
         need = mvalid & ~own
         smatch, srows = TR.match_staged(staged_ids_l, staged_rows_l,
-                                        lk.miss_ids, need)
+                                        lk.miss_ids, need,
+                                        staged_scales_l=staged_scales_l,
+                                        out_dtype=new_rows.dtype)
         unmatched = need & ~smatch
         fb_ids = jnp.where(unmatched, lk.miss_ids, -1)
         fb = jax.lax.cond(
             jnp.any(unmatched),
-            lambda: offload.host_gather_rows(state.host_latent, fb_ids,
+            lambda: offload.gather_tier_rows(state.host_latent,
+                                             state.host_scales, fb_ids,
                                              layer=state.layer,
                                              batch_offset=state.batch_offset,
-                                             block_table=state.block_table),
+                                             block_table=state.block_table,
+                                             out_dtype=new_rows.dtype),
             lambda: jnp.zeros((B, M_env, D), new_rows.dtype))
         fetched = jnp.where(own[..., None], own_rows,
                             jnp.where(smatch[..., None], srows, fb))
@@ -327,20 +338,23 @@ def _dba(mla_p, idx_p, cfg, x_norm, positions, state, idx_keys, lens,
         # host cache (and block table) stays whole; the half indexes it
         # via batch_offset
         return ESSLayerState(pool, state.host_latent, state.layer,
-                             state.batch_offset + off, state.block_table)
+                             state.batch_offset + off, state.block_table,
+                             state.host_scales)
 
     s0, s1 = half(slice(0, h), 0), half(slice(h, None), h)
     # half-1 indexer + fetch issue
     p0_pool, lk0, st0, ids0, rv0, K, M_env, _ = _topk_and_lookup(
         idx_p, cfg, x_norm[:h], s0, idx_keys[:h], lens[:h], sm0)
-    fetched0 = offload.host_gather_rows(s0.host_latent, lk0.miss_ids,
+    fetched0 = offload.gather_tier_rows(s0.host_latent, s0.host_scales,
+                                        lk0.miss_ids,
                                         layer=s0.layer,
                                         batch_offset=s0.batch_offset,
                                         block_table=s0.block_table)
     # half-2 indexer (independent of fetched0 -> overlaps the copy)
     p1_pool, lk1, st1, ids1, rv1, _, _, _ = _topk_and_lookup(
         idx_p, cfg, x_norm[h:], s1, idx_keys[h:], lens[h:], sm1)
-    fetched1 = offload.host_gather_rows(s1.host_latent, lk1.miss_ids,
+    fetched1 = offload.gather_tier_rows(s1.host_latent, s1.host_scales,
+                                        lk1.miss_ids,
                                         layer=s1.layer,
                                         batch_offset=s1.batch_offset,
                                         block_table=s1.block_table)

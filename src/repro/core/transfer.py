@@ -51,10 +51,21 @@ import jax.numpy as jnp
 
 
 def empty_slab(num_layers: int, num_slots: int, prefetch_rows: int,
-               dim: int, dtype) -> tuple[jax.Array, jax.Array]:
-    """A disarmed staging slab pair: no ids staged, zeroed landing rows."""
+               dim: int, dtype, scale_dtype=None
+               ) -> tuple[jax.Array, jax.Array, jax.Array | None]:
+    """A disarmed staging slab: no ids staged, zeroed landing rows.
+
+    Returns ``(ids, rows, scales)``.  ``scales`` is ``None`` for a raw
+    bf16 tier; with a quantized host tier (``scale_dtype`` given) the slab
+    stores the rows exactly as the tier does — one-byte payload plus a
+    per-row scale plane ``[L,B,P,1]`` — so staged rows sit on device
+    *compressed* and only dequantize at miss width in
+    :func:`match_staged`."""
+    scales = None if scale_dtype is None else jnp.zeros(
+        (num_layers, num_slots, prefetch_rows, 1), scale_dtype)
     return (jnp.full((num_layers, num_slots, prefetch_rows), -1, jnp.int32),
-            jnp.zeros((num_layers, num_slots, prefetch_rows, dim), dtype))
+            jnp.zeros((num_layers, num_slots, prefetch_rows, dim), dtype),
+            scales)
 
 
 def plan_prefetch(sc_last: jax.Array, qlens_last: jax.Array,
@@ -94,8 +105,9 @@ def plan_prefetch(sc_last: jax.Array, qlens_last: jax.Array,
 
 
 def match_staged(staged_ids_l: jax.Array, staged_rows_l: jax.Array,
-                 miss_ids: jax.Array, need: jax.Array
-                 ) -> tuple[jax.Array, jax.Array]:
+                 miss_ids: jax.Array, need: jax.Array,
+                 staged_scales_l: jax.Array | None = None,
+                 out_dtype=jnp.bfloat16) -> tuple[jax.Array, jax.Array]:
     """Serve a round's miss buffer from one layer's staged slab.
 
     ``staged_ids_l [B,P]`` / ``staged_rows_l [B,P,D]`` — the slab;
@@ -107,12 +119,23 @@ def match_staged(staged_ids_l: jax.Array, staged_rows_l: jax.Array,
     staged values (bit-identical to what the synchronous gather would
     have fetched: the slab was filled from the committed host tier), the
     rest are zero.
+
+    With a quantized tier (``staged_scales_l [B,P,1]`` given) the slab
+    holds compressed payloads; the matched rows — and only those, at
+    **miss width** — dequantize here, exactly matching what the
+    synchronous :func:`repro.core.offload.gather_tier_rows` fallback
+    would produce.
     """
     eq = (miss_ids[:, :, None] == staged_ids_l[:, None, :]) \
         & (staged_ids_l >= 0)[:, None, :] & need[:, :, None]       # [B,M,P]
     matched = eq.any(-1)
     idx = jnp.argmax(eq, axis=-1)                                  # [B,M]
     rows = jnp.take_along_axis(staged_rows_l, idx[:, :, None], axis=1)
+    if staged_scales_l is not None:
+        from repro.distributed import compression as cmp
+        scales = jnp.take_along_axis(staged_scales_l, idx[:, :, None],
+                                     axis=1)                       # [B,M,1]
+        rows = cmp.dequantize_rows(rows, scales, out_dtype)
     return matched, jnp.where(matched[..., None], rows, 0)
 
 
@@ -140,25 +163,29 @@ class TransferEngine:
     """
 
     def __init__(self, num_layers: int, num_slots: int, prefetch_rows: int,
-                 dim: int, dtype):
+                 dim: int, dtype, scale_dtype=None):
         self.num_layers = num_layers
         self.num_slots = num_slots
         self.prefetch_rows = prefetch_rows
         self.dim = dim
         self.dtype = dtype
+        self.scale_dtype = scale_dtype     # quantized tier: slab holds q+s
 
     # -- pipeline stages -----------------------------------------------------
 
     def issue_stage(self, state):
         """Arm the double buffer: install empty slabs (all transfers
         cancelled; the next round stages from scratch)."""
-        ids, rows = empty_slab(self.num_layers, self.num_slots,
-                               self.prefetch_rows, self.dim, self.dtype)
-        return state._replace(staged_ids=ids, staged_rows=rows)
+        ids, rows, scales = empty_slab(self.num_layers, self.num_slots,
+                                       self.prefetch_rows, self.dim,
+                                       self.dtype, self.scale_dtype)
+        return state._replace(staged_ids=ids, staged_rows=rows,
+                              staged_scales=scales)
 
     def await_staged(self, state):
-        """The (ids, rows) pair staged for the upcoming round."""
-        return state.staged_ids, state.staged_rows
+        """The (ids, rows, scales) triple staged for the upcoming round
+        (``scales`` is ``None`` for a raw bf16 tier)."""
+        return state.staged_ids, state.staged_rows, state.staged_scales
 
     def commit(self, report, pf_hits, pf_misses, pf_wasted) -> None:
         """Commit-stage accounting: the counters ride the round's single

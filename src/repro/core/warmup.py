@@ -19,7 +19,8 @@ def lru_warmup(pool: LP.PoolState, host_latent: jax.Array,
                lens: jax.Array, cfg: ArchConfig, *,
                slot_mask: jax.Array | None, layer: int = 0,
                batch_offset: int = 0,
-               block_table: jax.Array | None = None) -> LP.PoolState:
+               block_table: jax.Array | None = None,
+               host_scales: jax.Array | None = None) -> LP.PoolState:
     """Seed the pool.
 
     x_tail [B, W, d]: post-ln1 hidden states of the last W prefill tokens
@@ -33,7 +34,9 @@ def lru_warmup(pool: LP.PoolState, host_latent: jax.Array,
 
     ``layer`` / ``batch_offset`` / ``block_table`` route the miss fetches
     through a stacked and/or paged host tier (the serve loop replays warmup
-    per admitted slot against the slot's mapped pages).
+    per admitted slot against the slot's mapped pages).  ``host_scales``
+    is the quantized tier's per-row scale plane (None = raw bf16): misses
+    dequantize at miss width on the way into the pool, which stays bf16.
     """
     B, W, _ = x_tail.shape
     S = idx_keys.shape[1]
@@ -51,8 +54,9 @@ def lru_warmup(pool: LP.PoolState, host_latent: jax.Array,
         p, lk, _ = LP.lookup(p, ids, vw, K,              # envelope = K (exact)
                              slot_mask=slot_mask,
                              dedup=False)                # per-window top-k
-        rows = offload.host_gather_rows(host_latent, lk.miss_ids,
-                                        layer=layer, batch_offset=batch_offset,
+        rows = offload.gather_tier_rows(host_latent, host_scales,
+                                        lk.miss_ids, layer=layer,
+                                        batch_offset=batch_offset,
                                         block_table=block_table)
         p = LP.admit(p, lk.miss_ids, rows, slot_mask=slot_mask)
         p = LP.tick(p)

@@ -1,10 +1,22 @@
-"""Gradient compression for the DP all-reduce (int8 + error feedback).
+"""Gradient compression for the DP all-reduce (int8 + error feedback),
+and the row-wise reference quantizer for the ESS quantized latent tier.
 
 At multi-pod scale the data-parallel gradient all-reduce crosses the slow
 pod interconnect; 8-bit quantization cuts that traffic 4x (vs fp32
 moments) / 2x (vs bf16).  Error feedback keeps the quantization noise from
 biasing convergence: the residual of each round is added back before the
 next quantization (Seide et al.; 1-bit Adam lineage).
+
+The same symmetric-quantization idiom, applied per *row* instead of per
+tensor, is what the offloaded latent cache tier stores
+(:mod:`repro.core.offload`): each host page of ``R`` latent rows carries an
+``R``-vector of scales, so a page moves as ``R*D`` one-byte payload values
+plus ``R`` half-precision scales — ~0.53x the bf16 bytes — and dequantizes
+at miss width on device.  :func:`quantize_rows` / :func:`dequantize_rows`
+are exact inverses of each other's grid: dequantizing a quantized row uses
+the *stored* (rounded-to-``SCALE_DTYPE``) scale, so the absolute error per
+element is bounded by ``scale/2`` (int8) and an all-zero row round-trips to
+exactly zero (sentinel rows stay sentinel).
 """
 
 from __future__ import annotations
@@ -34,6 +46,59 @@ def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Row-wise cache-tier quantization (quantized latent pages)
+# ---------------------------------------------------------------------------
+
+# Scales are stored half precision: 2 bytes/row next to D one-byte payload
+# bytes keeps the quantized row at (D+2)/(2D) of its bf16 size.  The scale
+# used for dequantization is the *stored* one, so quant/dequant share one
+# grid regardless of the rounding this cast introduces.
+SCALE_DTYPE = jnp.float16
+
+_FP8 = getattr(jnp, "float8_e4m3fn", None)
+
+#: name -> storage dtype of the quantized cache tier
+#: (``ESSOptions.host_cache_dtype``); "bf16" means no quantization.
+CACHE_QUANT_DTYPES: dict[str, Any] = {"int8": jnp.int8}
+if _FP8 is not None:
+    CACHE_QUANT_DTYPES["fp8"] = _FP8
+
+
+def quant_max(dtype) -> float:
+    """Largest representable magnitude of a quantized storage dtype."""
+    return 127.0 if jnp.dtype(dtype) == jnp.int8 else 448.0   # e4m3fn max
+
+
+def quantize_rows(x: jax.Array, dtype=jnp.int8
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Per-row symmetric quantization over the trailing axis.
+
+    Returns ``(q [..., D] dtype, scale [..., 1] SCALE_DTYPE)``.  All-zero
+    rows get ``scale == 0`` and ``q == 0`` (the guard keeps the division
+    finite), so sentinel/empty cache rows survive the round trip exactly.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = (amax / quant_max(dtype)).astype(SCALE_DTYPE)
+    s = scale.astype(jnp.float32)
+    y = xf / jnp.where(s > 0, s, 1.0)
+    if jnp.dtype(dtype) == jnp.int8:
+        q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    else:
+        m = quant_max(dtype)
+        q = jnp.clip(y, -m, m).astype(dtype)
+    return q, scale
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array,
+                    out_dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_rows`; ``scale`` broadcasts over the
+    trailing axis (``[..., 1]``)."""
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)).astype(out_dtype)
 
 
 def compress_grads(grads: Any, ef: EFState) -> tuple[Any, Any, EFState]:

@@ -68,6 +68,42 @@ def gather_rows_kernel(cache: jax.Array, ids: jax.Array,
     return out
 
 
+def _gather_dequant_kernel(ids_ref, cache_ref, scales_ref, out_ref):
+    # fused dequant at block width: the int8/fp8 payload never becomes a
+    # wide tensor outside this (rows, D) tile (contract ESS106)
+    out_ref[...] = (cache_ref[...].astype(jnp.float32)
+                    * scales_ref[...].astype(jnp.float32)
+                    ).astype(out_ref.dtype)
+
+
+def gather_rows_dequant_kernel(cache: jax.Array, scales: jax.Array,
+                               ids: jax.Array, out_dtype=jnp.bfloat16,
+                               interpret: bool | None = None) -> jax.Array:
+    """Quantized-tier row gather: cache [S, D] int8/fp8, scales [S, 1],
+    ids [M] int32 -> out [M, D] ``out_dtype``.  One row per grid step —
+    the DMA moves the compressed payload + a scalar scale; dequant runs
+    on the gathered tile inside the kernel."""
+    S, D = cache.shape
+    M = ids.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
+    safe = jnp.clip(ids, 0, S - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M,),
+        in_specs=[pl.BlockSpec((1, D), _index_map_cache),
+                  pl.BlockSpec((1, 1), _index_map_cache)],
+        out_specs=pl.BlockSpec((1, D), lambda i, ids_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_dequant_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, D), out_dtype),
+        interpret=interpret,
+    )(safe, cache, scales)
+
+
 def _gather_block_kernel(base_ref, cache_ref, out_ref):
     out_ref[...] = cache_ref[...]
 
@@ -98,3 +134,40 @@ def gather_row_blocks_kernel(cache: jax.Array, block_ids: jax.Array,
         out_shape=jax.ShapeDtypeStruct((NB * block_rows, D), cache.dtype),
         interpret=interpret,
     )(safe, cache)
+
+
+def _gather_block_dequant_kernel(base_ref, cache_ref, scales_ref, out_ref):
+    out_ref[...] = (cache_ref[...].astype(jnp.float32)
+                    * scales_ref[...].astype(jnp.float32)
+                    ).astype(out_ref.dtype)
+
+
+def gather_row_blocks_dequant_kernel(cache: jax.Array, scales: jax.Array,
+                                     block_ids: jax.Array, block_rows: int,
+                                     out_dtype=jnp.bfloat16,
+                                     interpret: bool | None = None
+                                     ) -> jax.Array:
+    """Quantized paged variant: whole-page fetch + per-row dequant.
+    cache [S, D] int8/fp8 with S % block_rows == 0, scales [S, 1],
+    block_ids [NB] -> out [NB*block_rows, D] ``out_dtype``.  Each grid
+    step DMAs one compressed page and its scale column and widens only
+    that (block_rows, D) tile."""
+    S, D = cache.shape
+    NB = block_ids.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
+    safe = jnp.clip(block_ids, 0, S // block_rows - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(NB,),
+        in_specs=[pl.BlockSpec((block_rows, D), lambda i, ids: (ids[i], 0)),
+                  pl.BlockSpec((block_rows, 1), lambda i, ids: (ids[i], 0))],
+        out_specs=pl.BlockSpec((block_rows, D), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_block_dequant_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((NB * block_rows, D), out_dtype),
+        interpret=interpret,
+    )(safe, cache, scales)

@@ -7,8 +7,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gather_cache.gather_cache import (gather_row_blocks_kernel,
-                                                     gather_rows_kernel)
+from repro.kernels.gather_cache.gather_cache import (
+    gather_row_blocks_dequant_kernel, gather_row_blocks_kernel,
+    gather_rows_dequant_kernel, gather_rows_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -30,3 +31,34 @@ def gather_pages(cache: jax.Array, block_ids: jax.Array, block_rows: int,
         return gather_row_blocks_kernel(cache, block_ids, block_rows, interpret)
     return jax.vmap(lambda c, i: gather_row_blocks_kernel(
         c, i, block_rows, interpret))(cache, block_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def gather_rows_dequant(cache: jax.Array, scales: jax.Array,
+                        ids: jax.Array, out_dtype=jnp.bfloat16,
+                        interpret: bool | None = None) -> jax.Array:
+    """Fused quantized-tier gather: cache [B,S,D] (or [S,D]) int8/fp8 +
+    scales [B,S,1] (or [S,1]) -> ``out_dtype`` rows, zero-masked where
+    ids < 0.  The wide representation only exists at gather width."""
+    if cache.ndim == 2:
+        out = gather_rows_dequant_kernel(cache, scales, ids, out_dtype,
+                                         interpret)
+        return jnp.where((ids >= 0)[:, None], out, 0)
+    out = jax.vmap(lambda c, s, i: gather_rows_dequant_kernel(
+        c, s, i, out_dtype, interpret))(cache, scales, ids)
+    return jnp.where((ids >= 0)[..., None], out, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "out_dtype", "interpret"))
+def gather_pages_dequant(cache: jax.Array, scales: jax.Array,
+                         block_ids: jax.Array, block_rows: int,
+                         out_dtype=jnp.bfloat16,
+                         interpret: bool | None = None) -> jax.Array:
+    """Fused quantized page fetch (paged tier): one compressed page +
+    scale column DMA'd and widened per grid step."""
+    if cache.ndim == 2:
+        return gather_row_blocks_dequant_kernel(
+            cache, scales, block_ids, block_rows, out_dtype, interpret)
+    return jax.vmap(lambda c, s, i: gather_row_blocks_dequant_kernel(
+        c, s, i, block_rows, out_dtype, interpret))(cache, scales, block_ids)

@@ -17,3 +17,21 @@ def gather_row_blocks_ref(cache: jax.Array, block_ids: jax.Array,
     pages = cache.reshape(S // block_rows, block_rows, D)
     safe = jnp.clip(block_ids, 0, S // block_rows - 1)
     return jnp.take(pages, safe, axis=0).reshape(-1, D)
+
+
+def gather_rows_dequant_ref(cache: jax.Array, scales: jax.Array,
+                            ids: jax.Array,
+                            out_dtype=jnp.bfloat16) -> jax.Array:
+    q = gather_rows_ref(cache, ids).astype(jnp.float32)
+    s = gather_rows_ref(scales, ids).astype(jnp.float32)
+    return (q * s).astype(out_dtype)
+
+
+def gather_row_blocks_dequant_ref(cache: jax.Array, scales: jax.Array,
+                                  block_ids: jax.Array, block_rows: int,
+                                  out_dtype=jnp.bfloat16) -> jax.Array:
+    q = gather_row_blocks_ref(cache, block_ids,
+                              block_rows).astype(jnp.float32)
+    s = gather_row_blocks_ref(scales, block_ids,
+                              block_rows).astype(jnp.float32)
+    return (q * s).astype(out_dtype)

@@ -57,6 +57,7 @@ from repro.core import transfer as TR
 from repro.core.overlap import (ESSLayerState, _attend_rows,
                                 ess_sparse_attention,
                                 ess_sparse_attention_staged)
+from repro.distributed import compression as cmp
 from repro.distributed.sharding import shard
 from repro.models import layers as L
 from repro.models import mla as M
@@ -161,10 +162,12 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
     attn_lens = widx + 1                                          # [B,Q]
 
     host_latent = caches.host_latent
+    host_scales = caches.host_scales   # per-row scales of a quantized tier
     ikeys_all = caches.ikeys
     pools = caches.pools
     hits = misses = ovf = jnp.zeros((B,), jnp.int32)
     lat_stack: list[jax.Array] = []    # staged mode: deferred D2H spill
+    scale_stack: list[jax.Array] = []  # staged+quantized: the rows' scales
     plan_sigs: list[tuple] = []        # staged mode: per-layer plan signal
     pf_h = pf_m = pf_w = jnp.zeros((B,), jnp.int32)
 
@@ -182,18 +185,30 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
         new_lat = M.latent_entries(lp["mla"], cfg, h, positions) # [B,Q,D]
         if staged is None:
             # masked slots' gating is already folded into widx (-1 drops)
-            host_latent = offload.host_scatter_rows(
-                host_latent, widx, new_lat, slot_mask=None, layer=layer,
-                block_table=caches.block_tables)
-        else:
+            host_latent, host_scales = offload.scatter_tier_rows(
+                host_latent, host_scales, widx, new_lat, slot_mask=None,
+                layer=layer, block_table=caches.block_tables)
+        elif host_scales is None:
             # pipelined: spill deferred to the commit stage (one stacked
             # scatter after the loop); keep the host-dtype rows at hand so
             # same-round misses are served from the live activations
             lat_stack.append(new_lat.astype(host_latent.dtype))
+            own_rows = lat_stack[-1]
+        else:
+            # pipelined + quantized: quantize ONCE here and commit the
+            # exact (q, s) pair later — the own-row bypass serves
+            # dequant(q, s), which is bit-identical to the synchronous
+            # scatter→gather round trip (re-quantizing dequantized rows
+            # would land on a different grid point)
+            q_lat, s_lat = cmp.quantize_rows(new_lat, host_latent.dtype)
+            lat_stack.append(q_lat)
+            scale_stack.append(s_lat)
+            own_rows = cmp.dequantize_rows(q_lat, s_lat, cfg.param_dtype)
 
         # --- ESS sparse attention (fetch ∥ Attn0, Attn1, merge, admit) ---
         st = ESSLayerState(pools[layer], host_latent, layer,
-                           block_table=caches.block_tables)
+                           block_table=caches.block_tables,
+                           host_scales=host_scales)
         ov = _overlap_for_layer(cfg, layer, layerwise_policy)
         if staged is None:
             attn, st2, stats = ess_sparse_attention(
@@ -201,11 +216,14 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
                 attn_lens, overlap=ov, use_kernel=use_kernel,
                 slot_mask=live)
         else:
+            sc_l = None if len(staged) < 3 or staged[2] is None \
+                else staged[2][layer]
             attn, st2, stats, sig, pf = ess_sparse_attention_staged(
                 lp["mla"], lp["indexer"], cfg, h, positions, st, ik_l,
-                attn_lens, new_rows=lat_stack[-1], widx=widx,
+                attn_lens, new_rows=own_rows, widx=widx,
                 staged_ids_l=staged[0][layer],
-                staged_rows_l=staged[1][layer], overlap=ov,
+                staged_rows_l=staged[1][layer],
+                staged_scales_l=sc_l, overlap=ov,
                 use_kernel=use_kernel, slot_mask=live)
             plan_sigs.append(sig)
             pf_h, pf_m = pf_h + pf[0], pf_m + pf[1]
@@ -229,10 +247,17 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
     stats_out = {"hits": hits, "misses": misses, "overflow": ovf,
                  "hidden": x}
     if staged is not None:
-        # --- commit stage: one stacked D2H spill of the round's appends --
+        # --- commit stage: one stacked D2H spill of the round's appends
+        # (quantized tier: the layer loop's precomputed (q, s) pairs land
+        # verbatim — payload and scale plane in one stacked scatter each,
+        # so the PCIe bytes stay at compressed width) -----------------
         host_latent = offload.scatter_from_slab(
             host_latent, widx, jnp.stack(lat_stack), slot_mask=None,
             block_table=caches.block_tables)
+        if host_scales is not None:
+            host_scales = offload.scatter_from_slab(
+                host_scales, widx, jnp.stack(scale_stack), slot_mask=None,
+                block_table=caches.block_tables)
         # --- plan stage: stage next round's predicted rows (after the
         # commit, so predictions may target rows appended this round).
         # The whole plan is gated on the round having *missed at all*: a
@@ -243,6 +268,7 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
         # the per-layer signals in one batched top-k rather than L
         # separate ones ------------------------------------------------
         Lh, P = staged[0].shape[0], staged[0].shape[2]
+        st_scales = staged[2] if len(staged) > 2 else None
 
         def _plan():
             sc_all = jnp.stack([s[0] for s in plan_sigs])         # [L,B,S]
@@ -257,28 +283,54 @@ def ess_decode(params, cfg: ArchConfig, tokens, positions,
             # invalidates, so a surviving id's bytes cannot have changed.
             # Only genuinely new ids touch the link — a plan that
             # re-predicts a stable margin skips the H2D gather entirely.
-            old_ids, old_rows = staged
+            # A quantized tier's scale plane shadows the rows exactly
+            # (same reuse select, same slab gather at one byte-pair per
+            # row extra) so the staged pair always dequantizes
+            # coherently.
+            old_ids, old_rows = staged[0], staged[1]
             eq = (pred[..., None] == old_ids[..., None, :]) \
                 & (old_ids >= 0)[..., None, :] & (pred >= 0)[..., None]
             have = eq.any(-1)                                     # [L,B,P]
             src = jnp.argmax(eq, axis=-1)
             reused = jnp.take_along_axis(old_rows, src[..., None], axis=2)
             new_ids = jnp.where(have, -1, pred)
-            new_slab_rows = jax.lax.cond(
-                jnp.any(new_ids >= 0),
-                lambda: offload.gather_into_slab(
-                    host_latent, new_ids, slot_mask=None,
-                    block_table=caches.block_tables),
-                lambda: jnp.zeros_like(staged[1]))
-            return pred, jnp.where(have[..., None], reused, new_slab_rows)
 
-        pred, slab_rows = jax.lax.cond(jnp.any(misses > 0), _plan,
-                                       lambda: staged)
+            def _gather():
+                rows = offload.gather_into_slab(
+                    host_latent, new_ids, slot_mask=None,
+                    block_table=caches.block_tables)
+                if st_scales is None:
+                    return (rows,)
+                return rows, offload.gather_into_slab(
+                    host_scales, new_ids, slot_mask=None,
+                    block_table=caches.block_tables)
+
+            def _zeros():
+                if st_scales is None:
+                    return (jnp.zeros_like(old_rows),)
+                return jnp.zeros_like(old_rows), jnp.zeros_like(st_scales)
+
+            fresh = jax.lax.cond(jnp.any(new_ids >= 0), _gather, _zeros)
+            rows_out = jnp.where(have[..., None], reused, fresh[0])
+            if st_scales is None:
+                return pred, rows_out
+            reused_s = jnp.take_along_axis(st_scales, src[..., None],
+                                           axis=2)
+            return pred, rows_out, jnp.where(have[..., None], reused_s,
+                                             fresh[1])
+
+        keep = (lambda: (staged[0], staged[1])) if st_scales is None \
+            else (lambda: (staged[0], staged[1], st_scales))
+        plan_out = jax.lax.cond(jnp.any(misses > 0), _plan, keep)
+        pred, slab_rows = plan_out[0], plan_out[1]
         pf_w = ((staged[0] >= 0).sum((0, 2)).astype(jnp.int32)
                 * live.astype(jnp.int32) - pf_h)
         stats_out.update(staged_ids=pred, staged_rows=slab_rows,
                          pf_hits=pf_h, pf_misses=pf_m, pf_wasted=pf_w)
+        if st_scales is not None:
+            stats_out["staged_scales"] = plan_out[2]
     new_caches = caches._replace(lens=new_lens, host_latent=host_latent,
+                                 host_scales=host_scales,
                                  ikeys=ikeys_all, pools=pools)
     return DecodeOut(logits, new_caches, stats_out)
 
@@ -349,6 +401,7 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
     K = min(cfg.dsa.index_topk, S)
     causal = jnp.arange(S)[None, None, :] <= widx[:, :, None]    # [Bc,C,S]
     lat_stack = []
+    scale_stack = []           # quantized tier: the chunk rows' scales
     tails = []
 
     for layer in range(cfg.num_layers):
@@ -366,9 +419,20 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
         ik_full = jax.lax.dynamic_update_slice_in_dim(ik_full, ik_slot, b0,
                                                       axis=0)
         ikeys_all = ikeys_all[:layer] + (ik_full,) + ikeys_all[layer + 1:]
-        new_lat = M.latent_entries(lp["mla"], cfg, h, positions) \
-            .astype(host.dtype)                                  # [Bc,C,D]
-        lat_stack.append(new_lat)
+        new_lat = M.latent_entries(lp["mla"], cfg, h, positions)  # [Bc,C,D]
+        if caches.host_scales is None:
+            new_lat = new_lat.astype(host.dtype)
+            lat_stack.append(new_lat)
+        else:
+            # quantize ONCE: the (q, s) pair is what the deferred stacked
+            # scatter commits, and intra-chunk attention serves
+            # dequant(q, s) — the same value any *cross*-chunk query
+            # reads back from the tier, so chunked == one-shot parity
+            # survives quantization
+            q_lat, s_lat = cmp.quantize_rows(new_lat, host.dtype)
+            lat_stack.append(q_lat)
+            scale_stack.append(s_lat)
+            new_lat = cmp.dequantize_rows(q_lat, s_lat, cfg.param_dtype)
 
         # --- exact causal DSA: per-query Top-K over the slot's keys ------
         iq = M.indexer_query(lp["indexer"], h)
@@ -379,10 +443,10 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
         # prior context from host pages; intra-chunk rows from the chunk
         local = ids >= start[:, None, None]
         prior_ids = jnp.where(local, -1, ids)
-        rows_h = offload.host_gather_rows(
-            host, prior_ids.reshape(Bc, C * K), layer=layer,
-            batch_offset=b0, block_table=caches.block_tables
-        ).reshape(Bc, C, K, -1)
+        rows_h = offload.gather_tier_rows(
+            host, caches.host_scales, prior_ids.reshape(Bc, C * K),
+            layer=layer, batch_offset=b0, block_table=caches.block_tables,
+            out_dtype=new_lat.dtype).reshape(Bc, C, K, -1)
         loc = jnp.clip(ids - start[:, None, None], 0, C - 1)
         rows_l = jnp.take_along_axis(new_lat[:, None], loc[..., None],
                                      axis=2)                     # [Bc,C,K,D]
@@ -408,10 +472,17 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
         x = x + f
 
     # one stacked D2H scatter for the whole chunk (all layers, same rows;
-    # pad rows carry widx == -1 and are dropped)
+    # pad rows carry widx == -1 and are dropped).  Quantized tier: payload
+    # and scale plane each take one stacked scatter of the precomputed
+    # (q, s) pairs — compressed D2H width
     host = offload.host_scatter_rows_stacked(
         host, widx, jnp.stack(lat_stack), slot_mask=None, batch_offset=b0,
         block_table=caches.block_tables)
+    host_scales = caches.host_scales
+    if host_scales is not None:
+        host_scales = offload.host_scatter_rows_stacked(
+            host_scales, widx, jnp.stack(scale_stack), slot_mask=None,
+            batch_offset=b0, block_table=caches.block_tables)
     new_lens = jax.lax.dynamic_update_slice(
         caches.lens, start + nv, (b0,))
     logits = None
@@ -422,7 +493,7 @@ def ess_prefill_chunk(params, cfg: ArchConfig, tokens, positions,
                            cap=cfg.logit_softcap)
         hidden_last = xf[:, jnp.maximum(nv - 1, 0)]          # [Bc, d]
     caches = caches._replace(lens=new_lens, host_latent=host,
-                             ikeys=ikeys_all)
+                             host_scales=host_scales, ikeys=ikeys_all)
     return logits, caches, tuple(tails), hidden_last
 
 
@@ -517,6 +588,13 @@ class ServeReport:
     prefetch_hits: int = 0
     prefetch_misses: int = 0
     prefetch_wasted_rows: int = 0
+    # PCIe traffic accounting in *rows*, converted to bytes with the
+    # dtype-exact row width (payload + per-row scale for a quantized
+    # tier) — the compressed-transfer win shows up here as ~0.5x bytes
+    # at identical row counts
+    h2d_rows: int = 0                   # miss rows served from the host tier
+    d2h_rows: int = 0                   # latent rows written back (all layers)
+    host_bytes_per_row: int = 0         # dtype-exact bytes/row of the tier
     finished_rids: list = dataclasses.field(default_factory=list)
     admissions_blocked: int = 0         # admit attempts gated on resources
     peak_pages_in_use: int = 0          # sampled every serve round
@@ -554,6 +632,20 @@ class ServeReport:
         """Staged-row hits / miss-buffer entries needing host rows."""
         tot = self.prefetch_hits + self.prefetch_misses
         return self.prefetch_hits / tot if tot else 0.0
+
+    @property
+    def h2d_bytes(self) -> int:
+        return self.h2d_rows * self.host_bytes_per_row
+
+    @property
+    def d2h_bytes(self) -> int:
+        return self.d2h_rows * self.host_bytes_per_row
+
+    @property
+    def transfer_bytes_per_round(self) -> float:
+        """Mean H2D + D2H bytes per decode round (dtype-exact rows)."""
+        return (self.h2d_bytes + self.d2h_bytes) / self.rounds \
+            if self.rounds else 0.0
 
     @property
     def accept_rate(self) -> float:
@@ -641,6 +733,7 @@ class ServeSession:
 
     def __init__(self, params, cfg: ArchConfig, *, num_slots: int,
                  max_seq: int, num_host_pages: Optional[int] = None,
+                 host_byte_budget: Optional[int] = None,
                  prompt_fn: Optional[Callable[[Request], jax.Array]] = None,
                  do_warmup: bool = False, use_kernel: bool = False,
                  prefill_chunk: int = 64, mtp_depth: int = 0,
@@ -675,9 +768,25 @@ class ServeSession:
             else 0
         self.num_pages = 0
         self.allocator: Optional[LC.HostPageAllocator] = None
+        # dtype-exact tier widths: admission reasons in BYTES, so a fixed
+        # host budget admits ~2x the pages when the tier is quantized
+        # (int8 payload + f16 scale vs bf16 rows)
+        self.host_row_bytes = LC.host_row_bytes(cfg, cfg.param_dtype) \
+            if cfg.ess.enabled else 0
+        self.host_page_bytes = LC.host_page_bytes(cfg, cfg.param_dtype) \
+            if cfg.ess.enabled else 0
         if self.paged:
-            self.num_pages = (num_host_pages if num_host_pages is not None
-                              else num_slots * blocks_per_slot)
+            if host_byte_budget is not None:
+                # byte-denominated provisioning: floor to whole pages of
+                # the *storage* dtype.  num_host_pages, if also given, is
+                # an additional cap.
+                by_bytes = host_byte_budget // max(1, self.host_page_bytes)
+                self.num_pages = by_bytes if num_host_pages is None \
+                    else min(by_bytes, num_host_pages)
+            else:
+                self.num_pages = (num_host_pages
+                                  if num_host_pages is not None
+                                  else num_slots * blocks_per_slot)
             self.allocator = LC.HostPageAllocator(self.num_pages)
         caches = LC.init_ess_caches(
             cfg, num_slots, max_seq, cfg.param_dtype,
@@ -695,7 +804,9 @@ class ServeSession:
         if self.prefetch_rows > 0:
             self.transfer = TR.TransferEngine(
                 cfg.num_layers, num_slots, self.prefetch_rows,
-                caches.host_latent.shape[-1], caches.host_latent.dtype)
+                caches.host_latent.shape[-1], caches.host_latent.dtype,
+                scale_dtype=None if caches.host_scales is None
+                else caches.host_scales.dtype)
         self._programs = SP.get_programs(cfg, num_slots, max_seq,
                                          use_kernel, self.tbo,
                                          self.mtp_depth,
@@ -709,7 +820,8 @@ class ServeSession:
         # per-request emitted token stream (prefill first-token + decode
         # emissions, truncated to max_new_tokens); reset on re-admission
         self.outputs: dict[int, list[int]] = {}
-        self.report = ServeReport(num_pages=self.num_pages)
+        self.report = ServeReport(num_pages=self.num_pages,
+                                  host_bytes_per_row=self.host_row_bytes)
         # request-lifecycle event stream: every delivered token and every
         # terminal record (exactly one per rid) as TokenEvents.
         # `token_events` is the full log (latency accounting);
@@ -780,13 +892,20 @@ class ServeSession:
         if self.free_pool_entries < need_entries:
             return False
         need = self.pages_needed(req)
-        if self.allocator is not None \
-                and not self.allocator.can_alloc(need + self._promised_pages):
-            ev = (f"blocked rid={req.rid}: needs {need} pages, "
-                  f"{self.allocator.free_pages - self._promised_pages} free")
-            if not self.report.events or self.report.events[-1] != ev:
-                self.report.events.append(ev)
-            return False
+        if self.allocator is not None:
+            # byte-denominated gate (dtype-aware): pages are the
+            # allocation unit, but the resource being rationed is host
+            # bytes — a quantized tier's smaller pages admit ~2x the
+            # requests into the same byte budget
+            need_bytes = need * self.host_page_bytes
+            free_bytes = (self.allocator.free_pages
+                          - self._promised_pages) * self.host_page_bytes
+            if need_bytes > free_bytes:
+                ev = (f"blocked rid={req.rid}: needs {need_bytes} host "
+                      f"bytes ({need} pages), {free_bytes} free")
+                if not self.report.events or self.report.events[-1] != ev:
+                    self.report.events.append(ev)
+                return False
         self._promised_pages += need
         self._promised_slots += 1
         return True
@@ -1078,7 +1197,8 @@ class ServeSession:
             one = warmup.lru_warmup(
                 one, self.caches.host_latent, x_tail, lp["indexer"], ik_slot,
                 lens1, self.cfg, slot_mask=None, layer=layer,
-                batch_offset=slot, block_table=self.caches.block_tables)
+                batch_offset=slot, block_table=self.caches.block_tables,
+                host_scales=self.caches.host_scales)
             pools.append(LC.graft_pool_into(full, one, slot))
         self.caches = self.caches._replace(pools=tuple(pools))
 
@@ -1207,12 +1327,19 @@ class ServeSession:
         active, pending, spec = plan.active, plan.pending, plan.spec
         pf = () if out.pf_hits is None else \
             (out.pf_hits, out.pf_misses, out.pf_wasted)
-        toks, n_emit, t0s, pf_host = jax.device_get(
-            (out.tokens, out.n_emit, [t for _, _, t in pending], pf))
+        h2d = () if out.h2d_rows is None else (out.h2d_rows,)
+        toks, n_emit, t0s, pf_host, h2d_host = jax.device_get(
+            (out.tokens, out.n_emit, [t for _, _, t in pending], pf, h2d))
         t_deliver = time.perf_counter()
         if pf_host:
             self.transfer.commit(self.report, pf_host[0].sum(),
                                  pf_host[1].sum(), pf_host[2].sum())
+        if h2d_host:
+            self.report.h2d_rows += int(h2d_host[0].sum())  # esslint: disable=ESS002 — numpy, post-fetch
+        # decode-round D2H writeback: every live slot appends Q latent
+        # rows per layer (compressed width on a quantized tier)
+        q_round = (self.mtp_depth + 1) if spec else 1
+        self.report.d2h_rows += len(active) * q_round * self.cfg.num_layers
         slot_tokens = {}
         stop_slots = []
         first_done = {}

@@ -50,10 +50,13 @@ class EngineState(NamedTuple):
     # structure).  Donated like every other leaf — XLA's aliasing is the
     # double buffer: each round consumes slab N and writes slab N+1 into
     # the same storage.  Field order matters to the ESS105 audit:
-    # ``staged_rows`` is the LAST state leaf, ``staged_ids`` the
-    # second-to-last.
-    staged_ids: jax.Array | None = None   # [L,B,P] i32 staged positions
-    staged_rows: jax.Array | None = None  # [L,B,P,D] staged host rows
+    # ``staged_rows`` is the LAST state leaf in every configuration;
+    # ``staged_scales`` (the quantized tier's per-row scale plane, None
+    # for a bf16 tier) sits between it and ``staged_ids`` so adding it
+    # never moves the audited leaf.
+    staged_ids: jax.Array | None = None     # [L,B,P] i32 staged positions
+    staged_scales: jax.Array | None = None  # [L,B,P,1] staged row scales
+    staged_rows: jax.Array | None = None    # [L,B,P,D] staged host rows
 
 
 class RoundOut(NamedTuple):
@@ -66,17 +69,24 @@ class RoundOut(NamedTuple):
     pf_hits: jax.Array | None = None     # [B] staged rows that served misses
     pf_misses: jax.Array | None = None   # [B] misses falling back to sync
     pf_wasted: jax.Array | None = None   # [B] staged rows nobody requested
+    # [B] miss rows served from the host tier this round (summed over
+    # layers) — the round's useful H2D row count; multiplied by the
+    # dtype-exact bytes/row host-side it gives the compressed-transfer
+    # accounting (quantized tiers move ~half the bytes per row)
+    h2d_rows: jax.Array | None = None
 
 
 def init_engine_state(cfg: ArchConfig, caches: LC.ESSCaches,
                       num_slots: int, *,
                       prefetch_rows: int = 0) -> EngineState:
-    staged_ids = staged_rows = None
+    staged_ids = staged_scales = staged_rows = None
     if prefetch_rows > 0:
         from repro.core import transfer as TR
-        staged_ids, staged_rows = TR.empty_slab(
+        staged_ids, staged_rows, staged_scales = TR.empty_slab(
             caches.host_latent.shape[0], num_slots, prefetch_rows,
-            caches.host_latent.shape[-1], caches.host_latent.dtype)
+            caches.host_latent.shape[-1], caches.host_latent.dtype,
+            None if caches.host_scales is None
+            else caches.host_scales.dtype)
     return EngineState(
         caches=caches,
         tok=jnp.zeros((num_slots,), jnp.int32),
@@ -89,6 +99,7 @@ def init_engine_state(cfg: ArchConfig, caches: LC.ESSCaches,
         slot_mask=jnp.zeros((num_slots,), bool),
         sample_mask=jnp.zeros((num_slots,), bool),
         staged_ids=staged_ids,
+        staged_scales=staged_scales,
         staged_rows=staged_rows,
     )
 

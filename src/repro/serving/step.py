@@ -145,7 +145,7 @@ def _decode_round_fn(units: _Units, key: str) -> Callable:
         TRACE_COUNTS[key] += 1
         caches = state.caches
         staged = None if state.staged_ids is None else \
-            (state.staged_ids, state.staged_rows)
+            (state.staged_ids, state.staged_rows, state.staged_scales)
         out = units.step(params, state.tok[:, None], caches.lens[:, None],
                          caches, state.slot_mask, staged)
         logits = out.logits[:, -1]                             # [B,V]
@@ -155,7 +155,8 @@ def _decode_round_fn(units: _Units, key: str) -> Callable:
         live = state.slot_mask
         upd = {} if staged is None else dict(
             staged_ids=out.stats["staged_ids"],
-            staged_rows=out.stats["staged_rows"])
+            staged_rows=out.stats["staged_rows"],
+            staged_scales=out.stats.get("staged_scales"))
         new_state = state._replace(
             caches=out.caches,
             tok=jnp.where(live, t, state.tok),
@@ -163,7 +164,8 @@ def _decode_round_fn(units: _Units, key: str) -> Callable:
                              state.hidden),
             emit_index=state.emit_index + live.astype(jnp.int32),
             **upd)
-        ro = RoundOut(jnp.where(live, t, 0)[:, None], live.astype(jnp.int32))
+        ro = RoundOut(jnp.where(live, t, 0)[:, None], live.astype(jnp.int32),
+                      h2d_rows=out.stats["misses"])
         if staged is not None:
             ro = ro._replace(pf_hits=out.stats["pf_hits"],
                              pf_misses=out.stats["pf_misses"],
@@ -185,7 +187,7 @@ def _spec_round_fn(units: _Units, key: str) -> Callable:
         TRACE_COUNTS[key] += 1
         live = state.slot_mask
         staged = None if state.staged_ids is None else \
-            (state.staged_ids, state.staged_rows)
+            (state.staged_ids, state.staged_rows, state.staged_scales)
         spec = units.spec(params, state.caches, state.tok, state.hidden,
                           live, state.sample_mask, staged)
         # false branch reuses the verify step's own position-0 argmax
@@ -201,14 +203,16 @@ def _spec_round_fn(units: _Units, key: str) -> Callable:
                                    axis=1)[:, 0]
         upd = {} if staged is None else dict(
             staged_ids=spec.stats["staged_ids"],
-            staged_rows=spec.stats["staged_rows"])
+            staged_rows=spec.stats["staged_rows"],
+            staged_scales=spec.stats.get("staged_scales"))
         new_state = state._replace(
             caches=spec.caches,
             tok=jnp.where(live, last, state.tok),
             hidden=jnp.where(live[:, None], spec.hidden, state.hidden),
             emit_index=state.emit_index + live.astype(jnp.int32),
             **upd)
-        ro = RoundOut(jnp.where(live[:, None], tokens, 0), n_emit)
+        ro = RoundOut(jnp.where(live[:, None], tokens, 0), n_emit,
+                      h2d_rows=spec.stats["misses"])
         if staged is not None:
             ro = ro._replace(pf_hits=spec.stats["pf_hits"],
                              pf_misses=spec.stats["pf_misses"],

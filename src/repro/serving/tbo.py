@@ -75,8 +75,11 @@ def two_batch_step(step_fn: Callable, params, cfg, tokens, positions,
         kw_a["slot_mask"] = slot_mask[:h]
         kw_b["slot_mask"] = slot_mask[h:]
     if staged is not None:
-        kw_a["staged"] = (staged[0][:, :h], staged[1][:, :h])
-        kw_b["staged"] = (staged[0][:, h:], staged[1][:, h:])
+        sc = staged[2] if len(staged) > 2 else None
+        kw_a["staged"] = (staged[0][:, :h], staged[1][:, :h],
+                          None if sc is None else sc[:, :h])
+        kw_b["staged"] = (staged[0][:, h:], staged[1][:, h:],
+                          None if sc is None else sc[:, h:])
     out_a = step_fn(params, cfg, tokens[:h], positions[:h], caches_a, **kw_a)
     out_b = step_fn(params, cfg, tokens[h:], positions[h:], caches_b, **kw_b)
     logits = jnp.concatenate([out_a.logits, out_b.logits], axis=0)
@@ -84,7 +87,8 @@ def two_batch_step(step_fn: Callable, params, cfg, tokens, positions,
     for k in out_a.stats:
         va, vb = out_a.stats[k], out_b.stats[k]
         if k.startswith("staged_"):              # [L,B/2,...] slab halves
-            stats[k] = jnp.concatenate([va, vb], axis=1)
+            stats[k] = None if va is None else \
+                jnp.concatenate([va, vb], axis=1)
         else:
             stats[k] = jnp.concatenate([va, vb], axis=0) \
                 if getattr(va, "ndim", 0) > 0 else va
@@ -106,6 +110,7 @@ def split_caches(caches, half: int):
             # paged host tier: the page pool is global; each half keeps the
             # whole pool and slices its block-table rows (slots own disjoint
             # pages, so the halves' writebacks never collide)
+            hs = getattr(caches, "host_scales", None)
             return caches._replace(
                 lens=caches.lens[lo:hi],
                 host_latent=caches.host_latent if paged
@@ -114,7 +119,10 @@ def split_caches(caches, half: int):
                 pools=tuple(jax.tree.map(
                     lambda a: a[lo:hi] if a.ndim > 0 else a, p)
                     for p in caches.pools),
-                block_tables=caches.block_tables[lo:hi] if paged else None)
+                block_tables=caches.block_tables[lo:hi] if paged else None,
+                # the scale plane shadows the payload pool: global when
+                # paged (ownership-merged later), batch-sliced when dense
+                host_scales=hs if hs is None or paged else hs[:, lo:hi])
         def one(a):
             if a.ndim == 0:
                 return a
@@ -148,6 +156,7 @@ def merge_caches(caches_a, caches_b):
     b_paged = getattr(caches_b, "block_tables", None) is not None
     if a_paged != b_paged:
         raise ValueError("cannot merge paged and dense cache halves")
+    hs_a = getattr(caches_a, "host_scales", None)
     if a_paged:
         NP = caches_a.host_latent.shape[1]
         owned_b = LC.pages_owned_mask(caches_b.block_tables, NP)
@@ -155,10 +164,17 @@ def merge_caches(caches_a, caches_b):
                          caches_b.host_latent, caches_a.host_latent)
         bt = jnp.concatenate([caches_a.block_tables,
                               caches_b.block_tables], axis=0)
+        # the scale plane takes the exact same page-ownership select —
+        # keeping either half's scales verbatim would dequantize the
+        # other half's fresh payload with stale scales
+        scales = None if hs_a is None else jnp.where(
+            owned_b[None, :, None, None], caches_b.host_scales, hs_a)
     else:
         host = jnp.concatenate([caches_a.host_latent,
                                 caches_b.host_latent], axis=1)
         bt = None
+        scales = None if hs_a is None else jnp.concatenate(
+            [hs_a, caches_b.host_scales], axis=1)
     pools = tuple(
         LP.PoolState(*(jnp.concatenate([la, lb], axis=0)
                        if la.ndim > 0 else la
@@ -170,4 +186,5 @@ def merge_caches(caches_a, caches_b):
         ikeys=tuple(jnp.concatenate([ia, ib], axis=0)
                     for ia, ib in zip(caches_a.ikeys, caches_b.ikeys)),
         pools=pools,
-        block_tables=bt)
+        block_tables=bt,
+        host_scales=scales)

@@ -117,3 +117,82 @@ def test_compression_under_psum():
         print("COMPRESS_OK")
     """)
     assert "COMPRESS_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Reference-quantizer edge cases (single process — quantize_rows is the
+# cache tier's reference quantizer, so its corners are contract surface)
+# ---------------------------------------------------------------------------
+
+def _cmp():
+    import jax  # noqa: F401  (keeps the lazy import pattern of this file)
+    from repro.distributed import compression as cmp
+    return cmp
+
+
+def test_quantize_rows_all_zero_page_roundtrips_exactly():
+    import jax.numpy as jnp
+    import numpy as np
+    cmp = _cmp()
+    x = jnp.zeros((2, 4, 8), jnp.bfloat16)       # an all-zero host page
+    for dt in cmp.CACHE_QUANT_DTYPES.values():
+        q, s = cmp.quantize_rows(x, dt)
+        assert s.shape == (2, 4, 1) and s.dtype == cmp.SCALE_DTYPE
+        np.testing.assert_array_equal(np.array(q, np.int32), 0)
+        np.testing.assert_array_equal(np.array(s, np.float32), 0.0)
+        deq = cmp.dequantize_rows(q, s, jnp.bfloat16)
+        np.testing.assert_array_equal(np.array(deq, np.float32), 0.0)
+
+
+def test_quantize_rows_sentinel_rows_keep_zero_scale():
+    # zero rows *inside* a page of live rows stay exactly zero — the
+    # paged tier's unwritten/sentinel rows must survive the round trip
+    import jax.numpy as jnp
+    import numpy as np
+    cmp = _cmp()
+    x = jnp.stack([jnp.zeros((8,)), jnp.full((8,), 3.0),
+                   jnp.zeros((8,))]).astype(jnp.bfloat16)
+    q, s = cmp.quantize_rows(x, jnp.int8)
+    sf = np.array(s, np.float32).ravel()
+    assert sf[0] == 0.0 and sf[2] == 0.0 and sf[1] > 0.0
+    deq = np.array(cmp.dequantize_rows(q, s, jnp.bfloat16), np.float32)
+    np.testing.assert_array_equal(deq[0], 0.0)
+    np.testing.assert_array_equal(deq[2], 0.0)
+    np.testing.assert_allclose(deq[1], 3.0, rtol=2e-2)
+
+
+def test_quantize_rows_max_magnitude_clips_not_wraps():
+    # the f16-rounded stored scale can land *below* amax/qmax; the
+    # payload must clip to the dtype's max magnitude, never overflow
+    import jax.numpy as jnp
+    import numpy as np
+    cmp = _cmp()
+    x = jnp.array([[1000.0, -1000.0, 999.9, 0.25]], jnp.float32)
+    for name, dt in cmp.CACHE_QUANT_DTYPES.items():
+        q, s = cmp.quantize_rows(x, dt)
+        qf = np.array(q, np.float32)
+        m = cmp.quant_max(dt)
+        assert np.abs(qf).max() <= m
+        assert qf[0, 0] == m and qf[0, 1] == -m          # amax hits the rail
+        deq = np.array(cmp.dequantize_rows(q, s, jnp.float32))
+        np.testing.assert_allclose(deq[0, :2], [1000.0, -1000.0],
+                                   rtol=1e-2)
+        # small elements keep their sign and scale-bounded error
+        assert abs(deq[0, 3] - 0.25) <= np.array(s, np.float32)[0, 0]
+
+
+def test_quantize_rows_negative_only_rows():
+    # amax from a negative extremum: symmetric quantization must not
+    # bias the sign or saturate one-sided
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    cmp = _cmp()
+    x = -jnp.abs(jax.random.normal(jax.random.key(3), (5, 16),
+                                   jnp.float32)) - 0.1
+    q, s = cmp.quantize_rows(x.astype(jnp.bfloat16), jnp.int8)
+    deq = np.array(cmp.dequantize_rows(q, s, jnp.float32))
+    assert (deq <= 0).all()
+    err = np.abs(deq - np.array(x, np.float32))
+    bound = np.array(s, np.float32) * 0.5 + np.abs(np.array(x)) * 0.01
+    assert (err <= bound).all()

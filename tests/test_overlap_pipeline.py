@@ -47,9 +47,18 @@ def params(cfg):
 # ---------------------------------------------------------------------------
 
 def test_empty_slab_is_disarmed():
-    ids, rows = TR.empty_slab(3, 2, 4, 8, jnp.bfloat16)
+    ids, rows, scales = TR.empty_slab(3, 2, 4, 8, jnp.bfloat16)
     assert ids.shape == (3, 2, 4) and (np.array(ids) == -1).all()
     assert rows.shape == (3, 2, 4, 8) and (np.array(rows) == 0).all()
+    assert scales is None                        # raw bf16 tier: no plane
+
+
+def test_empty_slab_quantized_carries_scale_plane():
+    ids, rows, scales = TR.empty_slab(3, 2, 4, 8, jnp.int8,
+                                      scale_dtype=jnp.float16)
+    assert rows.dtype == jnp.int8
+    assert scales.shape == (3, 2, 4, 1) and scales.dtype == jnp.float16
+    assert (np.array(scales) == 0).all()
 
 
 def test_plan_prefetch_ranks_nonresident_in_horizon_by_score():
@@ -99,12 +108,14 @@ def test_transfer_engine_lifecycle_edges_cancel_staged_ids():
                        [[3, 6, 7], [0, 2, 5]]], jnp.int32)
 
     class _S:
-        def __init__(self, ids, rows):
+        def __init__(self, ids, rows, scales=None):
             self.staged_ids, self.staged_rows = ids, rows
+            self.staged_scales = scales
 
         def _replace(self, **kw):
             return _S(kw.get("staged_ids", self.staged_ids),
-                      kw.get("staged_rows", self.staged_rows))
+                      kw.get("staged_rows", self.staged_rows),
+                      kw.get("staged_scales", self.staged_scales))
 
     s = _S(ids, jnp.zeros((2, 2, 3, 4)))
     # truncate: slot 1 rolls back to len 5 -> staged ids >= 5 cancel,
@@ -115,10 +126,11 @@ def test_transfer_engine_lifecycle_edges_cancel_staged_ids():
     # invalidate: release/abort cancels the whole slot column
     v = te.invalidate_slot(t, 0)
     assert (np.array(v.staged_ids[:, 0]) == -1).all()
-    # issue_stage disarms everything; await_staged hands the pair back
+    # issue_stage disarms everything; await_staged hands the triple back
     a = te.issue_stage(v)
-    aid, arow = te.await_staged(a)
+    aid, arow, ascale = te.await_staged(a)
     assert (np.array(aid) == -1).all() and (np.array(arow) == 0).all()
+    assert ascale is None                        # raw tier: no scale plane
 
 
 # ---------------------------------------------------------------------------
