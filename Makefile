@@ -1,6 +1,7 @@
 # Tier-1 verify: the exact command from ROADMAP.md.
 .PHONY: test test-full bench-serve bench-smoke example-serve \
-	example-stream-abort examples-smoke lint-ess lint-ess-fast
+	example-stream-abort example-cluster examples-smoke lint-ess \
+	lint-ess-fast
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
@@ -23,8 +24,13 @@ example-serve:
 example-stream-abort:
 	python examples/stream_abort.py
 
-# CI examples smoke job: both demos end to end
-examples-smoke: example-serve example-stream-abort
+# PD-disaggregated cluster demo: 1 prefill + 2 decode workers, bitwise
+# stream parity across the page-granular handoff
+example-cluster:
+	python examples/serve_cluster.py
+
+# CI examples smoke job: all demos end to end
+examples-smoke: example-serve example-stream-abort example-cluster
 
 # esslint: AST rules + jaxpr contract audit vs the checked-in baseline
 # (see ANALYSIS.md).  CI runs the full check; the fast variant is the

@@ -22,7 +22,13 @@ Emits ``BENCH_serve.json`` with tokens/s vs. batch:
   ``rounds_per_s`` on the same workload; asserts compiled >= eager and
   that the two modes' streams match) and a ``latency`` sub-point
   (p50/p95 TTFT and inter-token gap derived from ``TokenEvent``
-  timestamps through the public ``EssEngine`` API).
+  timestamps through the public ``EssEngine`` API).  A ``pd`` sub-point
+  drives the PD-disaggregated ``EssCluster`` (1 prefill + 2 decode
+  workers, same total decode slots) against the single engine: streams
+  must be bitwise identical across the handoff and decode goodput no
+  worse.  The simulated sweeps carry ``ess_pd``/``ess_pd_q8`` columns —
+  the ESS rows with the per-sequence inter-node migration cost
+  amortized over each sequence's decode rounds.
 
 All live rows drive the serve loop through ``EssEngine.generate``
 (``repro.serving.api``) — the same front-end real clients use.
@@ -50,9 +56,10 @@ def simulated_trajectory(context: int = 32768) -> dict:
 
     from repro.simulator.costmodel import (LATENT_Q8_BYTES, ServeConfig,
                                            max_feasible_batch,
-                                           max_host_admission_batch)
+                                           max_host_admission_batch,
+                                           pd_migration_time_per_seq)
     from repro.simulator.hardware import H800_EP32
-    from repro.simulator.pipeline import throughput_node
+    from repro.simulator.pipeline import simulate_step, throughput_node
 
     hw = H800_EP32
     base = ServeConfig(batch_per_gpu=52, context=context, mtp=2,
@@ -69,6 +76,21 @@ def simulated_trajectory(context: int = 32768) -> dict:
     essq = dataclasses.replace(ess, cache_bytes_per_row=LATENT_Q8_BYTES)
     essqa = dataclasses.replace(essq, async_offload=True)
     gpu_cap = max_feasible_batch(hw, base)
+
+    # PD-disaggregated columns: decode nodes run the same ESS round, plus
+    # one inter-node handoff per sequence lifetime (prompt pages + ikeys
+    # across the EP fabric, storage dtype = wire format), amortized over
+    # the sequence's decode rounds.  The quantized tier's smaller pages
+    # shrink the handoff by the same 578/656 row-byte factor.
+    AVG_NEW = 256            # mean generated tokens per sequence
+
+    def pd_throughput(sc) -> float:
+        t_round = simulate_step(hw, sc)
+        rounds_per_seq = AVG_NEW / sc.accept_ratio
+        t_mig = pd_migration_time_per_seq(hw, sc)
+        t_eff = t_round + t_mig / rounds_per_seq
+        return sc.gpus_per_node * sc.batch_per_gpu * sc.accept_ratio / t_eff
+
     rows = []
     for bs in [8, 16, 32, 52, 64, 96, 128, 160]:
         sc_b = dataclasses.replace(base, batch_per_gpu=bs)
@@ -85,6 +107,8 @@ def simulated_trajectory(context: int = 32768) -> dict:
             "ess_q8_tokens_per_s": round(throughput_node(hw, sc_q), 1),
             "ess_q8_async_tokens_per_s": round(throughput_node(hw, sc_qa),
                                                1),
+            "ess_pd_tokens_per_s": round(pd_throughput(sc_e), 1),
+            "ess_pd_q8_tokens_per_s": round(pd_throughput(sc_q), 1),
         })
     return {
         "hardware": hw.name,
@@ -97,6 +121,11 @@ def simulated_trajectory(context: int = 32768) -> dict:
         "host_admission_ceiling_paged": max_host_admission_batch(hw, ess),
         "host_admission_ceiling_paged_q8": max_host_admission_batch(
             hw, essq),
+        "pd_avg_new_tokens": AVG_NEW,
+        "pd_migration_s_per_seq": round(
+            pd_migration_time_per_seq(hw, ess), 6),
+        "pd_migration_s_per_seq_q8": round(
+            pd_migration_time_per_seq(hw, essq), 6),
         "trajectory": rows,
     }
 
@@ -496,6 +525,73 @@ def quant_smoke_point() -> dict:
     return point
 
 
+def pd_smoke_point() -> dict:
+    """PD-disaggregated cluster (1 prefill + 2 decode workers) vs a
+    single engine with the same total decode slots, on the same params
+    and workload.
+
+    Correctness bar: every stream is bitwise identical to the single
+    engine's — the migration moves the complete per-request state.
+    Perf bar: decode goodput per *slot-round* (decode tokens / rounds /
+    decode slots) is no worse than the single engine's.  That is the
+    structural claim of disaggregation: the single engine's slots spend
+    rounds holding prompts through chunked prefill, a PD decode slot
+    only ever holds a decoding request."""
+    from repro.cluster import EssCluster
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.serving.api import EssEngine, SamplingParams
+
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    N, PROMPT, NEW = 8, 12, 6
+    sp = SamplingParams(max_tokens=NEW)
+
+    for _ in range(2):       # first pass warms the StepProgram caches
+        eng = EssEngine(params, cfg, num_slots=4, max_seq=32,
+                        prefill_chunk=8)
+        outs = eng.generate([PROMPT] * N, sp, max_rounds=300)
+        assert all(o.finish_reason == "length" for o in outs)
+    rep = eng.session.report
+
+    for _ in range(2):
+        clu = EssCluster(params, cfg, num_prefill=1, num_decode=2,
+                         num_slots=4, decode_slots=2, max_seq=32,
+                         prefill_chunk=8)
+        pouts = clu.generate([PROMPT] * N, sp, max_rounds=300)
+        assert all(o.finish_reason == "length" for o in pouts)
+    # bitwise stream parity across the PD split
+    assert [o.tokens for o in pouts] == [o.tokens for o in outs]
+    m = clu.metrics()
+    assert m["migrations"] == N == m["installed"]
+
+    pd_rounds = sum(w.session.report.rounds for w in clu.decode)
+    single_goodput = rep.decode_tokens / (rep.rounds * 4)
+    pd_goodput = m["decode_tokens"] / (pd_rounds * 2)
+    point = {
+        "requests": N,
+        "topology": "1P(4 slots)+2D(2 slots each)",
+        "single_slots": 4,
+        "single_rounds": rep.rounds,
+        "single_decode_tokens": rep.decode_tokens,
+        "single_goodput_tokens_per_slot_round": round(single_goodput, 3),
+        "cluster_steps": m["cluster_steps"],
+        "pd_decode_rounds": pd_rounds,
+        "pd_decode_tokens": m["decode_tokens"],
+        "pd_goodput_tokens_per_slot_round": round(pd_goodput, 3),
+        "migrations": m["migrations"],
+        "wire_bytes": m["wire_bytes"],
+        "stream_parity": True,
+        "note": "same params/workload; streams bitwise identical across "
+                "the PD handoff; goodput = decode tokens per decode "
+                "slot-round — single-engine slots lose rounds to "
+                "chunked prefill, PD decode slots never do",
+    }
+    assert pd_goodput >= single_goodput, point
+    return point
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
@@ -514,6 +610,7 @@ def main(argv=None) -> int:
         point["latency"] = latency_smoke_point()
         point["overlap"] = overlap_smoke_point()
         point["quant"] = quant_smoke_point()
+        point["pd"] = pd_smoke_point()
         prev = {}
         if os.path.exists(args.out):
             try:
@@ -529,6 +626,7 @@ def main(argv=None) -> int:
         lt = point["latency"]
         ov = point["overlap"]
         qt = point["quant"]
+        pd = point["pd"]
         print(f"appended smoke point #{len(prev['smoke_trajectory'])} to "
               f"{args.out} ({round(time.time() - t0, 1)}s): "
               f"{point['tokens_per_s']} tok/s, "
@@ -549,7 +647,12 @@ def main(argv=None) -> int:
               f"quant: {qt['admitted_q8']}/{qt['admitted_bf16']} admitted "
               f"at {qt['host_byte_budget']} B, transfer ratio "
               f"{qt['transfer_ratio']}, greedy match "
-              f"{qt['greedy_token_match']}")
+              f"{qt['greedy_token_match']}; "
+              f"pd: {pd['pd_goodput_tokens_per_slot_round']} vs single "
+              f"{pd['single_goodput_tokens_per_slot_round']} "
+              f"tok/slot-round "
+              f"({pd['migrations']} migrations, {pd['wire_bytes']} B wire, "
+              f"streams bitwise equal)")
         return 0
 
     t0 = time.time()

@@ -26,6 +26,10 @@ FETCH_BUDGET_PER_ROUND = 1
 # in the commit stage; plan/compute must stay fetch-free.
 FETCH_SITES = {
     "repro/serving/engine.py::ServeSession._commit_round",
+    # the PD handoff's serialization point: one packed device_get per
+    # migration (pages + scale plane + indexer keys + first token + MTP
+    # hidden) — see PACK_BUDGET_PER_MIGRATION / ESS107 below
+    "repro/cluster/kv_transfer.py::pack_migration",
 }
 
 # ---------------------------------------------------------------------------
@@ -92,7 +96,8 @@ ESS001_TARGETS = {
 # legitimately and are out of scope)
 # ---------------------------------------------------------------------------
 
-ESS002_MODULE_PREFIXES = ("repro/serving/", "repro/core/", "repro/cache/")
+ESS002_MODULE_PREFIXES = ("repro/serving/", "repro/core/", "repro/cache/",
+                          "repro/cluster/")
 
 # ---------------------------------------------------------------------------
 # ESS003 scope: traced round bodies (modules fully traced into the
@@ -158,3 +163,20 @@ ESS105_STAGED_ROWS_LEAF = -1  # EngineState leaf index, from the end
 # tier itself).
 ESS106_NARROW_DTYPES = ("int8", "float8_e4m3fn", "float8_e5m2")
 ESS106_WIDE_DTYPES = ("bfloat16", "float16", "float32")
+
+# ---------------------------------------------------------------------------
+# ESS107: one host-side page-pack per PD migration
+# ---------------------------------------------------------------------------
+
+# A prefill→decode handoff serializes a finished prompt's state exactly
+# once: :func:`repro.cluster.kv_transfer.pack_migration` reads the
+# slot's host pages, scale plane, indexer keys, first token and MTP
+# hidden in ONE packed ``jax.device_get`` (the allowlisted pack site in
+# FETCH_SITES).  The page inventory itself comes from the host-side
+# allocator (``HostPageAllocator.owned``), so packing never needs a
+# second fetch to discover *what* to move; and a decode worker's serve
+# rounds keep the ordinary FETCH_BUDGET_PER_ROUND — installing a
+# migration adds zero fetches on the decode side (the first token rides
+# the packet).
+PACK_BUDGET_PER_MIGRATION = 1
+PACK_SITE = "repro/cluster/kv_transfer.py::pack_migration"

@@ -1,7 +1,7 @@
 """esslint layer 2 — lower every StepProgram and audit the serve
 contracts (:mod:`repro.analysis.contracts`).
 
-Six audits, each a thin driver over a pure checker (the checkers take
+Seven audits, each a thin driver over a pure checker (the checkers take
 plain data so tests can exercise failure paths without lowering):
 
 * **ESS101 donation** — every round program donates the EngineState
@@ -32,6 +32,14 @@ plain data so tests can exercise failure paths without lowering):
   happens strictly after the gather, at miss/slab width.  A tier-sized
   convert means some path materialized the whole decompressed tier —
   the exact blowup the compressed representation exists to avoid.
+* **ESS107 one-handoff** — driving a PD-disaggregated
+  :class:`~repro.cluster.EssCluster` (1 prefill + 1 decode worker),
+  every migration is exactly one host-side page-pack
+  (:data:`PACK_BUDGET_PER_MIGRATION` fetches at the allowlisted pack
+  site), prefill rounds fetch only to pack, install performs zero
+  fetches, and decode rounds stay within the ESS102 one-fetch budget —
+  a smuggled second ``device_get`` anywhere in a worker round is
+  caught.
 
 Abstract lowering (ESS101/ESS104) uses ``ShapeDtypeStruct`` trees — no
 parameter memory is allocated.  The workload audits (ESS102/ESS103)
@@ -574,6 +582,154 @@ def audit_pipeline_overlap(cfg=None, *, targets=None, **kw
 
 
 # ---------------------------------------------------------------------------
+# ESS107: one-handoff migration pack (PD cluster)
+# ---------------------------------------------------------------------------
+
+def check_migration_packs(pack_fetches: list[int],
+                          packs_per_rid: dict[int, int],
+                          prefill_extra: list[int],
+                          decode_counts: list[int], decode_rounds: int,
+                          stray: int = 0,
+                          budget: int = C.PACK_BUDGET_PER_MIGRATION
+                          ) -> list[Finding]:
+    """Pure checker over the fetch accounting of one PD cluster run:
+    every migration pack is exactly ``budget`` fetches, every migrated
+    rid packs once, prefill rounds fetch only to pack, decode rounds
+    stay within the one-fetch round budget, and nothing fetches outside
+    a worker round (install is zero-fetch)."""
+    out = []
+    for i, n in enumerate(pack_fetches):
+        if n != budget:
+            out.append(Finding(
+                rule="ESS107", path=_AUDIT_PATH, line=0,
+                scope=f"pack[{i}]",
+                message=f"{n} device->host fetches in one migration pack "
+                        f"(budget {budget}: pages + scales + ikeys + "
+                        f"hidden + t0 ride ONE packed fetch)"))
+    for rid, n in sorted(packs_per_rid.items()):
+        if n != 1:
+            out.append(Finding(
+                rule="ESS107", path=_AUDIT_PATH, line=0,
+                scope=f"rid[{rid}]",
+                message=f"rid={rid} packed {n} times — one handoff per "
+                        f"migration"))
+    for i, n in enumerate(prefill_extra):
+        if n > 0:
+            out.append(Finding(
+                rule="ESS107", path=_AUDIT_PATH, line=0,
+                scope=f"prefill_round[{i}]",
+                message=f"{n} device->host fetches outside the pack site "
+                        f"in a prefill worker round — prefill fetches "
+                        f"only to pack"))
+    for f in check_fetch_counts(decode_counts, decode_rounds):
+        out.append(dataclasses.replace(
+            f, rule="ESS107", scope=f"decode_{f.scope}"))
+    if stray:
+        out.append(Finding(
+            rule="ESS107", path=_AUDIT_PATH, line=0, scope="cluster",
+            message=f"{stray} device->host fetches outside any worker "
+                    f"round (placement/install must perform zero "
+                    f"fetches — the first token rides the packet)"))
+    return out
+
+
+def audit_migration_packs(cfg=None, *, decode_session_cls=None,
+                          max_seq: Optional[int] = None) -> list[Finding]:
+    """Drive a 1-prefill + 1-decode :class:`EssCluster` over the mixed
+    workload, counting ``jax.device_get`` and bracketing every
+    ``pack_migration`` call (the allowlisted ESS107 pack site,
+    :data:`contracts.PACK_SITE`) and every worker round.
+    ``decode_session_cls`` is injectable so tests can demonstrate the
+    audit catching a decode round that smuggles a second fetch."""
+    from repro.cluster import EssCluster
+    from repro.cluster import kv_transfer as KT
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    from repro.serving.api import SamplingParams
+    cfg = cfg if cfg is not None else _smoke_cfg()
+    max_seq = max_seq if max_seq is not None else next(_FRESH_SEQ)
+    params = init_params(jax.random.key(0), T.model_def(cfg))
+    cluster = EssCluster(params, cfg, num_prefill=1, num_decode=1,
+                         num_slots=2, max_seq=max_seq, prefill_chunk=8,
+                         compiled=True,
+                         decode_session_cls=decode_session_cls)
+    real = jax.device_get
+    calls = [0]
+
+    def counting(*a, **k):
+        calls[0] += 1
+        return real(*a, **k)
+
+    pack_fetches: list[int] = []
+    packs_per_rid: dict[int, int] = {}
+    real_pack = KT.pack_migration
+
+    def counting_pack(session, slot, req, t0, **kw):
+        before = calls[0]
+        pkt = real_pack(session, slot, req, t0, **kw)
+        pack_fetches.append(calls[0] - before)
+        packs_per_rid[req.rid] = packs_per_rid.get(req.rid, 0) + 1
+        return pkt
+
+    prefill_extra: list[int] = []
+    decode_counts: list[int] = []
+
+    def wrap_prefill(w):
+        orig = w.step
+
+        def step():
+            before, npk = calls[0], len(pack_fetches)
+            out = orig()
+            prefill_extra.append(calls[0] - before
+                                 - sum(pack_fetches[npk:]))
+            return out
+
+        w.step = step
+
+    def wrap_decode(w):
+        orig = w.step
+
+        def step():
+            before = calls[0]
+            out = orig()
+            decode_counts.append(calls[0] - before)
+            return out
+
+        w.step = step
+
+    for w in cluster.prefill:
+        wrap_prefill(w)
+    for w in cluster.decode:
+        wrap_decode(w)
+
+    jax.device_get = counting
+    KT.pack_migration = counting_pack
+    try:
+        for r in _mixed_requests():
+            cluster.submit(r.prompt_len, SamplingParams(
+                max_tokens=r.max_new_tokens, temperature=r.temperature,
+                seed=r.seed))
+        guard = 100
+        while cluster.has_work() and guard:
+            cluster.step()
+            guard -= 1
+        total_calls = calls[0]
+    finally:
+        jax.device_get = real
+        KT.pack_migration = real_pack
+    if not guard:
+        return [Finding(rule="ESS107", path=_AUDIT_PATH, line=0,
+                        scope="driver",
+                        message="cluster workload did not finish in "
+                                "100 steps")]
+    stray = (total_calls - sum(pack_fetches) - sum(prefill_extra)
+             - sum(decode_counts))
+    return check_migration_packs(
+        pack_fetches, packs_per_rid, prefill_extra, decode_counts,
+        sum(w.session.report.rounds for w in cluster.decode), stray)
+
+
+# ---------------------------------------------------------------------------
 # the full audit
 # ---------------------------------------------------------------------------
 
@@ -631,4 +787,9 @@ def run_all(*, paged: bool = True, dense: bool = True,
         for f in audit_fetch_counts(cfg, overlap=True):
             findings.append(dataclasses.replace(
                 f, scope=f"paged+pf/{f.scope}"))
+        # PD disaggregation: the migration pack joins the fetch
+        # discipline — one packed fetch per handoff, zero on install.
+        for f in audit_migration_packs(cfg):
+            findings.append(dataclasses.replace(
+                f, scope=f"cluster/{f.scope}"))
     return findings

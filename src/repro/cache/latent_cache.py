@@ -266,6 +266,12 @@ class HostPageAllocator:
         self._free.extend(pages)
         return pages
 
+    def owned(self, slot: int) -> list[int]:
+        """Pages currently owned by one slot, in allocation order (the
+        slot's block-table prefix).  The PD handoff reads this host-side
+        inventory to pack a migration without a device fetch."""
+        return list(self._owned.get(slot, []))
+
 
 # ---------------------------------------------------------------------------
 # Paged <-> packed views

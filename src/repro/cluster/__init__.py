@@ -1,0 +1,20 @@
+"""PD-disaggregated serving cluster (paper Fig. 3's cross-node "Load").
+
+:class:`EssCluster` is the multi-node drop-in for
+:class:`repro.serving.api.EssEngine`; :mod:`kv_transfer` is the
+page-granular latent handoff; :mod:`workers` and :mod:`router` are the
+prefill/decode halves and the placement policy.
+"""
+
+from repro.cluster.cluster import EssCluster
+from repro.cluster.kv_transfer import (InterNodeChannel, MigrationPacket,
+                                       can_accept, install_migration,
+                                       pack_migration)
+from repro.cluster.router import Router
+from repro.cluster.workers import DecodeWorker, PrefillWorker
+
+__all__ = [
+    "EssCluster", "InterNodeChannel", "MigrationPacket", "Router",
+    "PrefillWorker", "DecodeWorker", "pack_migration", "install_migration",
+    "can_accept",
+]

@@ -1,0 +1,261 @@
+"""Page-granular latent handoff between PD-disaggregated workers.
+
+The paper's Figure 3 draws prefill and decode as *separate* node pools
+connected by a "Load" arrow into the Total Memory Pool: a prompt is
+prefilled on a bandwidth-rich prefill worker, then its cache state
+migrates to a decode worker that owns the request for the rest of its
+lifetime.  This module is that arrow.
+
+A migration moves everything the decode round needs, at page
+granularity, **in the host tier's storage dtype** (the quantized
+representation is the wire codec — int8/fp8 payload + f16 per-row scale
+plane travel verbatim, never dequantized/requantized, so the decode
+worker's host rows are bit-identical to the prefill worker's):
+
+* the slot's mapped host pages ``[L, n_used, R, D]`` and, on a
+  quantized tier, their scale plane ``[L, n_used, R, 1]``,
+* the device indexer-cache keys ``[plen, Di]`` per layer (the 16.8 % of
+  cache bytes that never offloads — it must travel for the decode
+  worker's Top-K selection to be exact),
+* the first token (computed in-device by the prefill program's
+  promotion) and the post-final-norm hidden (the MTP draft seed),
+* optionally the LRU-warmup tails, so a ``do_warmup`` deployment
+  replays the Sparse-Memory-Pool warmup on the *decode* side, where the
+  pool lives.
+
+**One-pack contract (ESS107)**: :func:`pack_migration` performs exactly
+one ``jax.device_get`` — the allowlisted pack site
+(:data:`repro.analysis.contracts.PACK_SITE`).  The page inventory comes
+from the host-side allocator (``HostPageAllocator.owned``), so the pack
+never fetches to discover what to move; install performs *zero* fetches
+(the first token rides the packet) and rewrites the pages through a
+fresh block-table mapping — physical page ids are worker-local, the
+block table is the remap.
+
+Correctness note (why migration preserves bitwise streams): at
+promotion a compiled-path slot's Sparse Memory Pool is empty, and the
+decode round's per-slot compute (DSA selection, pool lookups, sampling
+chain) depends only on ``lens``/pages/scales/ikeys/``tok``/``hidden``
+and the request's own sampling knobs — all of which travel.  Rows past
+``plen`` inside the last page are beyond the attention horizon and
+never read.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import latent_cache as LC
+from repro.distributed import compression as cmp
+from repro.serving import state as ES
+from repro.serving.scheduler import Request
+
+
+@dataclasses.dataclass
+class MigrationPacket:
+    """One migrated request: the prefill worker's page-granular snapshot
+    of everything the decode round consumes, host-resident (numpy), in
+    the tier's storage dtype."""
+    rid: int
+    prompt_len: int
+    req: Request               # the live Request object travels with it
+    n_pages: int               # host pages actually carrying prompt rows
+    pages: "object"            # [L, n_pages, R, D] storage dtype
+    scales: Optional["object"]  # [L, n_pages, R, 1] | None (bf16 tier)
+    ikeys: tuple               # L x [plen, Di]
+    t0: int                    # first token (promotion output)
+    hidden: "object"           # [d_model] MTP draft seed
+    tails: Optional[tuple] = None   # LRU-warmup replay input (do_warmup)
+    submit_time: Optional[float] = None
+
+    @property
+    def wire_bytes(self) -> int:
+        """Bytes on the inter-node wire (storage dtype == wire codec)."""
+        return cmp.wire_nbytes(self.pages, self.scales, self.hidden,
+                               *self.ikeys)
+
+
+def pack_migration(session, slot: int, req: Request, t0, *,
+                   tails: Optional[tuple] = None,
+                   submit_time: Optional[float] = None) -> MigrationPacket:
+    """Serialize one promoted slot into a :class:`MigrationPacket`.
+
+    ``t0`` is the promotion's first token — a device scalar on the
+    compiled path (it rides the pack's fetch), a host int on the legacy
+    warmup path.  The single ``jax.device_get`` below is the ESS107
+    pack site: pages + scale plane + indexer keys + hidden + t0 in one
+    packed fetch, page ids resolved host-side from the allocator."""
+    if session.allocator is None:
+        raise ValueError("PD migration needs the paged host tier "
+                         "(cfg.ess.offload_kv + paged_host)")
+    cfg = session.cfg
+    plen = req.prompt_len
+    n_used = LC.pages_for_len(cfg, plen)
+    page_ids = session.allocator.owned(slot)[:n_used]
+    assert len(page_ids) == n_used, \
+        f"slot {slot} owns {len(page_ids)} pages, prompt needs {n_used}"
+    caches = session.caches
+    ids = jnp.asarray(page_ids, jnp.int32)
+    scale_plane = () if caches.host_scales is None \
+        else (caches.host_scales[:, ids],)
+    pages, scales, ikeys, hidden, t0_h = jax.device_get(
+        (caches.host_latent[:, ids], scale_plane,
+         tuple(k[slot, :plen] for k in caches.ikeys),
+         session.state.hidden[slot], t0))
+    return MigrationPacket(
+        rid=req.rid, prompt_len=plen, req=req, n_pages=n_used,
+        pages=pages, scales=scales[0] if scales else None,
+        ikeys=ikeys, t0=int(t0_h), hidden=hidden, tails=tails,
+        submit_time=submit_time)
+
+
+def can_accept(session, req: Request) -> bool:
+    """Would ``install_migration`` succeed on this session *right now*?
+    Mirrors the admission gate: a free slot, a pool-entry reservation,
+    and enough free host pages for prompt + max_new rows."""
+    if not any(not s.active for s in session.sched.slots):
+        return False
+    if req.prompt_len + req.max_new_tokens > session.sched.max_seq:
+        return False
+    if session.free_pool_entries < session.pool_entries_per_slot:
+        return False
+    if session.allocator is not None \
+            and not session.allocator.can_alloc(session.pages_needed(req)):
+        return False
+    return True
+
+
+def install_migration(session, packet: MigrationPacket) -> int:
+    """Install a migrated request into a free slot of ``session``.
+
+    Allocates fresh pages (the block-table remap: physical ids are
+    worker-local), scatters the packet's pages and scale plane **raw**
+    — storage-dtype bits land verbatim, no dequant/requant round trip —
+    restores lens/ikeys, adopts the request in the ``decode`` phase, and
+    delivers the first token (stop/length at t0 finish immediately,
+    mirroring the single-engine promotion edge).  Zero device fetches.
+    Returns the slot."""
+    req = packet.req
+    if session.allocator is None:
+        raise ValueError("PD migration needs the paged host tier")
+    assert can_accept(session, req), \
+        f"install_migration: rid={req.rid} does not fit (route first)"
+    slot = next(i for i, s in enumerate(session.sched.slots) if not s.active)
+    plen = packet.prompt_len
+
+    pages = session.allocator.alloc(slot, session.pages_needed(req))
+    caches = LC.map_slot(session.caches, slot, pages)
+    new_ids = jnp.asarray(pages[:packet.n_pages], jnp.int32)
+    host = caches.host_latent.at[:, new_ids].set(
+        jnp.asarray(packet.pages, caches.host_latent.dtype))
+    host_scales = caches.host_scales
+    if host_scales is not None:
+        assert packet.scales is not None, \
+            "quantized tier but the packet carries no scale plane"
+        host_scales = host_scales.at[:, new_ids].set(
+            jnp.asarray(packet.scales, host_scales.dtype))
+    session.caches = caches._replace(
+        host_latent=host, host_scales=host_scales,
+        lens=caches.lens.at[slot].set(plen),
+        ikeys=tuple(k.at[slot, :plen].set(jnp.asarray(ik, k.dtype))
+                    for k, ik in zip(caches.ikeys, packet.ikeys)))
+    session.free_pool_entries -= session.pool_entries_per_slot
+    session._sample_pages()
+
+    session.sched.adopt(req, slot)
+    session._submit_round[req.rid] = session._round
+    if packet.submit_time is not None:
+        session._submit_time[req.rid] = packet.submit_time
+    else:
+        session._submit_time.setdefault(req.rid, time.perf_counter())
+    session.outputs[req.rid] = []
+    session._rounds_since_promote[slot] = 0
+    session.state = ES.admit_slot(session.state, slot, req)
+    session.state = ES.promote_slot(session.state, slot, packet.t0,
+                                    jnp.asarray(packet.hidden))
+    if session.do_warmup and packet.tails is not None:
+        # the Sparse Memory Pool lives with decode: replay the prefill
+        # worker's shipped warmup tails into this worker's pool
+        session._warmup_slot(slot,
+                             tuple(jnp.asarray(t) for t in packet.tails),
+                             plen)
+    session.report.events.append(
+        f"round {session._round}: rid={req.rid} installed via PD handoff "
+        f"(slot {slot}, {packet.n_pages} pages, {packet.wire_bytes} B)")
+    done = session._deliver_first_token(slot, req, packet.t0)
+    if done == "stop":
+        session._handle_done([session.sched.finish(slot)])
+    elif done == "length":
+        session._handle_done(session.sched.record_tokens({slot: 0}))
+    return slot
+
+
+class InterNodeChannel:
+    """Simulated inter-node fabric between prefill and decode workers.
+
+    Deterministic step-granular delivery: a packet sent at cluster step
+    ``t`` arrives at ``t + delay`` where ``delay`` either is the fixed
+    ``delay_steps`` or derives from a cost model
+    (:class:`repro.simulator.costmodel.InterNodeModel`: ``latency_s +
+    wire_bytes / bandwidth`` quantized to serve steps of
+    ``step_time_s``).  Delivery order is stable (send order within an
+    arrival step), so cluster runs replay identically.  ``cancel``
+    drops an in-flight migration (client abort mid-handoff) — the
+    prefill side already freed its pages at pack, the decode side never
+    saw the request."""
+
+    def __init__(self, *, delay_steps: int = 0, model=None,
+                 step_time_s: Optional[float] = None):
+        self.delay_steps = max(0, int(delay_steps))
+        self.model = model
+        self.step_time_s = step_time_s
+        self._now = 0
+        self._inflight: list[tuple[int, int, MigrationPacket]] = []
+        self._seq = 0
+        self.packets_sent = 0
+        self.payload_bytes = 0
+        self.sim_transfer_s = 0.0
+
+    @property
+    def in_flight(self) -> list[MigrationPacket]:
+        return [p for _, _, p in self._inflight]
+
+    def delay_for(self, packet: MigrationPacket) -> int:
+        if self.model is not None and self.step_time_s:
+            t = self.model.latency_s + packet.wire_bytes / self.model.bandwidth
+            return max(1, math.ceil(t / self.step_time_s))
+        return self.delay_steps
+
+    def send(self, packet: MigrationPacket) -> int:
+        """Enqueue a migration; returns the cluster step it will arrive."""
+        delay = self.delay_for(packet)
+        if self.model is not None:
+            self.sim_transfer_s += (self.model.latency_s
+                                    + packet.wire_bytes / self.model.bandwidth)
+        arrive = self._now + delay
+        self._inflight.append((arrive, self._seq, packet))
+        self._seq += 1
+        self.packets_sent += 1
+        self.payload_bytes += packet.wire_bytes
+        return arrive
+
+    def tick(self) -> list[MigrationPacket]:
+        """Advance one cluster step; returns packets arriving now (in
+        send order)."""
+        self._now += 1
+        ready = sorted((e for e in self._inflight if e[0] <= self._now),
+                       key=lambda e: e[1])
+        self._inflight = [e for e in self._inflight if e[0] > self._now]
+        return [p for _, _, p in ready]
+
+    def cancel(self, rid: int) -> list[MigrationPacket]:
+        """Drop in-flight packets of one rid (abort mid-handoff)."""
+        dropped = [p for _, _, p in self._inflight if p.rid == rid]
+        self._inflight = [e for e in self._inflight if e[2].rid != rid]
+        return dropped

@@ -1,0 +1,48 @@
+"""Request routing for the PD-disaggregated cluster.
+
+Two decisions, both deterministic:
+
+* **prefill placement** — round-robin over the prefill workers (prompts
+  are compute-bound and stateless before admission, so rotation is the
+  even-load policy);
+* **decode placement** — :func:`repro.serving.scheduler.pick_decode_worker`
+  over the workers' byte-denominated :class:`WorkerLoad`s: the worker
+  with the most free host bytes among those that can admit *now*.  A
+  full or byte-exhausted worker is routed around, never rejected; when
+  no worker fits the migration is held and retried after the next
+  cluster step frees resources.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.serving import scheduler as SCH
+from repro.serving.scheduler import Request
+
+
+class Router:
+    def __init__(self, prefill_workers: list, decode_workers: list):
+        self.prefill = prefill_workers
+        self.decode = decode_workers
+        self._rr = 0
+
+    def route_prefill(self, req: Request) -> int:
+        """Round-robin prefill placement; returns the worker index."""
+        i = self._rr % len(self.prefill)
+        self._rr += 1
+        return i
+
+    def place(self, req: Request) -> Optional[int]:
+        """Decode placement for a migrated request, or ``None`` to hold.
+
+        ``need_bytes`` is the conservative (max across workers) byte
+        need, so a mixed-dtype fleet never over-places; the final
+        ``can_accept`` double-check covers the remaining per-worker
+        resources (pool-entry reservations)."""
+        loads = [w.load(i) for i, w in enumerate(self.decode)]
+        need = max(w.bytes_needed(req) for w in self.decode)
+        pick = SCH.pick_decode_worker(loads, need)
+        if pick is not None and not self.decode[pick].can_accept(req):
+            return None
+        return pick

@@ -101,6 +101,17 @@ def dequantize_rows(q: jax.Array, scale: jax.Array,
             * scale.astype(jnp.float32)).astype(out_dtype)
 
 
+def wire_nbytes(*arrays) -> int:
+    """Total bytes a set of planes occupies on an inter-node wire.
+
+    The quantized storage representation IS the wire codec: a PD
+    migration ships host pages in their storage dtype (int8/fp8 payload
+    plus the f16 per-row scale plane) verbatim — never dequantized — so
+    the wire cost is just the sum of the planes' nbytes.  ``None``
+    entries (e.g. the scale plane of a raw bf16 tier) cost nothing."""
+    return sum(int(a.nbytes) for a in arrays if a is not None)
+
+
 def compress_grads(grads: Any, ef: EFState) -> tuple[Any, Any, EFState]:
     """-> (q_tree int8, scale_tree, new error-feedback state).
 

@@ -1335,7 +1335,7 @@ class ServeSession:
             self.transfer.commit(self.report, pf_host[0].sum(),
                                  pf_host[1].sum(), pf_host[2].sum())
         if h2d_host:
-            self.report.h2d_rows += int(h2d_host[0].sum())  # esslint: disable=ESS002 — numpy, post-fetch
+            self.report.h2d_rows += int(h2d_host[0])
         # decode-round D2H writeback: every live slot appends Q latent
         # rows per layer (compressed width on a quantized tier)
         q_round = (self.mtp_depth + 1) if spec else 1

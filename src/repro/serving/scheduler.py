@@ -280,6 +280,43 @@ class Scheduler:
         self._release(req.slot)
         return True
 
+    # -- PD-disaggregated handoff edges --------------------------------------
+
+    def adopt(self, req: Request, slot: int) -> None:
+        """Install an already-prefilled request directly into a free slot
+        (the decode side of a PD handoff): the request enters in the
+        ``decode`` phase with ``first_emitted`` charged — the prefill
+        worker computed its first token and the installing engine
+        delivers it — bypassing the admission queue.  The byte/slot gate
+        runs on the *installing worker* before calling this (the router's
+        placement decision); the scheduler only records the occupancy."""
+        s = self.slots[slot]
+        assert not s.active, f"adopt() into occupied slot {slot}"
+        assert req.rid not in self.running, \
+            f"adopt(): rid={req.rid} already running here"
+        s.rid, s.active, s.len = req.rid, True, req.prompt_len
+        s.phase = "decode"
+        s.first_emitted = True
+        req.slot = slot
+        req.finished = False
+        self.running[req.rid] = req
+
+    def release_migrated(self, slot: int) -> Request:
+        """Release a slot whose request migrated to another worker: the
+        resources free exactly as a completion (pages return, caches
+        reset via the release hook) but the request is *not* finished —
+        no terminal record here; the decode worker that adopted it owns
+        the rest of its lifecycle."""
+        s = self.slots[slot]
+        assert s.active, f"release_migrated() on inactive slot {slot}"
+        req = self.running.pop(s.rid)
+        req.slot = None
+        s.rid, s.active, s.len, s.phase = -1, False, 0, "idle"
+        s.first_emitted = False
+        if self.release_hook is not None:
+            self.release_hook(slot)
+        return req
+
     def preempt(self, slot: int) -> None:
         """Evict a running sequence (node loss / rebalance); it re-queues and
         will re-prefill on next admission (PD-disaggregation semantics).
@@ -319,6 +356,40 @@ class Scheduler:
 
     def occupancy(self) -> float:
         return sum(s.active for s in self.slots) / max(1, self.num_slots)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerLoad:
+    """One decode worker's admission headroom, byte-denominated.
+
+    ``free_host_bytes`` is the worker's free host-page count times its
+    *storage-dtype* page bytes (PR 8's dtype-aware accounting: a
+    quantized tier's smaller pages mean the same page count is less
+    byte headroom than a bf16 tier's), so placement compares workers on
+    the resource actually being rationed even across mixed-dtype fleets.
+    """
+    worker: int              # index into the router's decode-worker list
+    free_host_bytes: int
+    free_slots: int
+    queued: int              # running + queued requests (tiebreak load)
+
+
+def pick_decode_worker(loads: list[WorkerLoad],
+                       need_bytes: int) -> Optional[int]:
+    """Router placement: the decode worker with the most free host bytes
+    among those that can admit *now* (a free slot and ``need_bytes`` of
+    page headroom).  A full or byte-exhausted worker is routed around —
+    never a rejection; if no worker can admit now the caller holds the
+    request and retries after the next round frees resources (returns
+    ``None``).  Ties break toward the lighter (fewer requests), then
+    lower-indexed worker, keeping placement deterministic."""
+    fits = [l for l in loads
+            if l.free_slots > 0 and l.free_host_bytes >= need_bytes]
+    if not fits:
+        return None
+    best = max(fits, key=lambda l: (l.free_host_bytes, -l.queued,
+                                    -l.worker))
+    return best.worker
 
 
 def feasible_batch_size(hbm_bytes: int, weight_bytes_per_dev: int,

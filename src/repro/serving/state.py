@@ -69,10 +69,11 @@ class RoundOut(NamedTuple):
     pf_hits: jax.Array | None = None     # [B] staged rows that served misses
     pf_misses: jax.Array | None = None   # [B] misses falling back to sync
     pf_wasted: jax.Array | None = None   # [B] staged rows nobody requested
-    # [B] miss rows served from the host tier this round (summed over
-    # layers) — the round's useful H2D row count; multiplied by the
-    # dtype-exact bytes/row host-side it gives the compressed-transfer
-    # accounting (quantized tiers move ~half the bytes per row)
+    # scalar i32: miss rows served from the host tier this round (summed
+    # over layers *and* slots on device, so the commit stage reads a
+    # plain host int off the packed fetch); multiplied by the dtype-exact
+    # bytes/row host-side it gives the compressed-transfer accounting
+    # (quantized tiers move ~half the bytes per row)
     h2d_rows: jax.Array | None = None
 
 

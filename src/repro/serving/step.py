@@ -165,7 +165,7 @@ def _decode_round_fn(units: _Units, key: str) -> Callable:
             emit_index=state.emit_index + live.astype(jnp.int32),
             **upd)
         ro = RoundOut(jnp.where(live, t, 0)[:, None], live.astype(jnp.int32),
-                      h2d_rows=out.stats["misses"])
+                      h2d_rows=out.stats["misses"].sum())
         if staged is not None:
             ro = ro._replace(pf_hits=out.stats["pf_hits"],
                              pf_misses=out.stats["pf_misses"],
@@ -212,7 +212,7 @@ def _spec_round_fn(units: _Units, key: str) -> Callable:
             emit_index=state.emit_index + live.astype(jnp.int32),
             **upd)
         ro = RoundOut(jnp.where(live[:, None], tokens, 0), n_emit,
-                      h2d_rows=spec.stats["misses"])
+                      h2d_rows=spec.stats["misses"].sum())
         if staged is not None:
             ro = ro._replace(pf_hits=spec.stats["pf_hits"],
                              pf_misses=spec.stats["pf_misses"],

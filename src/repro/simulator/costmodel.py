@@ -179,6 +179,60 @@ def max_host_admission_batch(hw: HardwareProfile, sc: ServeConfig,
     return max(1, int(usable // host_bytes_per_seq(sc, avg_fill)))
 
 
+# ---------------------------------------------------------------------------
+# Inter-node migration model (PD-disaggregated handoff)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InterNodeModel:
+    """Prefill→decode migration link (the PD handoff's wire).
+
+    One migration moves a finished prompt's whole latent state at page
+    granularity — per layer, the prompt's latent pages in the host tier's
+    *storage* dtype (the quantized int8/fp8 page format doubles as the
+    wire format, no dequant/requant round-trip) plus the indexer-key
+    rows.  ``t = latency + bytes / bandwidth``: a single fabric message
+    per handoff (the packet is one contiguous pack), so latency is paid
+    once, not per page."""
+    bandwidth: float         # bytes/s, usable point-to-point fabric
+    latency_s: float         # per-packet (RDMA rendezvous + descriptor)
+    row_bytes: int = LATENT_BYTES
+
+    def packet_bytes(self, rows: float, num_layers: int = N_LAYERS
+                     ) -> float:
+        """Wire bytes of one migration: latent payload (+ per-row scales,
+        folded into ``row_bytes``) and indexer keys across the stack."""
+        return num_layers * rows * (self.row_bytes + IDX_BYTES)
+
+    def transfer_time(self, rows: float, num_layers: int = N_LAYERS
+                      ) -> float:
+        return self.latency_s + self.packet_bytes(rows, num_layers) \
+            / self.bandwidth
+
+
+def internode_model(hw: HardwareProfile,
+                    row_bytes: int = LATENT_BYTES) -> InterNodeModel:
+    """The profile's scale-out fabric as a migration link.  The same
+    per-GPU usable EP-fabric bandwidth carries handoffs (migrations and
+    all-to-alls share the NICs); a2a latency stands in for the RDMA
+    per-message cost."""
+    return InterNodeModel(bandwidth=hw.fabric_bw, latency_s=hw.a2a_latency,
+                          row_bytes=row_bytes)
+
+
+def pd_migration_time_per_seq(hw: HardwareProfile, sc: ServeConfig,
+                              avg_fill: float = 0.43) -> float:
+    """Per-sequence handoff cost in a PD-disaggregated cluster: the
+    prompt's rows (mean fill of the context, rounded up to whole pages
+    when paged) cross the inter-node link once, in the host tier's
+    storage dtype."""
+    rows = avg_fill * sc.context
+    if sc.paged_host:
+        R = sc.host_page_rows
+        rows = math.ceil(rows / R) * R
+    return internode_model(hw, sc.cache_bytes_per_row).transfer_time(rows)
+
+
 @dataclasses.dataclass
 class LayerCosts:
     """Per-layer, per-GPU, per-decode-round timings (seconds)."""

@@ -179,6 +179,48 @@ def test_retrace_golden_real_workload(paged):
     assert JA.audit_retrace(JA._smoke_cfg(paged=paged)) == []
 
 
+def test_migration_pack_checker():
+    clean = JA.check_migration_packs([1, 1], {0: 1, 1: 1}, [0, 0],
+                                     [1, 1, 0], 2)
+    assert clean == []
+    over = JA.check_migration_packs([2], {0: 1}, [0], [1], 1)
+    assert _rules(over) == ["ESS107"]        # pack budget blown
+    assert "ONE packed fetch" in over[0].message
+    twice = JA.check_migration_packs([1, 1], {0: 2}, [0], [1, 1], 2)
+    assert _rules(twice) == ["ESS107"]       # a rid handed off twice
+    leak = JA.check_migration_packs([1], {0: 1}, [2], [1], 1)
+    assert _rules(leak) == ["ESS107"]        # non-pack prefill fetch
+    smug = JA.check_migration_packs([1], {0: 1}, [0], [2], 2)
+    assert _rules(smug) == ["ESS107"]        # decode round over budget
+    stray = JA.check_migration_packs([1], {0: 1}, [0], [1], 1, stray=3)
+    assert _rules(stray) == ["ESS107"]
+    assert "outside any worker round" in stray[0].message
+
+
+def test_migration_pack_golden_cluster():
+    """The live PD handoff holds the one-pack contract end to end:
+    exactly one fetch per migration, zero-fetch install, decode rounds
+    within the ESS102 budget."""
+    assert JA.audit_migration_packs() == []
+
+
+def test_migration_pack_audit_catches_smuggled_fetch():
+    """A decode-worker session sneaking a second device_get into its
+    round is caught — the reintroduction guard for per-round host syncs
+    on the decode side of a PD split."""
+    from repro.serving import engine as E
+
+    class SmugglerSession(E.ServeSession):
+        def step_round(self):
+            evs = super().step_round()
+            jax.device_get(self.state.tok)       # the smuggled fetch
+            return evs
+
+    findings = JA.audit_migration_packs(
+        decode_session_cls=SmugglerSession)
+    assert findings and all(f.rule == "ESS107" for f in findings)
+
+
 # ===========================================================================
 # ESS001: explicit gating argument
 # ===========================================================================
@@ -241,6 +283,23 @@ def test_ess002_allowlisted_fetch_site():
                 return jax.device_get(self.out)
     """, fetch_sites=frozenset(
         {"repro/serving/fixture.py::ServeSession.decode_round"}))
+    assert fs == []
+
+
+def test_ess002_cluster_scope_and_pack_site():
+    """The cluster package is ESS002-scoped; the real pack site is the
+    only allowlisted fetch in it."""
+    src = """
+        import jax
+        def pack_migration(session, slot, req, t0):
+            return jax.device_get(session.caches)
+    """
+    assert _rules(_lint(src, relpath="repro/cluster/fixture.py")) \
+        == ["ESS002"]
+    from repro.analysis import contracts as C
+    fs = L.lint_source(
+        textwrap.dedent(src), "repro/cluster/kv_transfer.py",
+        L.fixture_config(fetch_sites=C.FETCH_SITES))
     assert fs == []
 
 
@@ -492,6 +551,5 @@ def test_repo_tree_is_clean_minus_suppressions():
     eng = (REPO / "src/repro/serving/engine.py").read_text()
     stripped = eng.replace("# esslint: disable=ESS002", "#")
     fs = L.lint_source(stripped, "src/repro/serving/engine.py")
-    assert _rules(fs) == ["ESS002", "ESS002", "ESS002"]
-    assert {f.scope for f in fs} == {"ServeSession._prefill_chunk_warmup",
-                                     "ServeSession._commit_round"}
+    assert _rules(fs) == ["ESS002", "ESS002"]
+    assert {f.scope for f in fs} == {"ServeSession._prefill_chunk_warmup"}

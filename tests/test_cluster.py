@@ -1,0 +1,272 @@
+"""PD-disaggregated cluster: bitwise handoff parity and routing.
+
+The migration contract is *bitwise*: a request prefilled on one worker
+and decoded on another must produce the exact greedy (and seeded
+sampling) stream a single engine produces, because the packet moves the
+complete per-request state — host pages and scale planes verbatim in
+the storage dtype, indexer keys, first token, MTP hidden — and the
+decode round's per-slot math is independent of slot index and
+co-residents.  These tests pin that across tiers (bf16/int8) and
+speculation (Q=1 / mtp2), plus the lifecycle edges: abort mid-handoff
+returns pages on both sides, preemption on a decode worker replays the
+stream, and a full decode worker is routed around, never rejected.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster import EssCluster, InterNodeChannel
+from repro.configs import get_config
+from repro.distributed import compression as cmp
+from repro.serving import scheduler as SCH
+from repro.serving.api import EssEngine, SamplingParams
+from repro.simulator import costmodel as CM
+
+MAX_SEQ = 32
+
+PROMPTS = [11, 8, 9, 10]
+PARAMS = [SamplingParams(max_tokens=5),
+          SamplingParams(max_tokens=4),
+          SamplingParams(max_tokens=3, temperature=0.9, seed=5),
+          SamplingParams(max_tokens=4)]
+
+
+def _cfg(host_dtype="bf16"):
+    cfg = get_config("deepseek-v32-exp-ess-smoke")
+    return dataclasses.replace(
+        cfg, mtp_depth=2,
+        ess=dataclasses.replace(cfg.ess, max_miss_ratio=1.0,
+                                host_cache_dtype=host_dtype))
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(host_dtype="bf16"):
+    from repro.models import transformer as T
+    from repro.models.params import init_params
+    cfg = _cfg(host_dtype)
+    return cfg, init_params(jax.random.key(0), T.model_def(cfg))
+
+
+def _streams(outs):
+    return [(o.tokens, o.finish_reason) for o in outs]
+
+
+# ---------------------------------------------------------------------------
+# bitwise stream parity: 1 prefill + 1 decode worker vs single engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("host_dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("mtp_depth", [0, 2])
+def test_pd_stream_parity_bitwise(host_dtype, mtp_depth):
+    cfg, params = _setup(host_dtype)
+    eng = EssEngine(params, cfg, num_slots=2, max_seq=MAX_SEQ,
+                    mtp_depth=mtp_depth)
+    single = _streams(eng.generate(PROMPTS, PARAMS, max_rounds=300))
+
+    clu = EssCluster(params, cfg, num_prefill=1, num_decode=1,
+                     num_slots=2, max_seq=MAX_SEQ, mtp_depth=mtp_depth)
+    clustered = _streams(clu.generate(PROMPTS, PARAMS, max_rounds=300))
+
+    assert clustered == single
+    m = clu.metrics()
+    assert m["migrations"] == len(PROMPTS) == m["installed"]
+    assert m["wire_bytes"] > 0 and m["rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# the quantized payload is the wire format — bits land verbatim
+# ---------------------------------------------------------------------------
+
+def test_migration_moves_quantized_pages_verbatim():
+    """No dequant/requant round trip: the decode worker's host rows (and
+    scale plane) for the prompt are bit-identical to the packet, which
+    is itself one raw fetch of the prefill worker's rows."""
+    cfg, params = _setup("int8")
+    clu = EssCluster(params, cfg, num_prefill=1, num_decode=1,
+                     num_slots=2, max_seq=MAX_SEQ,
+                     channel=InterNodeChannel(delay_steps=1))
+    captured = []
+    real_send = clu.channel.send
+    clu.channel.send = lambda pkt: (captured.append(pkt),
+                                    real_send(pkt))[1]
+    pre_alloc = clu.prefill[0].session.allocator
+    total_prefill_pages = pre_alloc.free_pages
+    rid = clu.submit(11, SamplingParams(max_tokens=4))
+    guard = 50
+    while not clu.decode[0].installed and guard:
+        clu.step()
+        guard -= 1
+    assert guard and captured
+    pkt = captured[0]
+    assert pkt.pages.dtype == np.int8 and pkt.scales is not None
+    # prefill released everything at pack — its slot recycled already
+    assert pre_alloc.free_pages == total_prefill_pages
+
+    s = clu.decode[0].session
+    slot = next(i for i, sl in enumerate(s.sched.slots)
+                if sl.active and sl.rid == rid)
+    ids = np.asarray(s.allocator.owned(slot)[:pkt.n_pages])
+    host = np.asarray(s.caches.host_latent[:, ids])
+    scales = np.asarray(s.caches.host_scales[:, ids])
+    rows_per_page = pkt.pages.shape[2]
+    for p in range(pkt.n_pages):
+        # only prompt rows: the decode round already appended past plen
+        rows = min(max(pkt.prompt_len - p * rows_per_page, 0),
+                   rows_per_page)
+        np.testing.assert_array_equal(
+            host[:, p, :rows], np.asarray(pkt.pages)[:, p, :rows])
+        np.testing.assert_array_equal(
+            scales[:, p, :rows], np.asarray(pkt.scales)[:, p, :rows])
+    # wire accounting covers payload + scales + ikeys + hidden
+    assert pkt.wire_bytes == cmp.wire_nbytes(
+        pkt.pages, pkt.scales, pkt.hidden, *pkt.ikeys)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle edges: abort mid-handoff, preempt on the decode worker
+# ---------------------------------------------------------------------------
+
+def test_abort_mid_handoff_frees_both_workers():
+    cfg, params = _setup()
+    clu = EssCluster(params, cfg, num_prefill=1, num_decode=1,
+                     num_slots=2, max_seq=MAX_SEQ,
+                     channel=InterNodeChannel(delay_steps=3))
+    pa = clu.prefill[0].session.allocator
+    da = clu.decode[0].session.allocator
+    total_p, total_d = pa.free_pages, da.free_pages
+    rid = clu.submit(11, SamplingParams(max_tokens=4))
+    guard = 50
+    while not clu.channel.in_flight and guard:
+        clu.step()
+        guard -= 1
+    assert guard and clu.channel.in_flight
+    assert pa.free_pages == total_p      # released at pack, not at abort
+    assert clu.abort(rid)
+    assert not clu.channel.in_flight
+    assert clu.is_finished(rid) and clu.finish_reason(rid) == "abort"
+    # both allocators whole again; the decode side never saw the request
+    assert pa.free_pages == total_p and da.free_pages == total_d
+    assert clu.decode[0].installed == 0
+    assert not clu.has_work()
+    evs = list(clu.stream(rid))
+    assert evs and evs[-1].is_terminal
+    assert clu.output(rid).finish_reason == "abort"
+    assert clu.metrics()["aborted"] == 1
+
+
+def test_preempt_on_decode_worker_replays_stream():
+    """Preemption inside a decode worker re-queues and re-prefills
+    *locally* (the worker has the cluster's prompt_fn); the regenerated
+    stream replays from index 0 and still matches a single engine."""
+    cfg, params = _setup()
+    eng = EssEngine(params, cfg, num_slots=2, max_seq=MAX_SEQ)
+    ref = eng.generate([11], [PARAMS[0]], max_rounds=300)[0]
+
+    clu = EssCluster(params, cfg, num_prefill=1, num_decode=1,
+                     num_slots=2, max_seq=MAX_SEQ)
+    rid = clu.submit(11, PARAMS[0])
+    guard = 50
+    while len(clu._outputs.get(rid, [])) < 3 and guard:
+        clu.step()
+        guard -= 1
+    assert guard and clu.decode[0].owns(rid)
+    s = clu.decode[0].session
+    slot = next(i for i, sl in enumerate(s.sched.slots)
+                if sl.active and sl.rid == rid)
+    s.preempt(slot)
+    guard = 100
+    while not clu.is_finished(rid) and guard:
+        clu.step()
+        guard -= 1
+    assert guard
+    out = clu.output(rid)
+    assert (out.tokens, out.finish_reason) == (ref.tokens,
+                                               ref.finish_reason)
+
+
+# ---------------------------------------------------------------------------
+# routing: byte-denominated placement, route-around, hold-and-retry
+# ---------------------------------------------------------------------------
+
+def test_pick_decode_worker_policy():
+    L = SCH.WorkerLoad
+    loads = [L(worker=0, free_host_bytes=100, free_slots=1, queued=0),
+             L(worker=1, free_host_bytes=500, free_slots=1, queued=3),
+             L(worker=2, free_host_bytes=500, free_slots=1, queued=1)]
+    # most free bytes wins; byte tie breaks toward the lighter worker
+    assert SCH.pick_decode_worker(loads, 50) == 2
+    # byte-exhausted and slot-exhausted workers are filtered, not picked
+    assert SCH.pick_decode_worker(
+        [L(worker=0, free_host_bytes=10, free_slots=1, queued=0),
+         L(worker=1, free_host_bytes=900, free_slots=0, queued=0)],
+        50) is None
+    assert SCH.pick_decode_worker([], 1) is None
+    # full tie -> lowest index, deterministically
+    even = [L(worker=0, free_host_bytes=64, free_slots=1, queued=2),
+            L(worker=1, free_host_bytes=64, free_slots=1, queued=2)]
+    assert SCH.pick_decode_worker(even, 1) == 0
+
+
+def test_router_routes_around_full_worker():
+    """A byte-exhausted decode worker is routed around — the request
+    lands on the worker with headroom instead of being rejected."""
+    cfg, params = _setup()
+    clu = EssCluster(params, cfg, num_prefill=1, num_decode=2,
+                     num_slots=2, max_seq=MAX_SEQ,
+                     decode_overrides=[{"num_host_pages": 1}, None])
+    outs = clu.generate([9, 10], SamplingParams(max_tokens=3),
+                        max_rounds=300)
+    assert all(o.finish_reason == "length" for o in outs)
+    assert clu.decode[0].installed == 0
+    assert clu.decode[1].installed == 2
+    assert clu.metrics()["rejected"] == 0
+
+
+# ---------------------------------------------------------------------------
+# the simulated inter-node channel
+# ---------------------------------------------------------------------------
+
+class _FakePacket:
+    def __init__(self, rid, nbytes):
+        self.rid = rid
+        self.wire_bytes = nbytes
+
+
+def test_channel_delay_order_and_cancel():
+    ch = InterNodeChannel(delay_steps=2)
+    ch.send(_FakePacket(0, 10))
+    ch.send(_FakePacket(1, 10))
+    assert ch.tick() == []                       # step 1: still in flight
+    assert [p.rid for p in ch.tick()] == [0, 1]  # step 2: send order
+    ch.send(_FakePacket(5, 10))
+    assert ch.cancel(5) and not ch.in_flight
+    assert ch.tick() == [] and ch.tick() == []
+
+
+def test_channel_costmodel_delay_quantizes_to_steps():
+    model = CM.InterNodeModel(bandwidth=1e9, latency_s=0.0, row_bytes=1)
+    ch = InterNodeChannel(model=model, step_time_s=1e-3)
+    # 2 MB over 1 GB/s = 2 ms = 2 steps of 1 ms
+    assert ch.delay_for(_FakePacket(0, 2_000_000)) == 2
+    # latency floor: even a tiny packet takes at least one step
+    assert ch.delay_for(_FakePacket(0, 1)) == 1
+    ch.send(_FakePacket(0, 2_000_000))
+    assert ch.sim_transfer_s == pytest.approx(2e-3)
+
+
+def test_internode_costmodel_terms():
+    from repro.simulator.hardware import H800_EP32 as hw
+    m = CM.internode_model(hw)
+    assert m.bandwidth > 0 and m.latency_s > 0
+    t = CM.pd_migration_time_per_seq(hw, CM.ServeConfig())
+    assert 0 < t < 1.0   # a handoff is sub-second on datacenter fabric
+
+
+def test_wire_nbytes_skips_missing_planes():
+    a = np.zeros((2, 3), np.int8)
+    s = np.zeros((2, 1), np.float16)
+    assert cmp.wire_nbytes(a, None, s) == a.nbytes + s.nbytes
